@@ -1,0 +1,78 @@
+"""Benchmarks reproducing the paper's tables/figures.
+
+  table2   — chunk sequences, N=1000/P=4 (paper Table 2)
+  fig1     — chunk-size patterns vs scheduling step (paper Fig. 1)
+  fig4     — PSIA T_loop_par, CCA vs DCA x techniques x delays (paper Fig. 4)
+  fig5     — Mandelbrot T_loop_par, same factorial (paper Fig. 5)
+
+The factorial follows Table 4: techniques x {cca, dca} x delays {0, 10, 100}us.
+``--full`` uses the paper's exact scale (N=262,144 / P=256); the default
+shrinks 4x for CI speed while preserving the master-saturation regime.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.schedule import build_schedule_dca
+from repro.core.simulator import SimConfig, mandelbrot_costs, psia_costs, simulate
+from repro.core.techniques import DLSParams, TECHNIQUES
+
+TECHS = ["static", "ss", "fsc", "gss", "tap", "tss", "fac", "tfss", "fiss",
+         "viss", "rnd", "pls", "af"]
+DELAYS = [0.0, 1e-5, 1e-4]
+
+
+def bench_table2(emit):
+    params = DLSParams(N=1000, P=4, h=0.013716, sigma=0.2, tap_va=3.025e-4)
+    for tech in TECHS:
+        if tech == "af":
+            continue
+        t0 = time.perf_counter()
+        sched = build_schedule_dca(tech, params)
+        dt = (time.perf_counter() - t0) * 1e6
+        head = ",".join(str(int(s)) for s in sched.sizes[:6])
+        emit(f"table2/{tech}", dt, f"chunks={sched.num_steps};head={head}")
+
+
+def bench_fig1(emit):
+    params = DLSParams(N=1000, P=4)
+    for tech in ("fsc", "gss", "fiss", "rnd"):  # one per pattern class
+        sched = build_schedule_dca(tech, params)
+        pat = TECHNIQUES[tech].pattern
+        emit(f"fig1/{tech}", 0.0,
+             f"pattern={pat};K0={int(sched.sizes[0])};K_last={int(sched.sizes[-1])}")
+
+
+def _factorial(emit, app: str, costs, n, p):
+    for tech in TECHS:
+        for approach in ("cca", "dca"):
+            for delay in DELAYS:
+                cfg = SimConfig(
+                    technique=tech, params=DLSParams(N=n, P=p),
+                    approach=approach, delay_calc_s=delay,
+                )
+                t0 = time.perf_counter()
+                res = simulate(cfg, costs)
+                dt = (time.perf_counter() - t0) * 1e6
+                emit(
+                    f"{app}/{tech}/{approach}/delay{int(delay*1e6)}us",
+                    dt,
+                    f"T_par={res.t_parallel:.4f};chunks={res.num_chunks};"
+                    f"cov={res.cov_finish:.4f}",
+                )
+
+
+def bench_fig4(emit, full: bool = False):
+    n, p = (262_144, 256) if full else (65_536, 256)
+    costs = psia_costs(n, mean_s=0.07298 if full else 0.018)
+    _factorial(emit, "fig4_psia", costs, n, p)
+
+
+def bench_fig5(emit, full: bool = False):
+    n, p = (262_144, 256) if full else (65_536, 256)
+    costs = mandelbrot_costs(n, conversion_threshold=512 if full else 256,
+                             mean_s=0.01025 if full else 0.0025)
+    _factorial(emit, "fig5_mandelbrot", costs, n, p)

@@ -1,0 +1,71 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.roofline.terms import HW
+
+COLS = ("arch", "shape", "mesh", "kind", "compute_ms", "memory_ms",
+        "collective_ms", "dominant", "mf_ratio", "peak_gb", "fits_hbm")
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun", include_tagged: bool = False):
+    recs = []
+    for p in sorted(Path(dryrun_dir).glob("*.json")):
+        stem_parts = p.stem.split("_pod")
+        tagged = "_" in stem_parts[-1].replace("2x16x16", "").replace("16x16", "").strip("_")
+        r = json.loads(p.read_text())
+        r["_tagged"] = "_tag_" if tagged else ""
+        r["_file"] = p.name
+        base = (r["mesh"] in p.stem) and p.stem.endswith(r["mesh"].replace("pod", "pod"))
+        r["_is_base"] = p.stem == f'{r["arch"]}_{r["shape"]}_{r["mesh"]}'
+        if include_tagged or r["_is_base"]:
+            recs.append(r)
+    return recs
+
+
+def row_of(r):
+    t = r["roofline"]
+    mf = r["analytic"].get("model_flops", 0.0) / max(r["analytic"]["flops_global"], 1.0)
+    peak = r["memory"]["peak_bytes"] / 1e9
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"], "kind": r["kind"],
+        "compute_ms": t["compute_s"] * 1e3, "memory_ms": t["memory_s"] * 1e3,
+        "collective_ms": t["collective_s"] * 1e3, "dominant": t["dominant"].replace("_s", ""),
+        "mf_ratio": mf, "peak_gb": peak,
+        "fits_hbm": "yes" if peak <= HW["hbm_bytes"] / 1e9 else "NO",
+    }
+
+
+def emit_table(emit, dryrun_dir: str = "experiments/dryrun"):
+    for r in load_records(dryrun_dir):
+        row = row_of(r)
+        emit(
+            f'roofline/{row["arch"]}/{row["shape"]}/{row["mesh"]}',
+            0.0,
+            f'compute_ms={row["compute_ms"]:.3f};memory_ms={row["memory_ms"]:.3f};'
+            f'collective_ms={row["collective_ms"]:.3f};dominant={row["dominant"]};'
+            f'useful_flops_ratio={row["mf_ratio"]:.3f};peak_gb={row["peak_gb"]:.2f};'
+            f'fits={row["fits_hbm"]}',
+        )
+
+
+def markdown_table(dryrun_dir: str = "experiments/dryrun") -> str:
+    rows = [row_of(r) for r in load_records(dryrun_dir)]
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    out = ["| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) "
+           "| bound | useful-FLOP ratio | peak GB/dev | fits 16GB |",
+           "|---|---|---|---|---|---|---|---|---|---|"[:-4]]
+    for r in rows:
+        out.append(
+            f'| {r["arch"]} | {r["shape"]} | {r["mesh"]} | {r["compute_ms"]:.2f} '
+            f'| {r["memory_ms"]:.2f} | {r["collective_ms"]:.2f} | {r["dominant"]} '
+            f'| {r["mf_ratio"]:.2f} | {r["peak_gb"]:.2f} | {r["fits_hbm"]} |'
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,51 @@
+"""Benchmark driver: one function per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV (the harness contract).  ``--full``
+runs the paper-exact scales (N=262,144 / P=256); default is the 4x-reduced
+regime used in CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-exact scales")
+    ap.add_argument("--only", default="", help="substring filter on bench names")
+    args, _ = ap.parse_known_args()
+
+    rows = []
+
+    def emit(name: str, us_per_call: float, derived: str = ""):
+        if args.only and args.only not in name:
+            return
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}")
+
+    from benchmarks import framework_benches as fb
+    from benchmarks import paper_figures as pf
+    from benchmarks import roofline_table as rt
+
+    print("name,us_per_call,derived")
+    pf.bench_table2(emit)
+    pf.bench_fig1(emit)
+    pf.bench_fig4(emit, full=args.full)
+    pf.bench_fig5(emit, full=args.full)
+    fb.bench_chunk_calc_scaling(emit)
+    fb.bench_chunk_calc_kernel(emit)
+    fb.bench_data_balance(emit)
+    fb.bench_straggler(emit)
+    fb.bench_executor_modes(emit)
+    fb.bench_hierarchical(emit)
+    try:
+        rt.emit_table(emit)
+    except Exception as e:  # dry-run artifacts may be absent in fresh clones
+        print(f"roofline/skipped,0.00,reason={e!r}")
+    print(f"# {len(rows)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Quickstart: the paper's DLS techniques through the public API.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (
+    DLSParams,
+    build_schedule_cca,
+    build_schedule_dca,
+    chunk_of_step,
+    simulate,
+    SimConfig,
+    mandelbrot_costs,
+    verify_coverage,
+)
+from repro.core.api import (
+    Configure_Chunk_Calculation_Mode,
+    DLS_EndChunk,
+    DLS_EndLoop,
+    DLS_Parameters_Setup,
+    DLS_StartChunk,
+    DLS_StartLoop,
+    DLS_Terminated,
+)
+
+# 1. A chunk schedule: every DLS technique, both calculation approaches -------
+params = DLSParams(N=10_000, P=8)
+for tech in ("gss", "fac", "fiss", "tss"):
+    dca = build_schedule_dca(tech, params)  # closed forms, vectorized
+    cca = build_schedule_cca(tech, params)  # the master's recursion
+    verify_coverage(dca)
+    verify_coverage(cca)
+    print(f"{tech:5s} chunks={dca.num_steps:4d}  first={dca.sizes[:5].tolist()}")
+
+# 2. DCA's defining property: any PE computes its chunk from the step index --
+lo, size = chunk_of_step("gss", 7, params)  # no global state consulted
+print(f"\nstep 7 of GSS covers [{lo}, {lo + size}) — computed locally")
+
+# 3. The paper's experiment: inject a delay into the chunk calculation -------
+costs = mandelbrot_costs(16_384, conversion_threshold=128, mean_s=0.002)
+for approach in ("cca", "dca"):
+    res = simulate(
+        SimConfig(technique="fac", params=DLSParams(N=16_384, P=64),
+                  approach=approach, delay_calc_s=1e-4),
+        costs,
+    )
+    print(f"{approach}: T_loop_par = {res.t_parallel:.3f}s  ({res.num_chunks} chunks)")
+
+# 4. The LB4MPI-style API (paper Listing 1) ----------------------------------
+info = DLS_Parameters_Setup(n_workers=4, N=1000, technique="fac")
+Configure_Chunk_Calculation_Mode(info, "dca")
+DLS_StartLoop(info)
+total = 0
+while not DLS_Terminated(info):
+    chunk = DLS_StartChunk(info)
+    if chunk is None:
+        break
+    lo, hi = chunk
+    total += hi - lo  # ... compute iterations [lo, hi) ...
+    DLS_EndChunk(info)
+DLS_EndLoop(info)
+print(f"\nLB4MPI-style loop covered {total} iterations")

@@ -1,0 +1,43 @@
+"""Serve a small model with batched requests: continuous batching with
+DLS-scheduled admission (the paper's technique at the serving layer).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.specs import model_param_defs
+from repro.models import init_params
+from repro.serve import Request, ServingEngine
+
+cfg = get_smoke_config("yi-34b")
+cfg = dataclasses.replace(cfg, param_dtype="float32", compute_dtype="float32")
+params = init_params(model_param_defs(cfg), jax.random.key(0), cfg.param_dtype)
+
+rng = np.random.default_rng(0)
+N_REQ, SLOTS = 12, 4
+requests = [
+    Request(
+        rid=i,
+        prompt=rng.integers(0, cfg.vocab, int(rng.integers(4, 16))).astype(np.int32),
+        max_new=int(rng.integers(4, 12)),
+    )
+    for i in range(N_REQ)
+]
+total_tokens = sum(len(r.prompt) + r.max_new for r in requests)
+
+engine = ServingEngine(cfg, params, max_slots=SLOTS, max_len=64)
+t0 = time.time()
+done = engine.run(requests, technique="gss")  # GSS admission chunks
+dt = time.time() - t0
+
+print(f"{N_REQ} requests over {SLOTS} slots: {engine.ticks} engine ticks, "
+      f"{total_tokens} tokens in {dt:.2f}s ({total_tokens/dt:.0f} tok/s)")
+print(f"mean slot occupancy: {np.mean(engine.occupancy):.2f}/{SLOTS}")
+for rid in sorted(done)[:3]:
+    print(f"  request {rid}: generated {done[rid]}")

@@ -1,0 +1,50 @@
+"""Reproduce the paper's headline experiment (Sec. 6): CCA vs DCA under
+injected chunk-calculation delays, on both applications.
+
+Run:  PYTHONPATH=src python examples/slowdown_reproduction.py [--full]
+
+--full uses the paper's exact scale (262,144 iterations, 256 ranks); default
+is 4x reduced.  Expect: ~equal at 0/10us; CCA collapses at 100us, worst for
+fine-chunk techniques (SS/FSC/AF) — the paper's Fig. 4c/5c.
+"""
+
+import argparse
+
+from repro.core.simulator import SimConfig, mandelbrot_costs, psia_costs, simulate
+from repro.core.techniques import DLSParams
+
+TECHS = ["static", "ss", "fsc", "gss", "tss", "fac", "fiss", "viss", "pls", "af"]
+
+
+def run(app: str, costs, n, p):
+    print(f"\n=== {app} (N={n}, P={p}) — T_loop_par seconds ===")
+    header = f"{'technique':8s} " + "".join(
+        f"{a}/{d}us".rjust(13) for a in ("cca", "dca") for d in (0, 10, 100)
+    )
+    print(header)
+    for tech in TECHS:
+        row = f"{tech:8s} "
+        for approach in ("cca", "dca"):
+            for delay in (0.0, 1e-5, 1e-4):
+                res = simulate(
+                    SimConfig(technique=tech, params=DLSParams(N=n, P=p),
+                              approach=approach, delay_calc_s=delay),
+                    costs,
+                )
+                row += f"{res.t_parallel:13.3f}"
+        print(row)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.full:
+        n, p = 262_144, 256
+        ps, mb = psia_costs(n), mandelbrot_costs(n, conversion_threshold=512)
+    else:
+        n, p = 65_536, 256
+        ps = psia_costs(n, mean_s=0.018)
+        mb = mandelbrot_costs(n, conversion_threshold=256, mean_s=0.0025)
+    run("PSIA", ps, n, p)
+    run("Mandelbrot", mb, n, p)

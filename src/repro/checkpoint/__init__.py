@@ -1,0 +1,5 @@
+from .store import CheckpointStore, save_checkpoint, restore_checkpoint, latest_step
+from .elastic import reshard_checkpoint
+
+__all__ = ["CheckpointStore", "save_checkpoint", "restore_checkpoint", "latest_step",
+           "reshard_checkpoint"]

@@ -1,0 +1,46 @@
+"""Elastic scaling: resume a checkpoint on a different mesh / PE count.
+
+Model/optimizer state re-sharding is a device_put with the new mesh's
+shardings (restore_checkpoint handles it).  The *scheduling* state is where
+the paper's contribution pays: DCA schedules are pure functions of
+(N, P, step), so rescaling from P to P' requires recomputing nothing — the
+new schedule is evaluated closed-form at the same global step counter.
+A CCA/recursive scheduler would have to replay its recursion or persist the
+full chunk history.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+from repro.core.schedule import build_schedule_dca
+from repro.core.techniques import DLSParams
+from repro.data.scheduler import DLSBatchScheduler
+
+from .store import restore_checkpoint
+
+__all__ = ["reshard_checkpoint", "rescale_scheduler"]
+
+
+def reshard_checkpoint(directory, like, new_shardings, step: Optional[int] = None):
+    """Load a checkpoint and place it on a (possibly different) mesh."""
+    return restore_checkpoint(directory, like, step=step, shardings=new_shardings)
+
+
+def rescale_scheduler(sched: DLSBatchScheduler, new_n_groups: int) -> DLSBatchScheduler:
+    """P -> P' rescale: O(1).  Token-exactness note: chunks already *consumed*
+    stay consumed (the step counter is global); the new schedule re-partitions
+    only the remaining iteration space."""
+    new = DLSBatchScheduler(
+        sched.corpus, new_n_groups, technique=sched.technique, mode=sched.mode
+    )
+    # translate the old step counter into the new schedule by consumed-work
+    consumed = 0
+    for i in range(min(sched.step, sched.schedule.num_steps)):
+        consumed += int(sched.schedule.sizes[i])
+    # find the first step of the new schedule at/after the consumed offset
+    lo = 0
+    while lo < new.schedule.num_steps and int(new.schedule.offsets[lo]) < consumed:
+        lo += 1
+    new.step = lo
+    return new

@@ -1,0 +1,161 @@
+"""Sharded checkpointing: per-leaf .npy blobs + a JSON manifest.
+
+Design points for the 1000-node target:
+  * every leaf is written under its tree path => per-host shard files are
+    independent (on a real pod each host writes only its addressable shards;
+    in this container the single process writes everything);
+  * the manifest carries step, tree structure, shapes/dtypes and the data
+    scheduler state (ONE integer — the DCA property, see data/scheduler.py);
+  * writes go to a temp dir + atomic rename: a crash mid-save never corrupts
+    the latest-good checkpoint (restart safety);
+  * optional background-thread writer overlaps serialization with the next
+    training step (async checkpointing).
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't serialize ml_dtypes extension types natively; store them as raw
+# uint16/uint8 with the true dtype recorded in the manifest
+_EXT_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+__all__ = ["CheckpointStore", "save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _flatten_with_paths(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_with_paths(v, f"{prefix}/{k}"))
+    elif hasattr(tree, "_fields"):  # NamedTuple (optimizer state, caches)
+        for k, v in zip(tree._fields, tree):
+            out.update(_flatten_with_paths(v, f"{prefix}/{k}"))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def _unflatten_like(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_like(v, flat, f"{prefix}/{k}") for k, v in template.items()}
+    if hasattr(template, "_fields"):
+        return type(template)(*[
+            _unflatten_like(v, flat, f"{prefix}/{k}")
+            for k, v in zip(template._fields, template)
+        ])
+    return flat[prefix]
+
+
+def save_checkpoint(directory: str | Path, step: int, tree: Any,
+                    extra: Optional[Dict] = None) -> Path:
+    """Atomic checkpoint write: <dir>/step_<n>/ with manifest.json."""
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten_with_paths(tree)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {}, "time": time.time()}
+    for path, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = path.strip("/").replace("/", ".") + ".npy"
+        true_dtype = str(arr.dtype)
+        if true_dtype in _EXT_DTYPES:
+            arr = arr.view(_EXT_DTYPES[true_dtype][1])
+        np.save(tmp / fname, arr)
+        manifest["leaves"][path] = {
+            "file": fname, "shape": list(arr.shape), "dtype": true_dtype,
+        }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic publish
+    return final
+
+
+def restore_checkpoint(directory: str | Path, like: Any, step: Optional[int] = None,
+                       shardings: Any = None):
+    """Restore into the structure of ``like``; optionally device_put with new
+    shardings (elastic re-shard on a different mesh)."""
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    ckpt = directory / f"step_{step:08d}"
+    manifest = json.loads((ckpt / "manifest.json").read_text())
+    flat = {}
+    for path, info in manifest["leaves"].items():
+        arr = np.load(ckpt / info["file"])
+        if info["dtype"] in _EXT_DTYPES:
+            arr = arr.view(_EXT_DTYPES[info["dtype"]][0])
+        flat[path] = arr
+    tree = _unflatten_like(like, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+            tree, shardings,
+        )
+    return tree, manifest
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in directory.glob("step_*") if p.is_dir()
+    )
+    return steps[-1] if steps else None
+
+
+class CheckpointStore:
+    """Periodic + async checkpointing with retention."""
+
+    def __init__(self, directory: str | Path, every: int = 50, keep: int = 3,
+                 background: bool = True):
+        self.directory = Path(directory)
+        self.every = every
+        self.keep = keep
+        self.background = background
+        self._thread: Optional[threading.Thread] = None
+
+    def maybe_save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> bool:
+        if step % self.every != 0:
+            return False
+        self.wait()  # one in-flight save at a time
+        tree = jax.device_get(tree)  # snapshot before the next step mutates
+
+        def work():
+            save_checkpoint(self.directory, step, tree, extra)
+            self._gc()
+
+        if self.background:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+        return True
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.directory.glob("step_*")
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)

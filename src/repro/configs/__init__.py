@@ -1,0 +1,54 @@
+"""Architecture registry: the ten assigned configs + reduced smoke variants."""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.models.config import ModelConfig
+
+from . import (
+    deepseek_v3_671b,
+    falcon_mamba_7b,
+    granite_3_2b,
+    jamba_1_5_large_398b,
+    llama3_405b,
+    mixtral_8x22b,
+    phi_3_vision_4_2b,
+    qwen1_5_32b,
+    whisper_base,
+    yi_34b,
+)
+from .shapes import SHAPES, ShapeSpec, supported_shapes
+
+_MODULES = {
+    "mixtral-8x22b": mixtral_8x22b,
+    "deepseek-v3-671b": deepseek_v3_671b,
+    "jamba-1.5-large-398b": jamba_1_5_large_398b,
+    "llama3-405b": llama3_405b,
+    "qwen1.5-32b": qwen1_5_32b,
+    "yi-34b": yi_34b,
+    "granite-3-2b": granite_3_2b,
+    "phi-3-vision-4.2b": phi_3_vision_4_2b,
+    "whisper-base": whisper_base,
+    "falcon-mamba-7b": falcon_mamba_7b,
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    return _MODULES[name].config()
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {ARCH_NAMES}")
+    return _MODULES[name].smoke_config()
+
+
+__all__ = [
+    "ARCH_NAMES", "get_config", "get_smoke_config",
+    "SHAPES", "ShapeSpec", "supported_shapes",
+]

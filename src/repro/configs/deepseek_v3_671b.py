@@ -1,0 +1,61 @@
+"""deepseek-v3-671b [moe] — 61L d_model=7168 128H (MLA) d_ff_expert=2048
+vocab=129280, MoE 1 shared + 256 routed top-8.  [arXiv:2412.19437; hf]
+
+Deviations recorded in DESIGN.md: MTP (multi-token prediction) head and the
+aux-loss-free sigmoid routing bias are not modeled; routing is renormalized
+softmax top-8.  The assigned config applies MoE on every layer (the paper's
+first-3-dense variation is not part of the assignment string).
+"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-671b",
+        family="moe",
+        n_layers=61,
+        d_model=7168,
+        n_heads=128,
+        n_kv_heads=128,
+        d_ff=2048,
+        vocab=129280,
+        attention="mla",
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_dim=128,
+        qk_rope_dim=64,
+        v_head_dim=128,
+        n_experts=256,
+        top_k=8,
+        n_shared_experts=1,
+        d_ff_expert=2048,
+        moe_group_size=1024,  # §Perf: dispatch FLOPs scale with group size
+        period_pattern=("attn",),
+        ffn_pattern=("moe",),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v3-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=64,
+        vocab=512,
+        attention="mla",
+        q_lora_rank=48,
+        kv_lora_rank=32,
+        qk_nope_dim=32,
+        qk_rope_dim=16,
+        v_head_dim=32,
+        n_experts=8,
+        top_k=2,
+        n_shared_experts=1,
+        d_ff_expert=64,
+        period_pattern=("attn",),
+        ffn_pattern=("moe",),
+    )

@@ -1,0 +1,39 @@
+"""falcon-mamba-7b [ssm] — 64L d_model=4096 (attention-free) vocab=65024,
+mamba1 arch: d_state=16, d_conv=4, expand=2 (d_inner=8192); the Mamba block
+is the whole layer (no separate FFN).  [arXiv:2410.05355; unverified]"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-7b",
+        family="ssm",
+        n_layers=64,
+        d_model=4096,
+        d_ff=0,
+        vocab=65024,
+        attention="none",
+        ssm_d_state=16,
+        ssm_d_conv=4,
+        ssm_expand=2,
+        period_pattern=("mamba",),
+        ffn_pattern=("none",),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="falcon-mamba-smoke",
+        family="ssm",
+        n_layers=2,
+        d_model=128,
+        d_ff=0,
+        vocab=512,
+        attention="none",
+        ssm_d_state=8,
+        ssm_d_conv=4,
+        ssm_expand=2,
+        period_pattern=("mamba",),
+        ffn_pattern=("none",),
+    )

@@ -1,0 +1,37 @@
+"""granite-3-2b [dense] — 40L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=49155 (not 128-aligned: vocab stays unsharded on the model axis; see
+launch.rules_for).  [hf:ibm-granite/granite-3.0-2b-base; hf]"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-3-2b",
+        family="dense",
+        n_layers=40,
+        d_model=2048,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=49155,
+        tie_embeddings=True,
+        period_pattern=("attn",),
+        ffn_pattern=("dense",),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=515,  # deliberately odd, like the real 49155
+        tie_embeddings=True,
+        period_pattern=("attn",),
+        ffn_pattern=("dense",),
+    )

@@ -1,0 +1,53 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2; Mamba:attn 1:7 interleave, MoE every
+other layer.  [arXiv:2403.19887; hf]"""
+
+from repro.models.config import ModelConfig
+
+# period of 8: one attention layer (index 4, per the Jamba paper) per 7 mamba
+_PERIOD = ("mamba", "mamba", "mamba", "mamba", "attn", "mamba", "mamba", "mamba")
+# MoE every other layer (e=2 in Jamba notation), dense otherwise
+_FFN = ("dense", "moe", "dense", "moe", "dense", "moe", "dense", "moe")
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        n_layers=72,
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        d_ff=24576,
+        vocab=65536,
+        n_experts=16,
+        top_k=2,
+        d_ff_expert=24576,
+        moe_group_size=1024,  # §Perf: dispatch FLOPs scale with group size
+        ssm_d_state=16,
+        ssm_d_conv=4,
+        ssm_expand=2,
+        period_pattern=_PERIOD,
+        ffn_pattern=_FFN,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-smoke",
+        family="hybrid",
+        n_layers=8,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        n_experts=4,
+        top_k=2,
+        d_ff_expert=256,
+        ssm_d_state=8,
+        ssm_d_conv=4,
+        ssm_expand=2,
+        period_pattern=_PERIOD,
+        ffn_pattern=_FFN,
+    )

@@ -1,0 +1,46 @@
+"""mixtral-8x22b [moe] — 56L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=32768, MoE 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b",
+        family="moe",
+        n_layers=56,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_ff=16384,
+        vocab=32768,
+        window=4096,  # SWA => sub-quadratic decode, long_500k eligible
+        rope_theta=1e6,
+        n_experts=8,
+        top_k=2,
+        d_ff_expert=16384,
+        moe_group_size=1024,  # §Perf: dispatch FLOPs scale with group size
+        period_pattern=("attn",),
+        ffn_pattern=("moe",),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x22b-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=256,
+        vocab=512,
+        window=32,
+        n_experts=4,
+        top_k=2,
+        d_ff_expert=256,
+        period_pattern=("attn",),
+        ffn_pattern=("moe",),
+        moe_impl="dispatch",
+    )

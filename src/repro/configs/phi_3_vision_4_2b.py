@@ -1,0 +1,37 @@
+"""phi-3-vision-4.2b [vlm] — 32L d_model=3072 32H (MHA kv=32) d_ff=8192
+vocab=32064; phi3-mini backbone + CLIP frontend (STUB: input_specs provides
+precomputed patch embeddings).  [hf:microsoft/Phi-3-vision-128k-instruct; hf]"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b",
+        family="vlm",
+        n_layers=32,
+        d_model=3072,
+        n_heads=32,
+        n_kv_heads=32,
+        d_ff=8192,
+        vocab=32064,
+        num_image_tokens=576,  # CLIP ViT-L/14 @ 336px
+        period_pattern=("attn",),
+        ffn_pattern=("dense",),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3v-smoke",
+        family="vlm",
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab=512,
+        num_image_tokens=16,
+        period_pattern=("attn",),
+        ffn_pattern=("dense",),
+    )

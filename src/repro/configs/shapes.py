@@ -1,0 +1,40 @@
+"""Assigned input shapes (LM-family): seq_len x global_batch per shape.
+
+``train_*`` lowers train_step (fwd+bwd+optimizer); ``prefill_*`` lowers the
+inference forward; ``decode_*``/``long_*`` lower serve_step (one token against
+a KV/state cache of seq_len).  ``long_500k`` requires a sub-quadratic path and
+is only run for SSM/hybrid/SWA archs (ModelConfig.sub_quadratic; skips are
+recorded in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.models.config import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "supported_shapes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def supported_shapes(cfg: ModelConfig) -> List[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        names.append("long_500k")
+    return names

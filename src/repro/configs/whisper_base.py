@@ -1,0 +1,39 @@
+"""whisper-base [audio] — 6L enc + 6L dec, d_model=512 8H d_ff=2048
+vocab=51865; enc-dec with conv frontend STUB (input_specs provides
+precomputed frame embeddings [B, 1500, 512]).  [arXiv:2212.04356; unverified]"""
+
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="audio",
+        n_layers=6,  # decoder layers
+        n_encoder_layers=6,
+        encoder_ctx=1500,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=51865,
+        period_pattern=("attn",),
+        ffn_pattern=("dense",),
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke",
+        family="audio",
+        n_layers=2,
+        n_encoder_layers=2,
+        encoder_ctx=64,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=256,
+        vocab=512,
+        period_pattern=("attn",),
+        ffn_pattern=("dense",),
+    )

@@ -1,0 +1,127 @@
+"""LB4MPI-compatible API facade (paper Sec. 5, Listing 1).
+
+Mirrors the six LB4MPI entry points plus the paper's new
+``Configure_Chunk_Calculation_Mode``.  The backing runtime is the
+thread-based ``SelfSchedulingExecutor`` (one address space stands in for the
+MPI communicator in this container; the call protocol is identical).
+
+Typical usage (cf. Listing 1):
+
+    info = DLS_Parameters_Setup(n_workers=4, N=100_000, technique="fac")
+    Configure_Chunk_Calculation_Mode(info, "dca")
+    DLS_StartLoop(info)
+    while not DLS_Terminated(info):
+        lo, hi = DLS_StartChunk(info)
+        ...compute iterations [lo, hi)...
+        DLS_EndChunk(info)
+    DLS_EndLoop(info)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Optional
+
+from .schedule import build_schedule_dca
+from .techniques import DLSParams, get_technique
+
+__all__ = [
+    "DLS_Parameters_Setup",
+    "Configure_Chunk_Calculation_Mode",
+    "DLS_StartLoop",
+    "DLS_StartChunk",
+    "DLS_EndChunk",
+    "DLS_Terminated",
+    "DLS_EndLoop",
+]
+
+
+@dataclasses.dataclass
+class _LoopInfo:
+    params: DLSParams
+    technique: str
+    mode: str = "dca"
+    # shared scheduling state (the "coordinator memory" of Fig. 3)
+    lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+    step: int = 0
+    lp_start: int = 0
+    remaining: int = 0
+    prev_raw: float = 0.0
+    schedule: object = None
+    started: bool = False
+    current_chunk: Optional[tuple] = None
+    t_start: float = 0.0
+    t_loop: float = 0.0
+
+
+def DLS_Parameters_Setup(n_workers: int, N: int, technique: str = "fac", **kw) -> _LoopInfo:
+    params = DLSParams(N=N, P=n_workers, **kw)
+    get_technique(technique)  # validate early
+    return _LoopInfo(params=params, technique=technique, remaining=N)
+
+
+def Configure_Chunk_Calculation_Mode(info: _LoopInfo, mode: str) -> None:
+    """Select 'cca' or 'dca' (the paper's new API)."""
+    if mode not in ("cca", "dca"):
+        raise ValueError(f"mode must be 'cca' or 'dca', got {mode!r}")
+    tech = get_technique(info.technique)
+    if mode == "dca" and not tech.dca_supported:
+        mode = "cca"  # AF: the paper's synchronized fallback
+    info.mode = mode
+
+
+def DLS_StartLoop(info: _LoopInfo) -> None:
+    info.step = 0
+    info.lp_start = 0
+    info.remaining = info.params.N
+    info.prev_raw = 0.0
+    info.started = True
+    info.t_start = time.perf_counter()
+    if info.mode == "dca":
+        info.schedule = build_schedule_dca(info.technique, info.params)
+
+
+def DLS_Terminated(info: _LoopInfo) -> bool:
+    with info.lock:
+        if info.mode == "dca":
+            return info.step >= info.schedule.num_steps
+        return info.remaining <= 0
+
+
+def DLS_StartChunk(info: _LoopInfo):
+    """Claim the next chunk; returns (lo, hi) or None when the loop is drained."""
+    if info.mode == "dca":
+        with info.lock:  # fetch-and-add
+            step = info.step
+            if step >= info.schedule.num_steps:
+                return None
+            info.step += 1
+        lo = int(info.schedule.offsets[step])  # closed form, outside the lock
+        hi = lo + int(info.schedule.sizes[step])
+    else:
+        tech = get_technique(info.technique)
+        with info.lock:  # calculation inside the critical section (CCA)
+            if info.remaining <= 0:
+                return None
+            raw = tech.recursive_step(info.step, info.remaining, info.prev_raw, info.params, None)
+            k = int(min(max(int(raw), info.params.min_chunk), info.remaining))
+            info.prev_raw = raw if raw > 0 else k
+            lo = info.lp_start
+            hi = lo + k
+            info.step += 1
+            info.lp_start += k
+            info.remaining -= k
+    info.current_chunk = (lo, hi)
+    return lo, hi
+
+
+def DLS_EndChunk(info: _LoopInfo) -> None:
+    info.current_chunk = None
+
+
+def DLS_EndLoop(info: _LoopInfo) -> float:
+    info.t_loop = time.perf_counter() - info.t_start
+    info.started = False
+    return info.t_loop

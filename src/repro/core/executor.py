@@ -1,0 +1,151 @@
+"""Host-level self-scheduling executor: real threads, a real shared counter.
+
+This is the working analogue of LB4MPI inside one address space: worker
+threads self-schedule chunks of an iteration space and execute a user
+function.  Two modes, switchable exactly like the paper's
+``Configure_Chunk_Calculation_Mode``:
+
+* CCA — a designated coordinator computes every chunk size while holding the
+  queue lock (chunk calculation inside the critical section).
+* DCA — each worker atomically fetch-and-adds the step counter (critical
+  section is two integer reads + one add), then computes its chunk size and
+  offset *outside* the lock from the closed form.
+
+For non-adaptive techniques under DCA the offset is also derived lock-free:
+``lp_start(i)`` is the prefix sum of the closed form, a pure function of i.
+We memoize the prefix sums incrementally per executor to keep claims O(1)
+amortized.
+
+Used by: data/scheduler.py (document->rank assignment), runtime/straggler.py
+(microbatch claims), examples/slowdown_reproduction.py.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .schedule import build_schedule_dca
+from .techniques import DLSParams, get_technique
+
+__all__ = ["SelfSchedulingExecutor", "ChunkRecord"]
+
+
+class ChunkRecord:
+    __slots__ = ("step", "lo", "hi", "worker", "t_claim", "t_done")
+
+    def __init__(self, step, lo, hi, worker, t_claim, t_done):
+        self.step, self.lo, self.hi = step, lo, hi
+        self.worker, self.t_claim, self.t_done = worker, t_claim, t_done
+
+    def __repr__(self):
+        return f"ChunkRecord(step={self.step}, [{self.lo},{self.hi}), w={self.worker})"
+
+
+class SelfSchedulingExecutor:
+    """Self-schedule ``fn(lo, hi)`` over [0, N) across ``n_workers`` threads."""
+
+    def __init__(
+        self,
+        technique: str,
+        params: DLSParams,
+        mode: str = "dca",
+        calc_delay_s: float = 0.0,
+    ):
+        if mode not in ("cca", "dca"):
+            raise ValueError(f"mode must be 'cca' or 'dca', got {mode!r}")
+        self.technique = get_technique(technique)
+        if mode == "dca" and not self.technique.dca_supported:
+            # the paper's AF-under-DCA fallback: synchronize the calculation
+            mode = "dca_sync"
+        self.mode = mode
+        self.params = params
+        self.calc_delay_s = calc_delay_s
+        self._lock = threading.Lock()
+        self._step = 0
+        self._lp_start = 0
+        self._prev_raw = 0.0
+        self._remaining = params.N
+        # DCA: precompute the closed-form schedule once (pure function of i;
+        # any worker could recompute any entry independently — this table *is*
+        # the distributable object).
+        self._dca_schedule = (
+            build_schedule_dca(technique, params) if mode == "dca" else None
+        )
+        self.records: List[ChunkRecord] = []
+        self._records_lock = threading.Lock()
+
+    # -- chunk claiming ------------------------------------------------------
+
+    def _claim_cca(self) -> Optional[Tuple[int, int, int]]:
+        """Coordinator path: calculation inside the critical section."""
+        with self._lock:
+            if self._remaining <= 0:
+                return None
+            if self.calc_delay_s:
+                time.sleep(self.calc_delay_s)  # injected slowdown (serialized!)
+            raw = self.technique.recursive_step(
+                self._step, self._remaining, self._prev_raw, self.params, None
+            )
+            k = int(min(max(int(raw), self.params.min_chunk), self._remaining))
+            self._prev_raw = raw if raw > 0 else k
+            step, lo = self._step, self._lp_start
+            self._step += 1
+            self._lp_start += k
+            self._remaining -= k
+            return step, lo, lo + k
+
+    def _claim_dca(self) -> Optional[Tuple[int, int, int]]:
+        """Worker path: fetch-and-add only; calculation outside the lock."""
+        with self._lock:  # the fetch-and-add critical section
+            step = self._step
+            if step >= self._dca_schedule.num_steps:
+                return None
+            self._step += 1
+        if self.calc_delay_s:
+            time.sleep(self.calc_delay_s)  # injected slowdown (concurrent)
+        # closed-form lookup — pure function of `step`, no shared state
+        lo = int(self._dca_schedule.offsets[step])
+        hi = lo + int(self._dca_schedule.sizes[step])
+        return step, lo, hi
+
+    def _claim(self):
+        if self.mode == "dca":
+            return self._claim_dca()
+        return self._claim_cca()  # cca and dca_sync (AF fallback)
+
+    # -- execution -----------------------------------------------------------
+
+    def run(self, fn: Callable[[int, int], None], n_workers: int) -> float:
+        """Execute; returns wall-clock parallel time (the paper's T_loop^par)."""
+        t0 = time.perf_counter()
+
+        def worker(wid: int):
+            while True:
+                claim = self._claim()
+                if claim is None:
+                    return
+                step, lo, hi = claim
+                t_claim = time.perf_counter()
+                fn(lo, hi)
+                t_done = time.perf_counter()
+                with self._records_lock:
+                    self.records.append(ChunkRecord(step, lo, hi, wid, t_claim, t_done))
+
+        threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        return time.perf_counter() - t0
+
+    # -- verification ---------------------------------------------------------
+
+    def executed_ranges(self) -> np.ndarray:
+        """Sorted (lo, hi) pairs; tests assert exact [0, N) coverage."""
+        with self._records_lock:
+            pairs = sorted((r.lo, r.hi) for r in self.records)
+        return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)

@@ -1,0 +1,121 @@
+"""Hierarchical DCA (the paper's companion scheme, refs [8]/[12]): two-level
+self-scheduling for node-structured clusters.
+
+Level 1 (inter-node): the global iteration space is chunked by a DLS
+technique with P = number of node groups; a group's *local queue* is the
+chunk it claims.  Level 2 (intra-node): workers of the group self-schedule
+the local queue with a (possibly different) technique.
+
+With DCA closed forms at both levels, neither level needs a master: the
+global counter is one fetch-and-add per *group* chunk (orders of magnitude
+fewer contention events than flat scheduling at 1000-node scale), and the
+local schedule is a pure function of (local N, W, local step).  This is the
+scaling story for the 1000+ node target: global contention drops from
+O(total chunks) to O(group chunks).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from .schedule import build_schedule_dca
+from .techniques import DLSParams
+
+__all__ = ["HierarchicalExecutor"]
+
+
+class HierarchicalExecutor:
+    """Two-level self-scheduling: groups claim global chunks, workers claim
+    local sub-chunks.  Thread-emulated (threads = workers of all groups)."""
+
+    def __init__(
+        self,
+        n_iterations: int,
+        n_groups: int,
+        workers_per_group: int,
+        global_technique: str = "gss",
+        local_technique: str = "fac",
+    ):
+        self.N = n_iterations
+        self.n_groups = n_groups
+        self.w_per_group = workers_per_group
+        self.global_technique = global_technique
+        self.local_technique = local_technique
+        # level-1 schedule: closed form over group-level steps
+        self.global_schedule = build_schedule_dca(
+            global_technique, DLSParams(N=n_iterations, P=n_groups)
+        )
+        self._global_lock = threading.Lock()
+        self._global_step = 0
+        # per-group local state: (base_offset, local_schedule, local_step)
+        self._group_lock = [threading.Lock() for _ in range(n_groups)]
+        self._group_queue: List[Optional[Tuple[int, object, int]]] = [None] * n_groups
+        self.records: List[Tuple[int, int, int, int]] = []  # (group, worker, lo, hi)
+        self._rec_lock = threading.Lock()
+
+    def _claim_global(self) -> Optional[Tuple[int, int]]:
+        """Fetch-and-add on the global counter -> a group-level chunk."""
+        with self._global_lock:
+            step = self._global_step
+            if step >= self.global_schedule.num_steps:
+                return None
+            self._global_step += 1
+        lo = int(self.global_schedule.offsets[step])
+        hi = lo + int(self.global_schedule.sizes[step])
+        return lo, hi
+
+    def _claim_local(self, group: int) -> Optional[Tuple[int, int]]:
+        with self._group_lock[group]:
+            state = self._group_queue[group]
+            if state is not None:
+                base, sched, lstep = state
+                if lstep < sched.num_steps:
+                    self._group_queue[group] = (base, sched, lstep + 1)
+                    lo = base + int(sched.offsets[lstep])
+                    hi = lo + int(sched.sizes[lstep])
+                    return lo, hi
+                self._group_queue[group] = None  # drained
+            # refill from the global queue
+            g = self._claim_global()
+            if g is None:
+                return None
+            base, ghi = g
+            local_n = ghi - base
+            sched = build_schedule_dca(
+                self.local_technique, DLSParams(N=local_n, P=self.w_per_group)
+            )
+            self._group_queue[group] = (base, sched, 1)
+            lo = base + int(sched.offsets[0])
+            return lo, lo + int(sched.sizes[0])
+
+    def run(self, fn: Callable[[int, int], None]) -> None:
+        def worker(group: int, wid: int):
+            while True:
+                claim = self._claim_local(group)
+                if claim is None:
+                    return
+                lo, hi = claim
+                fn(lo, hi)
+                with self._rec_lock:
+                    self.records.append((group, wid, lo, hi))
+
+        threads = [
+            threading.Thread(target=worker, args=(g, w))
+            for g in range(self.n_groups)
+            for w in range(self.w_per_group)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    def executed_ranges(self) -> np.ndarray:
+        return np.asarray(sorted((lo, hi) for _, _, lo, hi in self.records), np.int64)
+
+    @property
+    def global_contention_events(self) -> int:
+        """Fetch-and-adds on the *global* counter (vs N/chunk for flat)."""
+        return self._global_step

@@ -1,0 +1,167 @@
+"""Schedule construction: DCA (vectorized, coordinator-free) vs CCA (sequential).
+
+The paper's two scheduling-step operations map here as:
+
+* chunk calculation  -> ``closed_form_sizes`` evaluated for *all* step indices
+  at once (DCA), or a Python/master recursion (CCA);
+* chunk assignment   -> an exclusive prefix sum over chunk sizes.  On MPI this
+  is a serialized fetch-and-add on ``lp_start``; on TPU/host-vector hardware it
+  is a parallel cumsum — the central hardware adaptation of this repro (see
+  DESIGN.md Sec. 2).
+
+The invariant every schedule must satisfy (tests/test_schedule_properties.py):
+offsets[0] == 0, offsets are the exclusive cumsum of sizes, sizes >= 1, and
+sum(sizes) == N exactly (full, non-overlapping coverage of the loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .techniques import DLSParams, closed_form_sizes, get_technique
+
+__all__ = [
+    "Schedule",
+    "build_schedule_dca",
+    "build_schedule_cca",
+    "chunk_of_step",
+    "verify_coverage",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A complete chunk schedule: step i covers [offsets[i], offsets[i]+sizes[i])."""
+
+    technique: str
+    N: int
+    P: int
+    sizes: np.ndarray  # int64 [S]
+    offsets: np.ndarray  # int64 [S], exclusive prefix sum of sizes
+
+    @property
+    def num_steps(self) -> int:
+        return int(self.sizes.shape[0])
+
+    def as_ranges(self):
+        return [(int(o), int(o + s)) for o, s in zip(self.offsets, self.sizes)]
+
+    def __repr__(self):
+        return (
+            f"Schedule({self.technique}, N={self.N}, P={self.P}, "
+            f"S={self.num_steps}, K0={int(self.sizes[0]) if self.num_steps else 0})"
+        )
+
+
+def _clamp_and_trim(raw: np.ndarray, N: int) -> tuple:
+    """Clamp raw (positive) sizes to the remaining work and trim trailing zeros.
+
+    Because raw sizes are >= 1 everywhere, at most the final kept chunk is
+    shortened; everything after the cutoff is dropped.  This *is* the parallel
+    chunk assignment: the exclusive cumsum plays the role of the serialized
+    fetch-and-add sequence of lp_start values.
+    """
+    raw = np.clip(np.round(np.nan_to_num(raw, nan=1.0, posinf=float(N))), 1, float(N))
+    raw = raw.astype(np.int64)
+    csum = np.cumsum(raw)
+    excl = csum - raw  # exclusive prefix sum == lp_start per step
+    sizes = np.minimum(raw, np.maximum(N - excl, 0))
+    keep = sizes > 0
+    return sizes[keep], excl[keep]
+
+
+def build_schedule_dca(
+    technique: str,
+    params: DLSParams,
+    max_steps: Optional[int] = None,
+) -> Schedule:
+    """Vectorized DCA schedule: every chunk computed independently from its index.
+
+    ``max_steps`` bounds the candidate step range; defaults to N/min_chunk
+    (always sufficient since each chunk is >= min_chunk >= 1).
+    """
+    tech = get_technique(technique)
+    if not tech.dca_supported:
+        raise ValueError(f"{technique} is not DCA-schedulable without feedback")
+    if max_steps is None:
+        max_steps = int(np.ceil(params.N / max(params.min_chunk, 1)))
+    # Chunk calculation: embarrassingly parallel over i (the paper's DCA).
+    i = np.arange(max_steps, dtype=np.int64)
+    raw = closed_form_sizes(technique, i, params)
+    sizes, offsets = _clamp_and_trim(raw, params.N)
+    return Schedule(technique, params.N, params.P, sizes, offsets)
+
+
+def build_schedule_cca(
+    technique: str,
+    params: DLSParams,
+    feedback=None,
+) -> Schedule:
+    """Sequential CCA schedule: a master walks the recursive formula (Eqs. 1-13).
+
+    Mirrors LB4MPI's centralized path: chunk i may depend on R_i and on the
+    previous chunk.  ``feedback`` is only consulted by adaptive techniques (AF).
+    """
+    tech = get_technique(technique)
+    sizes = []
+    offsets = []
+    remaining = params.N
+    lp_start = 0
+    prev = 0.0
+    i = 0
+    while remaining > 0:
+        raw = tech.recursive_step(i, remaining, prev, params, feedback)
+        k = max(int(raw), params.min_chunk)
+        k = min(k, remaining)
+        if k <= 0:  # defensive: a malformed technique must not spin forever
+            k = remaining
+        sizes.append(k)
+        offsets.append(lp_start)
+        prev = raw if raw > 0 else k
+        lp_start += k
+        remaining -= k
+        i += 1
+        if i > params.N + params.P:
+            raise RuntimeError(f"{technique}: runaway recursion (i={i})")
+    return Schedule(
+        technique,
+        params.N,
+        params.P,
+        np.asarray(sizes, dtype=np.int64),
+        np.asarray(offsets, dtype=np.int64),
+    )
+
+
+def chunk_of_step(technique: str, i: int, params: DLSParams) -> tuple:
+    """DCA's per-PE view: (lp_start, size) for step ``i`` with *no* global state.
+
+    A PE holding the shared step counter value ``i`` computes its own chunk:
+    size via the closed form, offset via the (locally evaluated) prefix sum of
+    the closed form over [0, i).  No communication with other PEs, which is
+    exactly the property the paper exploits.
+    """
+    params_i = np.arange(i + 1, dtype=np.int64)
+    raw = closed_form_sizes(technique, params_i, params)
+    n = float(params.N)
+    raw = np.clip(np.round(np.nan_to_num(raw, nan=1.0, posinf=n)), 1, n).astype(np.int64)
+    csum = np.cumsum(raw)
+    excl = int(csum[i] - raw[i])
+    size = int(min(raw[i], max(params.N - excl, 0)))
+    return excl, size
+
+
+def verify_coverage(schedule: Schedule) -> None:
+    """Assert the paper's correctness requirement: complete, non-overlapping
+    assignment of [0, N).  Raises AssertionError on violation."""
+    s, o = schedule.sizes, schedule.offsets
+    assert s.ndim == o.ndim == 1 and s.shape == o.shape
+    assert schedule.num_steps > 0, "empty schedule"
+    assert o[0] == 0, f"first chunk must start at 0, got {o[0]}"
+    assert np.all(s >= 1), "zero/negative chunk size"
+    recon = np.concatenate([[0], np.cumsum(s)[:-1]])
+    assert np.array_equal(o, recon), "offsets are not the exclusive cumsum of sizes"
+    total = int(np.sum(s))
+    assert total == schedule.N, f"covers {total} of {schedule.N} iterations"

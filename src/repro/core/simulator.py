@@ -1,0 +1,265 @@
+"""Discrete-event simulator for CCA vs DCA under chunk-calculation slowdowns.
+
+Reproduces the structure of the paper's performance evaluation (Sec. 6):
+PSIA-like and Mandelbrot-like workloads, P PEs, and three scenarios injecting
+{0, 10, 100} microseconds of delay into the chunk *calculation*.
+
+Timing model (see DESIGN.md Sec. 2 for the mapping from the MPI runtime):
+
+* CCA — the master is a serialization resource.  Serving one request costs
+  ``delay_calc + calc_cost + h_assign`` of *master* time; requests queue.
+  With a non-dedicated master (LB4MPI default), serving also displaces the
+  master PE's own computation.
+* DCA — the chunk calculation (``delay_calc + calc_cost``) runs on the
+  *requesting* PE, concurrently across PEs; only the fetch-and-add on the
+  shared step counter serializes, costing ``h_assign``.
+* AF under DCA (paper Sec. 4): the calculation needs R_i, so it is pulled
+  back inside the critical section — AF-DCA serializes like CCA but without
+  master displacement.
+
+The simulator is deterministic given the cost vector and PE speeds.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Optional
+
+import numpy as np
+
+from .techniques import DLSParams, closed_form_sizes, get_technique
+
+__all__ = [
+    "SimConfig",
+    "SimResult",
+    "AFFeedback",
+    "simulate",
+    "mandelbrot_costs",
+    "psia_costs",
+    "constant_costs",
+]
+
+
+# ---------------------------------------------------------------------------
+# Workload generators (paper Table 3 / Listings 2-3)
+# ---------------------------------------------------------------------------
+
+
+def mandelbrot_costs(
+    n_iterations: int = 262_144,
+    conversion_threshold: int = 512,
+    mean_s: float = 0.01025,
+    seed: int = 0,
+) -> np.ndarray:
+    """Per-iteration costs from a real Mandelbrot(z^4) escape-time computation.
+
+    Listing 3 of the paper: iteration `counter` maps to pixel (x, y) of a
+    W x W image; cost is proportional to the escape count under z <- z^4 + c.
+    Scaled so the mean matches Table 3 (0.01025 s); yields the paper's highly
+    irregular load (c.o.v. ~1.8 with their threshold).
+    """
+    w = int(math.isqrt(n_iterations))
+    if w * w != n_iterations:
+        w = int(math.ceil(math.sqrt(n_iterations)))
+    xs = np.linspace(-1.5, 1.5, w, dtype=np.float64)
+    ys = np.linspace(-1.5, 1.5, w, dtype=np.float64)
+    c = (xs[None, :] + 1j * ys[:, None]).astype(np.complex128)
+    z = np.zeros_like(c)
+    counts = np.zeros(c.shape, dtype=np.int64)
+    alive = np.ones(c.shape, dtype=bool)
+    for _ in range(conversion_threshold):
+        z[alive] = z[alive] ** 4 + c[alive]
+        alive = alive & (np.abs(z) < 2.0)
+        counts[alive] += 1
+        if not alive.any():
+            break
+    costs = counts.reshape(-1).astype(np.float64)[:n_iterations] + 1.0
+    return costs * (mean_s / costs.mean())
+
+
+def psia_costs(
+    n_iterations: int = 262_144,
+    mean_s: float = 0.07298,
+    std_s: float = 0.00885,
+    min_s: float = 0.0345,
+    max_s: float = 0.190161,
+    seed: int = 0,
+) -> np.ndarray:
+    """PSIA-like costs: low c.o.v. (Table 3: 0.256 listed; mean/std as given)."""
+    rng = np.random.default_rng(seed)
+    costs = rng.normal(mean_s, std_s, size=n_iterations)
+    return np.clip(costs, min_s, max_s)
+
+
+def constant_costs(n_iterations: int, cost_s: float = 1e-3) -> np.ndarray:
+    return np.full(n_iterations, cost_s, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# Simulation
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SimConfig:
+    technique: str
+    params: DLSParams
+    approach: str = "dca"  # "cca" | "dca"
+    delay_calc_s: float = 0.0  # the paper's injected delay (0 / 1e-5 / 1e-4)
+    h_assign_s: float = 1e-6  # fetch-and-add / message latency
+    calc_cost_s: float = 2e-7  # intrinsic formula evaluation cost
+    pe_speeds: Optional[np.ndarray] = None  # relative speeds, default ones
+    dedicated_master: bool = False  # CCA only; paper's LB4MPI is non-dedicated
+
+
+@dataclasses.dataclass
+class SimResult:
+    t_parallel: float  # T_loop^par — the paper's reported metric
+    num_chunks: int
+    pe_finish: np.ndarray
+    pe_busy: np.ndarray  # per-PE useful compute time
+    chunk_sizes: np.ndarray
+    chunk_pes: np.ndarray
+
+    @property
+    def load_imbalance(self) -> float:
+        """max/mean of PE finish times - 1 (0 == perfectly balanced)."""
+        return float(self.pe_finish.max() / max(self.pe_finish.mean(), 1e-30) - 1.0)
+
+    @property
+    def cov_finish(self) -> float:
+        return float(self.pe_finish.std() / max(self.pe_finish.mean(), 1e-30))
+
+
+class AFFeedback:
+    """Per-PE running (mu, sigma) estimates for adaptive factoring (Eq. 11)."""
+
+    def __init__(self, P: int, mu0: float, sigma0: float):
+        self.mu_per_pe = np.full(P, mu0)
+        self.sigma_per_pe = np.full(P, sigma0)
+        self._count = np.zeros(P, dtype=np.int64)
+        self.requesting_pe = 0
+
+    @property
+    def ready(self) -> bool:
+        return bool((self._count > 0).all())
+
+    def update(self, pe: int, it_mean: float, it_std: float):
+        n = self._count[pe]
+        w = 1.0 / (n + 1.0)
+        self.mu_per_pe[pe] = (1 - w) * self.mu_per_pe[pe] + w * it_mean
+        self.sigma_per_pe[pe] = (1 - w) * self.sigma_per_pe[pe] + w * it_std
+        self._count[pe] += 1
+
+
+def simulate(cfg: SimConfig, costs: np.ndarray) -> SimResult:
+    """Run one CCA or DCA execution and return T_loop^par and diagnostics."""
+    p = cfg.params
+    assert len(costs) >= p.N, f"need >= {p.N} iteration costs, got {len(costs)}"
+    tech = get_technique(cfg.technique)
+    speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
+    assert len(speeds) == p.P
+
+    # prefix sums for O(1) chunk execution time / stats
+    csum = np.concatenate([[0.0], np.cumsum(costs[: p.N])])
+    csum2 = np.concatenate([[0.0], np.cumsum(costs[: p.N] ** 2)])
+
+    def chunk_exec(lo: int, hi: int) -> float:
+        return float(csum[hi] - csum[lo])
+
+    def chunk_stats(lo: int, hi: int):
+        n = hi - lo
+        mean = (csum[hi] - csum[lo]) / n
+        var = max((csum2[hi] - csum2[lo]) / n - mean * mean, 0.0)
+        return mean, math.sqrt(var)
+
+    feedback = AFFeedback(p.P, p.mu, p.sigma) if tech.requires_feedback else None
+
+    # DCA evaluates the *closed form* at each step (vectorized once here —
+    # which is itself the DCA property at work); CCA walks the recursion.
+    dca_closed = (
+        closed_form_sizes(cfg.technique, np.arange(p.N, dtype=np.int64), p)
+        if (cfg.approach == "dca" and tech.dca_supported)
+        else None
+    )
+
+    # event queue: (time_free, pe). All PEs request at t=0.
+    heap = [(0.0, pe) for pe in range(p.P)]
+    heapq.heapify(heap)
+    coord_free = 0.0  # when the serialization resource is next available
+    master_extra = 0.0  # CCA non-dedicated: master's accumulated service time
+    remaining = p.N
+    lp_start = 0
+    step = 0
+    prev_raw = 0.0
+    pe_finish = np.zeros(p.P)
+    pe_busy = np.zeros(p.P)
+    chunk_sizes, chunk_pes = [], []
+
+    af_like = tech.requires_feedback
+
+    while remaining > 0:
+        t_req, pe = heapq.heappop(heap)
+        if cfg.approach == "cca":
+            # request travels to master; service serialized there, calculation
+            # delay *inside* the master's service time
+            service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+            start = max(t_req, coord_free)
+            done = start + service
+            coord_free = done
+            if not cfg.dedicated_master:
+                master_extra += service  # displaces PE0's own compute
+        else:  # dca
+            if af_like:
+                # paper Sec. 4: AF's calculation needs R_i -> synchronized
+                service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+                start = max(t_req, coord_free)
+                done = start + service
+                coord_free = done
+            else:
+                # calculation at the requesting PE, concurrent across PEs;
+                # only the fetch-and-add serializes
+                t_calc_done = t_req + cfg.delay_calc_s + cfg.calc_cost_s
+                start = max(t_calc_done, coord_free)
+                done = start + cfg.h_assign_s
+                coord_free = done
+
+        # chunk calculation value
+        if feedback is not None:
+            feedback.requesting_pe = pe
+        if dca_closed is not None:
+            raw = float(dca_closed[step])
+        else:
+            raw = tech.recursive_step(step, remaining, prev_raw, p, feedback)
+        k = int(min(max(int(raw), p.min_chunk), remaining))
+        prev_raw = raw if raw > 0 else k
+        lo, hi = lp_start, lp_start + k
+        lp_start += k
+        remaining -= k
+        step += 1
+
+        exec_t = chunk_exec(lo, hi) / speeds[pe]
+        t_free = done + exec_t
+        if cfg.approach == "cca" and not cfg.dedicated_master and pe == 0:
+            # master's own compute is displaced by the time it spent serving
+            t_free += master_extra
+            master_extra = 0.0
+        pe_finish[pe] = t_free
+        pe_busy[pe] += exec_t
+        chunk_sizes.append(k)
+        chunk_pes.append(pe)
+        if feedback is not None:
+            m, s = chunk_stats(lo, hi)
+            feedback.update(pe, m, s)
+        heapq.heappush(heap, (t_free, pe))
+
+    return SimResult(
+        t_parallel=float(pe_finish.max()),
+        num_chunks=len(chunk_sizes),
+        pe_finish=pe_finish,
+        pe_busy=pe_busy,
+        chunk_sizes=np.asarray(chunk_sizes, dtype=np.int64),
+        chunk_pes=np.asarray(chunk_pes, dtype=np.int64),
+    )

@@ -1,0 +1,473 @@
+"""DLS techniques: chunk-size formulas in both CCA (recursive) and DCA (closed) forms.
+
+This module is the faithful core of Eleliemy & Ciorba, "A Distributed Chunk
+Calculation Approach for Self-scheduling of Parallel Applications on
+Distributed-memory Systems" (2021).
+
+Every technique exposes two faces:
+
+* ``recursive_next(state) -> chunk``   — the classical CCA formulation (Eqs. 1-13):
+  a master walks the recursion, each chunk may depend on previously calculated
+  chunks through the remaining-iterations counter ``R_i``.
+* ``closed_form(i) -> chunk``          — the DCA "straightforward" formulation
+  (Eqs. 14-21): the chunk size is a pure function of the scheduling-step index
+  ``i`` plus constants.  This is what makes the calculation distributable: any
+  PE holding only the shared step counter can compute its own chunk with zero
+  knowledge of other PEs' chunks.
+
+AF (adaptive factoring) is irreducibly recursive (the paper, Sec. 4): its chunk
+depends on live per-PE timing estimates and on R_i.  It carries
+``requires_feedback = True`` and is only usable through the executor/simulator,
+which provide the synchronization the paper prescribes for AF-under-DCA.
+
+Numerical notes
+---------------
+* Host-side closed forms use numpy float64 so that ceil/floor boundaries match
+  the paper's integer tables bit-exactly (Table 2 is reproduced in
+  tests/test_techniques_table2.py).
+* ``closed_form_sizes_jnp`` provides the same math in jnp/float32 for use inside
+  jit/shard_map/Pallas; boundaries may differ by ±1 chunk on extreme inputs,
+  which preserves the coverage invariant (assignment clamps to remaining work).
+* The paper's Table 2 was itself generated from the closed forms (e.g. GSS step
+  4 is 80 = ceil(0.75^4 * 250), not 79 = ceil(315/4) as the recursion gives).
+  Both sequences are valid GSS; tests pin the closed forms to Table 2 and pin
+  the recursions to their own invariants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import math
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "DLSParams",
+    "Technique",
+    "TECHNIQUES",
+    "get_technique",
+    "closed_form_sizes",
+    "technique_names",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DLSParams:
+    """Scheduling-problem parameters (Table 1 of the paper).
+
+    Attributes mirror the paper's notation:
+      N: total loop iterations.  P: number of PEs.
+      h: scheduling overhead per assignment (FSC).
+      sigma, mu: std-dev / mean of iteration execution time (FSC, TAP, AF).
+      alpha: TAP's probabilistic tuning parameter.
+      fiss_b: FISS/VISS batch count ``B``.
+      swr: PLS static workload ratio.
+      min_chunk: lower clamp on every chunk (paper uses 1).
+      seed: RND's counter-based RNG seed (stateless => DCA-compatible).
+    """
+
+    N: int
+    P: int
+    h: float = 0.013716
+    sigma: float = 0.2
+    mu: float = 0.1
+    alpha: float = 0.0605
+    tap_va: Optional[float] = None  # explicit v_alpha overrides alpha*sigma/mu
+    fiss_b: int = 3
+    viss_x: int = 4  # paper Sec. 2: "For FISS and VISS, we consider B and X to
+    #                  be 3 and 4": VISS K0 = N/(X*P)  (=> 62.5 for Table 2)
+    swr: float = 0.7
+    min_chunk: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.N <= 0:
+            raise ValueError(f"N must be positive, got {self.N}")
+        if self.P <= 0:
+            raise ValueError(f"P must be positive, got {self.P}")
+
+    @property
+    def va(self) -> float:
+        """TAP's v_alpha = alpha * c.o.v. (Eq. 5)."""
+        if self.tap_va is not None:
+            return self.tap_va
+        return self.alpha * self.sigma / max(self.mu, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+
+def _tss_consts(p: DLSParams):
+    """TSS constants (Eq. 6): K0 = ceil(N/2P), K_last = 1, S, decrement C."""
+    k0 = math.ceil(p.N / (2.0 * p.P))
+    k_last = 1
+    s = math.ceil(2.0 * p.N / (k0 + k_last))
+    c = (k0 - k_last) // max(s - 1, 1)
+    return k0, k_last, s, c
+
+
+def _fiss_consts(p: DLSParams):
+    """FISS constants (Eq. 9): K0 and per-batch increment C.
+
+    The paper prints ceil() around C but its own Table 2 (increment 33 for
+    N=1000, P=4, B=3) matches floor/integer division; we follow the table.
+    """
+    b = p.fiss_b
+    k0 = int(p.N / ((2.0 + b) * p.P))
+    c = int((2.0 * p.N * (1.0 - b / (2.0 + b))) / (p.P * b * max(b - 1, 1)))
+    return k0, c
+
+
+def _rnd_u01(seed: int, i) -> np.ndarray:
+    """Deterministic counter-based uniform(0,1) — a pure function of (seed, i).
+
+    Philox-style lightweight mixing; stateless so that RND becomes a
+    "straightforward" formula in the paper's sense (Sec. 4) — each PE computes
+    K_i^RND from i alone, which classic stateful rand() cannot do.
+    """
+    i = np.asarray(i, dtype=np.uint64)
+    mixed_seed = (seed * 0xBF58476D1CE4E5B9 + 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    x = i * np.uint64(0x9E3779B97F4A7C15) ^ np.uint64(mixed_seed)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x >> np.uint64(11)).astype(np.float64) / float(1 << 53)
+
+
+# ---------------------------------------------------------------------------
+# Technique definition
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Technique:
+    """A DLS technique: closed (DCA) + recursive (CCA) chunk calculators.
+
+    closed_form(i_array, params) -> float64 chunk sizes (pre-clamp) for step
+        indices ``i_array``; vectorized; pure function of i.  ``None`` when the
+        technique is irreducibly recursive (AF).
+    recursive_step(i, R, prev_chunk, params, feedback) -> raw chunk size for
+        step i given remaining iterations R (the CCA master's view).
+    pattern: fixed | decreasing | increasing | irregular (paper Fig. 1).
+    requires_feedback: needs live timing data (AF, and PLS's SWR probe in the
+        strictest reading; we treat SWR as a supplied constant like the paper).
+    """
+
+    name: str
+    pattern: str
+    closed_form: Optional[Callable[[np.ndarray, DLSParams], np.ndarray]]
+    recursive_step: Callable
+    requires_feedback: bool = False
+    batched: bool = False  # chunks assigned in batches of P equal sizes
+
+    @property
+    def dca_supported(self) -> bool:
+        return self.closed_form is not None
+
+
+# --- STATIC -----------------------------------------------------------------
+
+
+def _static_closed(i, p: DLSParams):
+    # exactly P chunks: floor(N/P) + 1 for the first (N mod P) chunks
+    i = np.asarray(i)
+    base = p.N // p.P
+    rem = p.N % p.P
+    return np.where(i < p.P, base + (i < rem), 0.0).astype(np.float64)
+
+
+def _static_rec(i, R, prev, p: DLSParams, fb=None):
+    return (p.N // p.P) + (1 if i < (p.N % p.P) else 0) if i < p.P else 0
+
+
+# --- SS ----------------------------------------------------------------------
+
+
+def _ss_closed(i, p: DLSParams):
+    return np.ones_like(np.asarray(i, dtype=np.float64))
+
+
+def _ss_rec(i, R, prev, p: DLSParams, fb=None):
+    return 1
+
+
+# --- FSC ----------------------------------------------------------------------
+
+
+def _fsc_size(p: DLSParams) -> float:
+    # Eq. 3 as printed.  With the paper's h=0.013716 and sigma=0.2 this yields
+    # K = 17.145 -> 17, matching Table 2 (59 chunks: 58x17 + 14).
+    logp = math.log2(max(p.P, 2))  # P=1: degenerate, avoid div-by-zero
+    return (math.sqrt(2.0) * p.N * p.h) / (p.sigma * p.P * math.sqrt(logp) + 1e-30)
+
+
+def _fsc_closed(i, p: DLSParams):
+    k = math.floor(_fsc_size(p))
+    return np.full_like(np.asarray(i, dtype=np.float64), float(k))
+
+
+def _fsc_rec(i, R, prev, p: DLSParams, fb=None):
+    return math.floor(_fsc_size(p))
+
+
+# --- GSS ----------------------------------------------------------------------
+
+
+def _gss_closed(i, p: DLSParams):
+    # Eq. 14: K'_i = ceil(((P-1)/P)^i * N/P)
+    i = np.asarray(i, dtype=np.float64)
+    ratio = (p.P - 1.0) / p.P
+    return np.ceil(np.power(ratio, i) * (p.N / p.P))
+
+
+def _gss_rec(i, R, prev, p: DLSParams, fb=None):
+    # Eq. 4: K_i = ceil(R_i / P)
+    return math.ceil(R / p.P)
+
+
+# --- TAP ----------------------------------------------------------------------
+
+
+def _tap_adjust(k_gss, va: float):
+    return k_gss + (va * va) / 2.0 - va * np.sqrt(2.0 * k_gss + (va * va) / 4.0)
+
+
+def _tap_closed(i, p: DLSParams):
+    # Eq. 16 applied to the *raw* (pre-ceil) GSS value, then ceil once.
+    i = np.asarray(i, dtype=np.float64)
+    ratio = (p.P - 1.0) / p.P
+    k_gss_raw = np.power(ratio, i) * (p.N / p.P)
+    return np.ceil(_tap_adjust(k_gss_raw, p.va))
+
+
+def _tap_rec(i, R, prev, p: DLSParams, fb=None):
+    return math.ceil(_tap_adjust(R / p.P, p.va))
+
+
+# --- TSS ----------------------------------------------------------------------
+
+
+def _tss_closed(i, p: DLSParams):
+    # Eq. 17: K'_i = K0 - i*C  (derivation in the paper, Sec. 4)
+    k0, k_last, s, c = _tss_consts(p)
+    i = np.asarray(i, dtype=np.float64)
+    return np.maximum(k0 - i * float(c), float(k_last))
+
+
+def _tss_rec(i, R, prev, p: DLSParams, fb=None):
+    k0, k_last, s, c = _tss_consts(p)
+    if i == 0:
+        return k0
+    return max(int(prev) - c, k_last)
+
+
+# --- FAC (FAC2) ----------------------------------------------------------------
+
+
+def _fac_closed(i, p: DLSParams):
+    # Eq. 15: K'_i = ceil((1/2)^(floor(i/P)+1) * N/P)
+    i = np.asarray(i, dtype=np.float64)
+    i_new = np.floor(i / p.P) + 1.0
+    return np.ceil(np.power(0.5, i_new) * (p.N / p.P))
+
+
+def _fac_rec(i, R, prev, p: DLSParams, fb=None):
+    # Eq. 7: new batch size every P steps: ceil(R / 2P); else repeat previous.
+    if i % p.P == 0:
+        return math.ceil(R / (2.0 * p.P))
+    return int(prev)
+
+
+# --- TFSS ----------------------------------------------------------------------
+
+
+def _tfss_closed(i, p: DLSParams):
+    # Eq. 18 (batch-mean of TSS chunks): for batch b = floor(i/P), the chunk is
+    # floor(mean(K'_TSS[bP : bP+P])).  Closed in i because TSS is closed.
+    k0, k_last, s, c = _tss_consts(p)
+    i = np.asarray(i, dtype=np.int64)
+    b = i // p.P
+    j0 = (b * p.P).astype(np.float64)  # first TSS index of the batch
+    # sum_{j=j0}^{j0+P-1} max(k0 - j*c, k_last); ignore the floor-at-k_last tail
+    # correction: evaluate exactly via vectorized inner sum over P terms.
+    offs = np.arange(p.P, dtype=np.float64)
+    terms = np.maximum(k0 - (j0[..., None] + offs) * float(c), float(k_last))
+    return np.floor(terms.sum(axis=-1) / p.P)
+
+
+def _tfss_rec(i, R, prev, p: DLSParams, fb=None):
+    if i % p.P == 0:
+        k0, k_last, s, c = _tss_consts(p)
+        b = i // p.P
+        total = 0.0
+        for j in range(b * p.P, b * p.P + p.P):
+            total += max(k0 - j * c, k_last)
+        return math.floor(total / p.P)
+    return int(prev)
+
+
+# --- FISS ----------------------------------------------------------------------
+
+
+def _fiss_closed(i, p: DLSParams):
+    # Eq. 19 with the batch index (Table 2 semantics: equal chunks within a
+    # batch of P): K'_i = K0 + floor(i/P) * C
+    k0, c = _fiss_consts(p)
+    i = np.asarray(i, dtype=np.float64)
+    return np.floor(i / p.P) * float(c) + float(k0)
+
+
+def _fiss_rec(i, R, prev, p: DLSParams, fb=None):
+    k0, c = _fiss_consts(p)
+    if i == 0:
+        return k0
+    if i % p.P == 0:
+        return int(prev) + c
+    return int(prev)
+
+
+# --- VISS ----------------------------------------------------------------------
+
+
+def _viss_closed(i, p: DLSParams):
+    # VISS: increment halves every batch, floored at each halving — this is the
+    # behaviour that generates the paper's own Table 2 (62, 93, 108, ...), i.e.
+    # K_b = sum_{j=0}^{b} floor(K0_real / 2^j) with K0_real = N/((2+B)P).
+    # (Eq. 20's un-floored geometric sum gives 109 at b=2 and disagrees with
+    # the paper's table; we follow the table.)  Still a pure function of i.
+    k0_real = p.N / (p.viss_x * p.P)
+    i = np.asarray(i, dtype=np.int64)
+    batch = i // p.P
+    max_terms = max(int(math.ceil(math.log2(max(k0_real, 2.0)))) + 2, 2)
+    j = np.arange(max_terms, dtype=np.float64)
+    terms = np.floor(k0_real / np.power(2.0, j))  # [T]
+    mask = j <= batch[..., None].astype(np.float64)  # [..., T]
+    return (terms * mask).sum(axis=-1)
+
+
+def _viss_rec(i, R, prev, p: DLSParams, fb=None):
+    k0_real = p.N / (p.viss_x * p.P)
+    if i == 0:
+        return math.floor(k0_real)
+    batch = i // p.P
+    if i % p.P == 0:
+        total = 0.0
+        for j in range(batch + 1):
+            total += math.floor(k0_real / (2.0 ** j))
+        return int(total)
+    return int(prev)
+
+
+# --- RND ----------------------------------------------------------------------
+
+
+def _rnd_closed(i, p: DLSParams):
+    # Eq. 12: K_i ~ U[1, N/P]; counter-based RNG => pure function of i.
+    hi = max(int(p.N / p.P), 1)
+    u = _rnd_u01(p.seed, np.asarray(i))
+    return np.floor(u * hi) + 1.0
+
+
+def _rnd_rec(i, R, prev, p: DLSParams, fb=None):
+    hi = max(int(p.N / p.P), 1)
+    return int(_rnd_u01(p.seed, np.asarray([i]))[0] * hi) + 1
+
+
+# --- PLS ----------------------------------------------------------------------
+
+
+def _pls_closed(i, p: DLSParams):
+    # Eq. 21: first P chunks are STATIC over the SWR fraction; afterwards GSS'
+    # (Eq. 14) restarted on the dynamic remainder N*(1-SWR).
+    i = np.asarray(i, dtype=np.float64)
+    static_chunk = math.floor(p.N * p.swr / p.P)
+    n_dyn = p.N - static_chunk * p.P
+    ratio = (p.P - 1.0) / p.P
+    dyn = np.ceil(np.power(ratio, np.maximum(i - p.P, 0.0)) * (n_dyn / p.P))
+    return np.where(i < p.P, float(static_chunk), dyn)
+
+
+def _pls_rec(i, R, prev, p: DLSParams, fb=None):
+    # Step-indexed static phase (exactly P static chunks).  Eq. 13's literal
+    # condition R > N - N*SWR assigns an extra static chunk whenever N*SWR is
+    # not divisible by P (65 chunks for 64 PEs), leaving one PE a full static
+    # chunk behind — clearly not the paper's intent ("divides the loop into
+    # two parts", first part scheduled statically across the PEs).
+    if i < p.P:
+        return math.floor(p.N * p.swr / p.P)
+    return math.ceil(R / p.P)
+
+
+# --- AF (adaptive factoring; irreducibly recursive) ---------------------------
+
+
+def _af_rec(i, R, prev, p: DLSParams, fb=None):
+    """Eq. 11.  ``fb`` is a feedback object with per-PE (mu_p, sigma_p) plus
+    the id of the requesting PE; supplied by the executor/simulator.  Without
+    feedback we bootstrap from the params' global (mu, sigma), matching
+    LB4MPI's warm-up behaviour (first chunks of size ~1 until estimates form).
+    """
+    if fb is None or not getattr(fb, "ready", False):
+        return p.min_chunk  # warm-up: schedule single iterations to learn mu/sigma
+    mus = np.asarray(fb.mu_per_pe, dtype=np.float64)
+    sigmas = np.asarray(fb.sigma_per_pe, dtype=np.float64)
+    mus = np.maximum(mus, 1e-12)
+    d = float(np.sum(sigmas ** 2 / mus))
+    e = 1.0 / float(np.sum(1.0 / mus))
+    mu_p = max(float(mus[fb.requesting_pe]), 1e-12)
+    k = (d + 2.0 * e * R - math.sqrt(d * d + 4.0 * d * e * R)) / (2.0 * mu_p)
+    return max(int(k), p.min_chunk)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+TECHNIQUES: Dict[str, Technique] = {
+    "static": Technique("static", "fixed", _static_closed, _static_rec),
+    "ss": Technique("ss", "fixed", _ss_closed, _ss_rec),
+    "fsc": Technique("fsc", "fixed", _fsc_closed, _fsc_rec),
+    "gss": Technique("gss", "decreasing", _gss_closed, _gss_rec),
+    "tap": Technique("tap", "decreasing", _tap_closed, _tap_rec),
+    "tss": Technique("tss", "decreasing", _tss_closed, _tss_rec),
+    "fac": Technique("fac", "decreasing", _fac_closed, _fac_rec, batched=True),
+    "tfss": Technique("tfss", "decreasing", _tfss_closed, _tfss_rec, batched=True),
+    "fiss": Technique("fiss", "increasing", _fiss_closed, _fiss_rec, batched=True),
+    "viss": Technique("viss", "increasing", _viss_closed, _viss_rec, batched=True),
+    "rnd": Technique("rnd", "irregular", _rnd_closed, _rnd_rec),
+    "pls": Technique("pls", "decreasing", _pls_closed, _pls_rec),
+    "af": Technique("af", "irregular", None, _af_rec, requires_feedback=True),
+}
+
+
+def technique_names(dca_only: bool = False):
+    return [n for n, t in TECHNIQUES.items() if (t.dca_supported or not dca_only)]
+
+
+def get_technique(name: str) -> Technique:
+    key = name.lower()
+    if key not in TECHNIQUES:
+        raise KeyError(f"unknown DLS technique {name!r}; have {sorted(TECHNIQUES)}")
+    return TECHNIQUES[key]
+
+
+def closed_form_sizes(name: str, i, params: DLSParams) -> np.ndarray:
+    """Vectorized DCA chunk sizes (pre-clamp, float64) for step indices ``i``."""
+    tech = get_technique(name)
+    if tech.closed_form is None:
+        raise ValueError(
+            f"technique {name!r} has no straightforward (closed-form) formula; "
+            "the paper (Sec. 4) requires extra synchronization for it under DCA"
+        )
+    raw = tech.closed_form(np.asarray(i), params)
+    return np.maximum(raw, float(params.min_chunk))

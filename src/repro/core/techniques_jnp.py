@@ -1,0 +1,172 @@
+"""Closed-form (DCA) chunk calculators in pure jnp — jit/shard_map/Pallas-safe.
+
+These mirror ``techniques.closed_form_sizes`` (numpy/float64 host versions) in
+float32/int32 so they can run inside compiled TPU programs: the device-level
+BSP self-scheduler (core/sspmd.py) and the Pallas chunk kernel
+(kernels/dls_chunks) both call into this module.
+
+Techniques are addressed by a stable integer id (``TECH_IDS``) so a technique
+can be a traced scalar selected with ``lax.switch`` — the schedule technique
+then becomes a runtime input instead of a recompilation trigger.
+
+Parameters travel as a flat float32 vector (``pack_params``) with layout:
+    [N, P, h, sigma, mu, va, fiss_b, viss_x, swr, min_chunk, seed]
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .techniques import DLSParams
+
+__all__ = ["TECH_IDS", "TECH_NAMES_DCA", "pack_params", "sizes_for_steps", "PARAM_LEN"]
+
+# DCA-capable techniques only (AF excluded — no closed form; paper Sec. 4).
+TECH_NAMES_DCA: Sequence[str] = (
+    "static", "ss", "fsc", "gss", "tap", "tss",
+    "fac", "tfss", "fiss", "viss", "rnd", "pls",
+)
+TECH_IDS = {n: i for i, n in enumerate(TECH_NAMES_DCA)}
+
+PARAM_LEN = 11
+(_N, _P, _H, _SIGMA, _MU, _VA, _FISS_B, _VISS_X, _SWR, _MINK, _SEED) = range(PARAM_LEN)
+
+
+def pack_params(p: DLSParams) -> jnp.ndarray:
+    """DLSParams -> flat float32 vector usable as a traced argument."""
+    return jnp.asarray(
+        [p.N, p.P, p.h, p.sigma, p.mu, p.va, p.fiss_b, p.viss_x, p.swr,
+         p.min_chunk, p.seed],
+        dtype=jnp.float32,
+    )
+
+
+# --- individual closed forms (i: float32 array of step indices) -------------
+
+
+def _static(i, pv):
+    base = jnp.floor(pv[_N] / pv[_P])
+    rem = pv[_N] - base * pv[_P]
+    return jnp.where(i < pv[_P], base + (i < rem), 1.0)
+
+
+def _ss(i, pv):
+    return jnp.ones_like(i)
+
+
+def _fsc(i, pv):
+    logp = jnp.log2(jnp.maximum(pv[_P], 2.0))
+    k = (jnp.sqrt(2.0) * pv[_N] * pv[_H]) / (pv[_SIGMA] * pv[_P] * jnp.sqrt(logp) + 1e-30)
+    return jnp.full_like(i, jnp.floor(k))
+
+
+def _pow_ratio(i, ratio):
+    # exp/log formulation: pow with traced float exponent lowers poorly on
+    # TPU.  Guard ratio -> max(ratio, tiny) so P=1 (ratio 0) yields 0^0 = 1 at
+    # i=0 and ~0 (clamped to min_chunk) afterwards instead of nan.
+    return jnp.exp(i * jnp.log(jnp.maximum(ratio, 1e-30)))
+
+
+def _gss(i, pv):
+    ratio = (pv[_P] - 1.0) / pv[_P]
+    return jnp.ceil(_pow_ratio(i, ratio) * (pv[_N] / pv[_P]))
+
+
+def _tap(i, pv):
+    ratio = (pv[_P] - 1.0) / pv[_P]
+    raw = _pow_ratio(i, ratio) * (pv[_N] / pv[_P])
+    va = pv[_VA]
+    return jnp.ceil(raw + va * va / 2.0 - va * jnp.sqrt(2.0 * raw + va * va / 4.0))
+
+
+def _tss_consts(pv):
+    k0 = jnp.ceil(pv[_N] / (2.0 * pv[_P]))
+    s = jnp.ceil(2.0 * pv[_N] / (k0 + 1.0))
+    c = jnp.floor((k0 - 1.0) / jnp.maximum(s - 1.0, 1.0))
+    return k0, c
+
+
+def _tss(i, pv):
+    k0, c = _tss_consts(pv)
+    return jnp.maximum(k0 - i * c, 1.0)
+
+
+def _fac(i, pv):
+    i_new = jnp.floor(i / pv[_P]) + 1.0
+    return jnp.ceil(jnp.exp2(-i_new) * (pv[_N] / pv[_P]))
+
+
+def _tfss(i, pv):
+    k0, c = _tss_consts(pv)
+    b = jnp.floor(i / pv[_P])
+    j0 = b * pv[_P]
+    # mean of P consecutive TSS terms starting at j0, with the max(.,1) clamp
+    # handled exactly via the closed form of a clamped arithmetic series:
+    # terms t_j = max(k0 - (j0+j)*c, 1), j in [0,P).  Let m = number of
+    # unclamped terms = clip(ceil(((k0-1)/c - j0)), 0, P) (c>0 case).
+    p_ = pv[_P]
+    safe_c = jnp.maximum(c, 1e-9)
+    m = jnp.clip(jnp.ceil((k0 - 1.0) / safe_c - j0), 0.0, p_)
+    # sum of unclamped arithmetic part: m*k0 - c*(m*j0 + m*(m-1)/2)
+    s_unclamped = m * k0 - c * (m * j0 + m * (m - 1.0) / 2.0)
+    total = jnp.where(c > 0, s_unclamped + (p_ - m) * 1.0, p_ * k0)
+    return jnp.floor(total / p_)
+
+
+def _fiss(i, pv):
+    b = pv[_FISS_B]
+    k0 = jnp.floor(pv[_N] / ((2.0 + b) * pv[_P]))
+    cc = jnp.floor((2.0 * pv[_N] * (1.0 - b / (2.0 + b))) / (pv[_P] * b * jnp.maximum(b - 1.0, 1.0)))
+    return k0 + jnp.floor(i / pv[_P]) * cc
+
+
+def _viss(i, pv):
+    k0_real = pv[_N] / (pv[_VISS_X] * pv[_P])
+    batch = jnp.floor(i / pv[_P])
+    j = jnp.arange(32, dtype=jnp.float32)  # halving terms; 2^32 bounds any K0
+    terms = jnp.floor(k0_real * jnp.exp2(-j))
+    mask = j[None, :] <= batch[..., None]
+    return jnp.sum(terms[None, :] * mask, axis=-1)
+
+
+def _rnd_u01_u32(seed, i_u32):
+    x = i_u32 * jnp.uint32(0x9E3779B9) ^ (seed * jnp.uint32(0x85EBCA6B) + jnp.uint32(0xC2B2AE35))
+    x = (x ^ (x >> jnp.uint32(16))) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> jnp.uint32(15))) * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> jnp.uint32(16))
+    return x.astype(jnp.float32) / jnp.float32(4294967296.0)
+
+
+def _rnd(i, pv):
+    hi = jnp.maximum(jnp.floor(pv[_N] / pv[_P]), 1.0)
+    u = _rnd_u01_u32(pv[_SEED].astype(jnp.uint32), i.astype(jnp.uint32))
+    return jnp.floor(u * hi) + 1.0
+
+
+def _pls(i, pv):
+    static_chunk = jnp.floor(pv[_N] * pv[_SWR] / pv[_P])
+    n_dyn = pv[_N] - static_chunk * pv[_P]
+    ratio = (pv[_P] - 1.0) / pv[_P]
+    dyn = jnp.ceil(_pow_ratio(jnp.maximum(i - pv[_P], 0.0), ratio) * (n_dyn / pv[_P]))
+    return jnp.where(i < pv[_P], static_chunk, dyn)
+
+
+_FNS = (_static, _ss, _fsc, _gss, _tap, _tss, _fac, _tfss, _fiss, _viss, _rnd, _pls)
+
+
+def sizes_for_steps(tech_id, i, pv):
+    """DCA chunk sizes for step indices ``i`` (float32) — pure function of i.
+
+    tech_id may be a Python int (static dispatch, Pallas-friendly) or a traced
+    scalar (lax.switch dispatch).
+    """
+    i = jnp.asarray(i, dtype=jnp.float32)
+    if isinstance(tech_id, (int, np.integer)):
+        raw = _FNS[int(tech_id)](i, pv)
+    else:
+        raw = jax.lax.switch(tech_id, list(_FNS), i, pv)
+    return jnp.maximum(raw, pv[_MINK])

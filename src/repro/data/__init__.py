@@ -1,0 +1,5 @@
+from .corpus import SyntheticCorpus
+from .scheduler import DLSBatchScheduler
+from .packing import pack_documents
+
+__all__ = ["SyntheticCorpus", "DLSBatchScheduler", "pack_documents"]

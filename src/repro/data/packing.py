@@ -1,0 +1,37 @@
+"""Sequence packing: concatenate documents into fixed [B, S] training rows."""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+import numpy as np
+
+__all__ = ["pack_documents"]
+
+
+def pack_documents(docs: Iterable[np.ndarray], batch: int, seq_len: int,
+                   pad_id: int = 0):
+    """Greedy-concatenate docs into `batch` rows of seq_len+1 tokens, then
+    split into (tokens, labels) with next-token alignment.  Leftover tokens
+    are returned for the next call (no data dropped)."""
+    need = batch * (seq_len + 1)
+    buf: List[np.ndarray] = []
+    have = 0
+    leftover = None
+    for d in docs:
+        if have >= need:
+            leftover = d
+            break
+        buf.append(d)
+        have += len(d)
+    stream = np.concatenate(buf) if buf else np.zeros(0, np.int32)
+    if len(stream) < need:
+        stream = np.pad(stream, (0, need - len(stream)), constant_values=pad_id)
+    rest = stream[need:]
+    rows = stream[:need].reshape(batch, seq_len + 1)
+    tokens = rows[:, :-1].astype(np.int32)
+    labels = rows[:, 1:].astype(np.int32)
+    extras = [rest] if len(rest) else []
+    if leftover is not None:
+        extras.append(leftover)
+    return tokens, labels, (np.concatenate(extras) if extras else np.zeros(0, np.int32))

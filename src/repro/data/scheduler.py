@@ -1,0 +1,111 @@
+"""DLS-driven data scheduling: the paper's technique as a first-class feature
+of the input pipeline.
+
+The iteration space is the document stream; "PEs" are the data-parallel
+groups.  Each group self-assigns document chunks using the DCA closed forms —
+every rank computes its own (offset, size) from the shared step counter with
+zero coordinator involvement, so:
+
+  * no rank ever blocks on a scheduler rank (the paper's 100 us scenario);
+  * restart state is ONE integer (the scheduling step) — checkpoint/resume
+    and elastic P changes are O(1) (closed forms are pure functions of i and
+    re-evaluate instantly for a new P; see checkpoint/elastic.py).
+
+Variable document lengths make chunk *cost* variable; decreasing-chunk
+techniques (FAC2/GSS) assign finer chunks near the epoch tail exactly like
+the paper's loop iterations, balancing the per-group token counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.schedule import Schedule, build_schedule_cca, build_schedule_dca
+from repro.core.techniques import DLSParams
+
+from .corpus import SyntheticCorpus
+from .packing import pack_documents
+
+__all__ = ["DLSBatchScheduler"]
+
+
+class DLSBatchScheduler:
+    """Self-scheduling document->DP-group assignment + batch assembly."""
+
+    def __init__(
+        self,
+        corpus: SyntheticCorpus,
+        n_groups: int,
+        technique: str = "fac",
+        mode: str = "dca",
+        seed: int = 0,
+    ):
+        self.corpus = corpus
+        self.n_groups = n_groups
+        self.technique = technique
+        self.mode = mode
+        params = DLSParams(N=corpus.n_docs, P=n_groups, seed=seed)
+        self.schedule: Schedule = (
+            build_schedule_dca(technique, params)
+            if mode == "dca"
+            else build_schedule_cca(technique, params)
+        )
+        # deterministic round-robin of schedule steps to groups: step i is
+        # claimed by group (i mod P) — the BSP specialization of the paper's
+        # "first free PE" (core/sspmd.py), reproducible for restart
+        self.step = 0  # the ONE piece of restart state
+        self._residual: Dict[int, np.ndarray] = {g: np.zeros(0, np.int32) for g in range(n_groups)}
+
+    # -- restart / elasticity --------------------------------------------------
+
+    def state_dict(self) -> dict:
+        return {"step": self.step, "technique": self.technique, "mode": self.mode}
+
+    def load_state_dict(self, st: dict) -> None:
+        self.step = int(st["step"])  # O(1) restore — closed forms need no replay
+
+    # -- assignment -------------------------------------------------------------
+
+    def chunk_for(self, step: int) -> tuple:
+        """(doc_lo, doc_hi) for scheduling step; pure function of step."""
+        if step >= self.schedule.num_steps:
+            step = step % self.schedule.num_steps  # epoch wrap
+        lo = int(self.schedule.offsets[step])
+        hi = lo + int(self.schedule.sizes[step])
+        return lo, hi
+
+    def next_group_assignments(self) -> Dict[int, tuple]:
+        """One scheduling round: group g claims step (self.step + g)."""
+        out = {}
+        for g in range(self.n_groups):
+            out[g] = self.chunk_for(self.step + g)
+        self.step += self.n_groups
+        return out
+
+    def next_batch(self, group: int, batch: int, seq_len: int):
+        """Assemble this group's next (tokens, labels) from its claimed docs."""
+        lo, hi = self.chunk_for(self.step + group)
+        docs = [self._residual[group]] if len(self._residual[group]) else []
+        docs += [self.corpus.doc(i) for i in range(lo, hi)]
+        tokens, labels, rest = pack_documents(docs, batch, seq_len)
+        self._residual[group] = rest
+        return tokens, labels
+
+    def advance(self) -> None:
+        self.step += self.n_groups
+
+    # -- diagnostics -------------------------------------------------------------
+
+    def group_token_loads(self, n_rounds: int) -> np.ndarray:
+        """Projected token counts per group over n_rounds — load-balance metric
+        used by benchmarks/data_balance.py."""
+        loads = np.zeros(self.n_groups)
+        costs = self.corpus.cost_proxy()
+        for r in range(n_rounds):
+            for g in range(self.n_groups):
+                lo, hi = self.chunk_for(r * self.n_groups + g)
+                loads[g] += costs[lo:hi].sum()
+        return loads

@@ -1,0 +1,21 @@
+"""TPU Pallas kernels for the framework's compute hot spots.
+
+Three kernels, each a subpackage with:
+  kernel.py — pl.pallas_call body + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (padding, reshapes, interpret switch)
+  ref.py    — pure-jnp oracle used by the per-kernel allclose test sweeps
+
+  dls_chunks       the paper's chunk calculation, TPU-vectorized: closed-form
+                   chunk sizes for a tile of scheduling steps + carried
+                   prefix-sum assignment (DESIGN.md Sec. 2)
+  flash_attention  blocked online-softmax attention (causal / sliding-window /
+                   GQA) — the LM stack's dominant FLOP consumer
+  mamba_scan       chunked selective-scan for Mamba blocks (falcon-mamba,
+                   jamba) — sequential grid over sequence chunks with the SSM
+                   state carried in VMEM scratch
+
+Kernels are validated in interpret mode on CPU (this container has no TPU);
+BlockSpecs are shaped for v5e VMEM/MXU (128-aligned tiles).
+"""
+
+from . import dls_chunks, flash_attention, mamba_scan  # noqa: F401

@@ -1,0 +1,2 @@
+from .ops import dls_chunk_schedule  # noqa: F401
+from .ref import dls_chunk_schedule_ref  # noqa: F401

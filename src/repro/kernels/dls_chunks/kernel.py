@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: vectorized DLS chunk-schedule computation.
+
+The paper's DCA makes every chunk size a pure function of its step index; on
+TPU this means the *entire* schedule is a data-parallel map over step indices
+plus one prefix sum for the assignment offsets.  This kernel computes both:
+
+  grid step b handles a (ROWS x 128) tile of scheduling steps:
+    1. chunk calculation — evaluate the technique's closed form on the tile
+       (VPU elementwise math, steps laid out over sublanes x lanes);
+    2. chunk assignment — within-tile exclusive prefix sum + a carry scalar
+       (SMEM scratch) accumulated across the sequential grid, replacing the
+       MPI fetch-and-add chain of length S with ceil(S/1024) sequential grid
+       steps of O(1) carry work.
+
+Tiles are (8, 128) multiples => VMEM-aligned for the v5e VPU; the technique
+id and DLS parameters are Python-static (one compiled kernel per technique,
+like one schedule object per loop in LB4MPI).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.techniques_jnp import sizes_for_steps
+
+ROWS = 8  # sublanes per tile
+LANES = 128  # lanes per tile
+TILE = ROWS * LANES  # scheduling steps per grid step
+
+
+def _flat_exclusive_cumsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Exclusive prefix sum of an (ROWS, LANES) tile in row-major order."""
+    within_row = jnp.cumsum(x, axis=1) - x  # exclusive along lanes
+    row_totals = jnp.sum(x, axis=1)  # (ROWS,)
+    row_prefix = jnp.cumsum(row_totals) - row_totals  # exclusive over rows
+    return within_row + row_prefix[:, None]
+
+
+def _dls_chunks_kernel(sizes_ref, offsets_ref, carry_ref, *, tech_id, pv_tuple):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        carry_ref[0] = 0
+
+    # params as *static* numpy scalars (Pallas kernels may not capture traced
+    # constants; these fold into the kernel body like LB4MPI's per-loop state)
+    pv = tuple(np.float32(x) for x in pv_tuple)
+    n_total = jnp.int32(pv_tuple[0])
+
+    # -- chunk calculation (data-parallel over the tile; the paper's DCA) ----
+    rows = jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (ROWS, LANES), 1)
+    steps = b * TILE + rows * LANES + cols
+    raw = sizes_for_steps(tech_id, steps.astype(jnp.float32), pv)
+    raw = jnp.clip(jnp.round(raw), 1.0, float(pv[0])).astype(jnp.int32)
+
+    # -- chunk assignment (prefix sum + carried queue head) ------------------
+    lp0 = carry_ref[0]
+    excl = _flat_exclusive_cumsum(raw)
+    starts = lp0 + excl
+    sizes = jnp.clip(n_total - starts, 0, raw)
+
+    sizes_ref[...] = sizes
+    offsets_ref[...] = jnp.clip(starts, 0, n_total)
+    # saturate the queue head at N: raw sizes of *increasing* techniques keep
+    # growing past the end of the loop and their unclamped prefix sum would
+    # overflow int32 (supported range: N <= ~1e6 per tile-sum bound)
+    carry_ref[0] = jnp.minimum(lp0 + jnp.sum(raw), n_total)
+
+
+def dls_chunks_pallas(tech_id: int, pv_tuple: tuple, num_tiles: int, interpret: bool = True):
+    """Build the pallas_call for ``num_tiles`` tiles of TILE scheduling steps.
+
+    Returns (sizes, offsets) as (num_tiles*ROWS, LANES) int32 arrays in
+    row-major step order.  ``pv_tuple`` is the packed DLSParams vector as a
+    static tuple of floats (see techniques_jnp.pack_params).
+    """
+    kernel = functools.partial(_dls_chunks_kernel, tech_id=tech_id, pv_tuple=pv_tuple)
+    out_rows = num_tiles * ROWS
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        out_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda b: (b, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((out_rows, LANES), jnp.int32),
+            jax.ShapeDtypeStruct((out_rows, LANES), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),  # carry => sequential grid
+        ),
+        interpret=interpret,
+        name=f"dls_chunks_tech{tech_id}",
+    )()

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper around the dls_chunks Pallas kernel."""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.techniques import DLSParams
+from repro.core.techniques_jnp import TECH_IDS, pack_params
+
+from .kernel import TILE, dls_chunks_pallas
+
+
+def dls_chunk_schedule(
+    technique: str,
+    params: DLSParams,
+    max_steps: int | None = None,
+    interpret: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Compute the full DCA schedule on-device.
+
+    Returns (sizes, offsets) int32 [S_padded] in step order; entries with
+    size 0 are past the end of the loop.  ``interpret=True`` runs the kernel
+    body on CPU (this container); pass False on real TPU.
+    """
+    tech_id = TECH_IDS[technique]
+    if max_steps is None:
+        max_steps = int(math.ceil(params.N / max(params.min_chunk, 1)))
+    num_tiles = max(int(math.ceil(max_steps / TILE)), 1)
+    pv_tuple = tuple(float(x) for x in np.asarray(pack_params(params)))
+    sizes, offsets = dls_chunks_pallas(tech_id, pv_tuple, num_tiles, interpret=interpret)
+    return sizes.reshape(-1), offsets.reshape(-1)

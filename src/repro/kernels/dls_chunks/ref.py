@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the dls_chunks kernel (identical float32/int32 semantics).
+
+Mirrors the kernel's tile-wise evaluation: within-tile exclusive prefix sums
+and a queue-head carry saturated at N between tiles (which is what keeps the
+int32 arithmetic in range for increasing techniques — see kernel.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.techniques_jnp import sizes_for_steps
+
+from .kernel import TILE
+
+
+def dls_chunk_schedule_ref(tech_id: int, pv: jnp.ndarray, max_steps: int):
+    """(sizes, offsets) int32 [max_steps_padded]; zero-size entries mark the
+    drained tail.  Mirrors core.schedule.build_schedule_dca in f32/jnp."""
+    pv = jnp.asarray(pv, dtype=jnp.float32)
+    pad = (-max_steps) % TILE
+    n_steps = max_steps + pad
+    steps = jnp.arange(n_steps, dtype=jnp.float32)
+    raw = sizes_for_steps(tech_id, steps, pv)
+    raw = jnp.clip(jnp.round(raw), 1.0, pv[0]).astype(jnp.int32)
+    n_total = pv[0].astype(jnp.int32)
+
+    tiles = raw.reshape(-1, TILE)
+
+    def tile_step(lp0, tile_raw):
+        excl = jnp.cumsum(tile_raw) - tile_raw
+        starts = lp0 + excl
+        sizes = jnp.clip(n_total - starts, 0, tile_raw)
+        offsets = jnp.clip(starts, 0, n_total)
+        return jnp.minimum(lp0 + jnp.sum(tile_raw), n_total), (sizes, offsets)
+
+    _, (sizes, offsets) = jax.lax.scan(tile_step, jnp.int32(0), tiles)
+    return sizes.reshape(-1)[:max_steps], offsets.reshape(-1)[:max_steps]

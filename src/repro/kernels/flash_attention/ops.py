@@ -1,0 +1,50 @@
+"""Public wrapper: pads sequence to block multiples, dispatches Pallas/ref.
+
+The model stack calls ``flash_attention`` with ``backend='auto'``: Pallas on
+TPU, reference-jnp elsewhere (XLA fuses it well enough for CPU tests, and the
+dry-run path needs lowerable-everywhere HLO).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    backend: str = "auto",  # 'pallas' | 'ref' | 'pallas_interpret' | 'auto'
+) -> jnp.ndarray:
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return attention_ref(q, k, v, causal=causal, window=window, sm_scale=sm_scale)
+
+    interpret = backend == "pallas_interpret"
+    b, hq, s, d = q.shape
+    sk = k.shape[2]
+    pad_q = (-s) % block_q
+    pad_k = (-sk) % block_k
+    if pad_q or pad_k:
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    else:
+        qp, kp, vp = q, k, v
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, window=window, sm_scale=sm_scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out[:, :, :s, :]

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for flash_attention: dense softmax attention with the same
+causal / sliding-window / GQA semantics."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(d)
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * sm_scale
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    denom = p.sum(axis=-1, keepdims=True)
+    p = jnp.where(denom == 0.0, 0.0, p / jnp.where(denom == 0.0, 1.0, denom))
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Public wrapper for the Mamba selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import mamba_scan_pallas
+from .ref import mamba_scan_ref
+
+
+def mamba_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    c: jnp.ndarray,
+    d_skip: jnp.ndarray,
+    *,
+    block_l: int = 128,
+    block_d: int = 512,
+    backend: str = "auto",  # 'pallas' | 'ref' | 'pallas_interpret' | 'auto'
+) -> jnp.ndarray:
+    if backend == "auto":
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend == "ref":
+        return mamba_scan_ref(x, dt, a, b, c, d_skip)
+    interpret = backend == "pallas_interpret"
+    bsz, l, d = x.shape
+    block_l = min(block_l, l)
+    block_d = min(block_d, d)
+    assert l % block_l == 0 and d % block_d == 0
+    return mamba_scan_pallas(
+        x, dt, a, b, c, d_skip,
+        block_l=block_l, block_d=block_d, interpret=interpret,
+    )

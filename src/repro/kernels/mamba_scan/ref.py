@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan (lax.scan over time)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(
+    x: jnp.ndarray,  # [B, L, D]
+    dt: jnp.ndarray,  # [B, L, D] (post-softplus)
+    a: jnp.ndarray,  # [D, N]
+    b: jnp.ndarray,  # [B, L, N]
+    c: jnp.ndarray,  # [B, L, N]
+    d_skip: jnp.ndarray,  # [D]
+    h0: jnp.ndarray | None = None,  # [B, D, N]
+) -> jnp.ndarray:
+    bsz, l, d = x.shape
+    n = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs  # [B,D], [B,D], [B,N], [B,N]
+        da = jnp.exp(dt_t[..., None] * af[None])  # [B, D, N]
+        dbx = (dt_t * x_t)[..., None] * b_t[:, None, :]  # [B, D, N]
+        h = da * h + dbx
+        y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y_t
+
+    init = h0.astype(jnp.float32) if h0 is not None else jnp.zeros((bsz, d, n), jnp.float32)
+    with jax.named_scope("mamba_time_scan"):  # roofline: x L
+        _, ys = jax.lax.scan(
+            step,
+            init,
+            (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), bf.swapaxes(0, 1), cf.swapaxes(0, 1)),
+        )
+    y = ys.swapaxes(0, 1) + xf * d_skip.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype)
+
+
+def mamba_scan_step_ref(x_t, dt_t, a, b_t, c_t, d_skip, h):
+    """Single decode step: returns (y_t, new_h).  Shapes: x_t/dt_t [B,D],
+    b_t/c_t [B,N], h [B,D,N]."""
+    af = a.astype(jnp.float32)
+    da = jnp.exp(dt_t.astype(jnp.float32)[..., None] * af[None])
+    dbx = (dt_t * x_t).astype(jnp.float32)[..., None] * b_t.astype(jnp.float32)[:, None, :]
+    h = da * h.astype(jnp.float32) + dbx
+    y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32)) + x_t * d_skip[None, :]
+    return y.astype(x_t.dtype), h

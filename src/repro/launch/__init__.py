@@ -1,0 +1,6 @@
+"""Launch layer: meshes, sharding rules, runtime plans, dry-run, training."""
+
+from .mesh import make_local_mesh, make_production_mesh
+from .rules import build_rules, mesh_axes, plan_for
+
+__all__ = ["make_production_mesh", "make_local_mesh", "build_rules", "plan_for", "mesh_axes"]

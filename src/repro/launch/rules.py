@@ -1,0 +1,160 @@
+"""Per-(arch, shape, mesh) sharding rules and runtime plans.
+
+This is where the generic logical-axis system meets the concrete configs:
+divisibility decides which logical axes actually shard (e.g. llama3's 8 KV
+heads cannot shard over model=16, so the GQA *group* dim carries the model
+axis instead; granite's vocab 49155 is not 16-divisible, so vocab stays
+replicated), and model size decides FSDP / microbatching / state dtypes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingRules
+from repro.train.step import RuntimePlan
+
+__all__ = ["build_rules", "plan_for", "mesh_axes"]
+
+FSDP_THRESHOLD = 8e9  # params; above this, weights shard over "data" too
+
+
+def mesh_axes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def build_rules(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: ShapeSpec,
+    *,
+    seq_shard: Optional[bool] = None,
+    fsdp: Optional[bool] = None,
+    tp_off: bool = False,
+) -> ShardingRules:
+    """tp_off: no tensor parallelism — the model axis joins the batch axes
+    (pure DP).  The right call for models tiny relative to the pod (whisper:
+    §Perf hillclimb B)."""
+    ax = mesh_axes(mesh)
+    model = ax.get("model", 1)
+    data = ax.get("data", 1)
+    multi_pod = "pod" in ax
+    if tp_off:
+        dp: object = ("pod", "data", "model") if multi_pod else ("data", "model")
+        dp_total = data * ax.get("pod", 1) * ax.get("model", 1)
+    else:
+        dp = ("pod", "data") if multi_pod else "data"
+        dp_total = data * ax.get("pod", 1)
+
+    div = lambda n, m: (n > 0 and n % m == 0)
+
+    n_params = cfg.param_count()
+    if fsdp is None:
+        fsdp = n_params > FSDP_THRESHOLD
+    # FSDP spans every data-parallel axis (incl. "pod" on the multi-pod mesh:
+    # 512-way weight/optimizer sharding is the point of the second pod for the
+    # >=400B archs — deepseek train drops 18.9 -> ~10 GB/device)
+    fsdp_axes = dp if isinstance(dp, tuple) else (dp,)
+    fsdp_total = dp_total
+    fsdp = fsdp and div(cfg.d_model, fsdp_total)
+
+    heads_ok = div(cfg.n_heads, model)
+    kv_ok = div(cfg.n_kv_heads, model)
+    group = cfg.n_heads // max(cfg.n_kv_heads, 1) if cfg.n_kv_heads else 0
+    group_ok = (not kv_ok) and div(group, model)
+    vocab_ok = div(cfg.vocab, model)
+    mlp_ok = div(cfg.d_ff, model)
+    experts_ok = div(cfg.n_experts, model)
+    expert_ffn_ok = div(cfg.d_ff_expert or cfg.d_ff, model)
+    ssm_ok = div(cfg.d_inner, model) if cfg.d_inner else False
+    lora = max(cfg.q_lora_rank, cfg.kv_lora_rank)
+
+    if seq_shard is None:
+        # SP for big-model training/prefill: shards the per-layer saved
+        # activations (scan carries) over "model" — required to fit >=100B
+        seq_shard = shape.kind in ("train", "prefill") and n_params > 30e9
+    seq_shard = seq_shard and div(shape.seq_len, model)
+
+    # decode cache sequence: over model; spill onto the DP axes too when the
+    # batch can't use them (long-context batch=1)
+    batch_ok = div(shape.global_batch, dp_total)
+    if shape.kind == "decode" and not batch_ok:
+        kv_seq: object = (("pod", "data", "model") if multi_pod else ("data", "model"))
+        batch_axis = None
+    else:
+        kv_seq = "model"
+        batch_axis = dp
+
+    rules = {
+        # -- weights ----------------------------------------------------------
+        "vocab": "model" if vocab_ok else None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        # grouped GQA layout: shard the group dim when kv heads can't split
+        "heads_group": "model" if (not kv_ok and group_ok) else None,
+        "mlp": "model" if mlp_ok else None,
+        "experts": "model" if experts_ok else None,
+        "expert_ffn": None if experts_ok else ("model" if expert_ffn_ok else None),
+        "embed": fsdp_axes if fsdp else None,
+        "embed_unsharded": None,
+        "layers": None,
+        "ssm_inner": "model" if ssm_ok else None,
+        "ssm_state": None,
+        "lora": None,
+        # -- activations -------------------------------------------------------
+        "batch": batch_axis,
+        "seq": "model" if seq_shard else None,
+        "kv_seq": kv_seq,
+        "act_embed": None,
+        # grouped-attention activation sharding: kv dim if it divides, else
+        # the group dim (spec dedup keeps only the first "model" occurrence)
+        "act_heads": "model" if (heads_ok or group_ok) else None,
+        "act_mlp": "model" if mlp_ok else None,
+    }
+    if tp_off:  # pure DP: nothing shards over "model" except the batch
+        for k, v in rules.items():
+            if v == "model" and k != "batch":
+                rules[k] = None
+    return ShardingRules(rules=rules, mesh=mesh)
+
+
+def plan_for(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> RuntimePlan:
+    ax = mesh_axes(mesh)
+    dp_total = ax.get("data", 1) * ax.get("pod", 1)
+    n_params = cfg.param_count()
+    big = n_params > 100e9
+    mid = n_params > 20e9
+
+    if shape.kind != "train":
+        return RuntimePlan(
+            n_microbatches=1,
+            remat_policy="none",
+            attn_k_block=2048 if shape.seq_len >= 32_768 else 1024,
+            grad_dtype="float32",
+            opt_state_dtype="float32",
+        )
+
+    # microbatches: n_micro must divide global_batch AND leave a dp_total-
+    # divisible microbatch.  §Perf hillclimb: FSDP weight all-gathers scale
+    # linearly with n_micro (llama3 train collective: 294s @16 -> 175s @4 with
+    # peak memory still args-bound), so prefer the smallest count that fits.
+    per_dev = max(shape.global_batch // dp_total, 1)
+    want = 4 if (big or mid) else 1
+    n_micro = 1
+    for cand in (16, 8, 4, 2, 1):
+        if cand <= want and shape.global_batch % (cand * dp_total) == 0:
+            n_micro = cand
+            break
+
+    return RuntimePlan(
+        n_microbatches=n_micro,
+        remat_policy="full",
+        attn_k_block=1024,
+        grad_dtype="bfloat16" if big else "float32",
+        opt_state_dtype="bfloat16" if big else "float32",
+    )

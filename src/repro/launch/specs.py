@@ -1,0 +1,145 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates a real array.  Shardings are attached to the SDS so jit infers
+in_shardings directly."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.shapes import ShapeSpec
+from repro.models import abstract_params, init_decode_caches, model_defs
+from repro.models.attention import KVCache, MLACache, gqa_init_cache
+from repro.models.config import ModelConfig
+from repro.models.mamba import MambaCache
+from repro.models.sharding import ShardingRules
+from repro.models.whisper import WhisperDecodeState, whisper_defs
+from repro.optim import adamw_state_defs
+
+__all__ = ["model_param_defs", "abstract_model_params", "abstract_opt_state",
+           "input_specs", "decode_state_specs"]
+
+
+def model_param_defs(cfg: ModelConfig):
+    return whisper_defs(cfg) if cfg.family == "audio" else model_defs(cfg)
+
+
+def abstract_model_params(cfg: ModelConfig, rules: Optional[ShardingRules] = None):
+    return abstract_params(model_param_defs(cfg), cfg.param_dtype, rules)
+
+
+def abstract_opt_state(cfg: ModelConfig, rules: Optional[ShardingRules], state_dtype: str):
+    from repro.optim.adamw import AdamWState
+
+    defs = adamw_state_defs(model_param_defs(cfg), state_dtype)
+    mv = abstract_params(defs, state_dtype, rules)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return AdamWState(step=step, m=mv["m"], v=mv["v"])
+
+
+def _sds(shape, dtype, rules: Optional[ShardingRules], logical):
+    sharding = rules.shard(logical) if rules is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, rules: Optional[ShardingRules] = None):
+    """Batch stand-ins for train/prefill; decode tokens for decode."""
+    gb = shape.global_batch
+    if shape.kind == "decode":
+        return {"tokens": _sds((gb, 1), jnp.int32, rules, ("batch", None))}
+
+    if cfg.family == "audio":
+        s_dec = shape.seq_len
+        return {
+            "tokens": _sds((gb, s_dec), jnp.int32, rules, ("batch", None)),
+            "labels": _sds((gb, s_dec), jnp.int32, rules, ("batch", None)),
+            "frame_embeds": _sds((gb, cfg.encoder_ctx, cfg.d_model), jnp.bfloat16,
+                                 rules, ("batch", None, None)),
+        }
+
+    batch = {}
+    s_tok = shape.seq_len
+    if cfg.family == "vlm":
+        # total sequence = image prefix + text = the assigned seq_len
+        s_tok = shape.seq_len - cfg.num_image_tokens
+        batch["image_embeds"] = _sds((gb, cfg.num_image_tokens, cfg.d_model),
+                                     jnp.bfloat16, rules, ("batch", None, None))
+    batch["tokens"] = _sds((gb, s_tok), jnp.int32, rules, ("batch", None))
+    if shape.kind == "train":
+        batch["labels"] = _sds((gb, s_tok), jnp.int32, rules, ("batch", None))
+    return batch
+
+
+def _cache_logical(cfg: ModelConfig, mixer: str):
+    """Logical axis tuples for one stacked block cache (leading 'layers')."""
+    if mixer == "attn" and cfg.attention == "mla":
+        return MLACache(
+            c_kv=("layers", "batch", "kv_seq", None),
+            k_rope=("layers", "batch", "kv_seq", None),
+            pos=("layers", "batch"),
+        )
+    if mixer == "attn":
+        return KVCache(
+            k=("layers", "batch", "kv_seq", "kv_heads", None),
+            v=("layers", "batch", "kv_seq", "kv_heads", None),
+            pos=("layers", "batch"),
+        )
+    return MambaCache(
+        conv=("layers", "batch", None, "ssm_inner"),
+        h=("layers", "batch", "ssm_inner", "ssm_state"),
+        pos=("layers", "batch"),
+    )
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeSpec, rules: Optional[ShardingRules]):
+    """Sharded SDS pytree for the decode cache at shape.seq_len."""
+    gb, max_len = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    if cfg.family == "audio":
+        shapes = jax.eval_shape(
+            lambda: WhisperDecodeState(
+                self_caches=jax.tree.map(
+                    lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+                    gqa_init_cache(cfg, gb, max_len, dtype),
+                ),
+                cross_k=jnp.zeros((cfg.n_layers, gb, cfg.encoder_ctx, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim), dtype),
+                cross_v=jnp.zeros((cfg.n_layers, gb, cfg.encoder_ctx, cfg.n_kv_heads,
+                                   cfg.resolved_head_dim), dtype),
+            )
+        )
+        logical = WhisperDecodeState(
+            self_caches=_cache_logical(cfg, "attn"),
+            cross_k=("layers", "batch", None, "kv_heads", None),
+            cross_v=("layers", "batch", None, "kv_heads", None),
+        )
+    else:
+        shapes = jax.eval_shape(lambda: init_decode_caches(cfg, gb, max_len, dtype))
+        logical = {
+            f"blk{j}": _cache_logical(cfg, mixer)
+            for j, mixer in enumerate(cfg.period_pattern)
+        }
+
+    def _is_logical_leaf(x):
+        return isinstance(x, tuple) and not hasattr(x, "_fields") and all(
+            isinstance(e, (str, type(None))) for e in x
+        )
+
+    def attach(sds_tree, log_tree):
+        if isinstance(sds_tree, jax.ShapeDtypeStruct):
+            sharding = (
+                rules.shard(log_tree)
+                if (rules is not None and log_tree is not None)
+                else None
+            )
+            return jax.ShapeDtypeStruct(sds_tree.shape, sds_tree.dtype, sharding=sharding)
+        if isinstance(sds_tree, dict):
+            return {k: attach(sds_tree[k], log_tree[k]) for k in sds_tree}
+        # NamedTuple cache containers
+        return type(sds_tree)(*[attach(s, l) for s, l in zip(sds_tree, log_tree)])
+
+    return attach(shapes, logical)

@@ -1,0 +1,14 @@
+"""Model substrate: configs, layers, attention/MoE/Mamba mixers, assembly."""
+
+from .config import ModelConfig
+from .layers import init_params, param_specs, param_shardings, abstract_params
+from .model import model_defs, forward, loss_fn, init_decode_caches, decode_step
+from .sharding import ShardingRules, make_rules, constrain
+from . import attention, blocks, mamba, moe, whisper
+
+__all__ = [
+    "ModelConfig", "init_params", "param_specs", "param_shardings", "abstract_params",
+    "model_defs", "forward", "loss_fn", "init_decode_caches", "decode_step",
+    "ShardingRules", "make_rules", "constrain",
+    "attention", "blocks", "mamba", "moe", "whisper",
+]

@@ -1,0 +1,120 @@
+"""Transformer/SSM block assembly: (mixer, ffn) pairs with pre-norm residuals.
+
+A *block* is one layer: norm -> mixer (attn | mamba) -> residual,
+norm -> ffn (dense | moe | none) -> residual.  Blocks are stacked per
+period-position with a leading n_periods axis and scanned (model.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Union
+
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from . import mamba as mamba_mod
+from . import moe as moe_mod
+from .config import ModelConfig
+from .layers import ParamDef, rms_norm
+from .sharding import ShardingRules, constrain
+
+__all__ = ["block_defs", "block_forward", "block_decode", "block_init_cache"]
+
+
+def block_defs(cfg: ModelConfig, mixer: str, ffn: str, stack: int = 0) -> dict:
+    pre = (stack,) if stack else ()
+    lpre = ("layers",) if stack else ()
+    d = {"mixer_norm": ParamDef(pre + (cfg.d_model,), lpre + ("embed_unsharded",), init="ones")}
+    if mixer == "attn":
+        d["mixer"] = attn_mod.attention_defs(cfg, stack)
+    elif mixer == "mamba":
+        d["mixer"] = mamba_mod.mamba_defs(cfg, stack)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if ffn != "none":
+        d["ffn_norm"] = ParamDef(pre + (cfg.d_model,), lpre + ("embed_unsharded",), init="ones")
+        d["ffn"] = moe_mod.moe_defs(cfg, stack) if ffn == "moe" else moe_mod.dense_ffn_defs(cfg, stack)
+    return d
+
+
+def block_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,
+    mixer: str,
+    ffn: str,
+    rules: Optional[ShardingRules] = None,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    attn_impl: str = "blockwise",
+    attn_k_block: int = 1024,
+) -> jnp.ndarray:
+    # Megatron-style sequence parallelism: the residual stream (and therefore
+    # the per-layer remat carries) stays seq-sharded over "model"; compute
+    # regions run seq-replicated / TP-sharded.  The explicit pair of
+    # constraints below becomes (all-gather over seq) on entry and
+    # (reduce-scatter of the output projection's partial sums) on exit.
+    # Without the exit constraint XLA resolves the weight-grad contraction as
+    # a FULL-dW all-reduce over "model" per layer per microbatch (measured:
+    # 2.9 GB x 2016 on llama3-405b train_4k — EXPERIMENTS.md §Perf iter 1).
+    sp = rules is not None and rules.rules.get("seq") is not None
+
+    def to_compute(t):  # seq-replicated for the TP compute region
+        return constrain(t, rules, "batch", None, None) if sp else t
+
+    def to_residual(t):  # back to the seq-sharded residual layout
+        return constrain(t, rules, "batch", "seq", None) if sp else t
+
+    h = to_compute(rms_norm(x, p["mixer_norm"]))
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            mixed = attn_mod.mla_forward(cfg, p["mixer"], h, rules, positions=positions,
+                                         k_block=attn_k_block)
+        else:
+            mixed = attn_mod.gqa_forward(cfg, p["mixer"], h, rules, positions=positions,
+                                         impl=attn_impl, k_block=attn_k_block)
+    else:
+        mixed = mamba_mod.mamba_forward(cfg, p["mixer"], h, rules)
+    x = x + to_residual(mixed)
+    if ffn != "none":
+        h = to_compute(rms_norm(x, p["ffn_norm"]))
+        if ffn == "moe":
+            x = x + to_residual(moe_mod.moe_forward(cfg, p["ffn"], h, rules))
+        else:
+            x = x + to_residual(moe_mod.dense_ffn_forward(p["ffn"], h, rules))
+    return x
+
+
+def block_init_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int, dtype):
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            return attn_mod.mla_init_cache(cfg, batch, max_len, dtype)
+        return attn_mod.gqa_init_cache(cfg, batch, max_len, dtype)
+    return mamba_mod.mamba_init_cache(cfg, batch, dtype)
+
+
+def block_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,  # [B, 1, D]
+    cache,
+    mixer: str,
+    ffn: str,
+    rules: Optional[ShardingRules] = None,
+):
+    h = rms_norm(x, p["mixer_norm"])
+    if mixer == "attn":
+        if cfg.attention == "mla":
+            mixed, cache = attn_mod.mla_decode(cfg, p["mixer"], h, cache, rules)
+        else:
+            mixed, cache = attn_mod.gqa_decode(cfg, p["mixer"], h, cache, rules)
+    else:
+        mixed, cache = mamba_mod.mamba_decode(cfg, p["mixer"], h, cache, rules)
+    x = x + mixed.astype(x.dtype)  # keep the scan carry dtype stable
+    if ffn != "none":
+        h = rms_norm(x, p["ffn_norm"])
+        if ffn == "moe":
+            x = x + moe_mod.moe_forward(cfg, p["ffn"], h, rules).astype(x.dtype)
+        else:
+            x = x + moe_mod.dense_ffn_forward(p["ffn"], h, rules).astype(x.dtype)
+    return x, cache

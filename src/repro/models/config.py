@@ -1,0 +1,178 @@
+"""Model configuration covering all ten assigned architectures.
+
+One dataclass describes dense GQA transformers, MLA (DeepSeek), MoE
+(Mixtral/DeepSeek/Jamba), Mamba SSMs (falcon-mamba), hybrid interleaves
+(Jamba), sliding-window attention (Mixtral), enc-dec (Whisper) and the
+VLM-backbone stub (Phi-3-vision).
+
+Layer structure is expressed as a repeating *period*: ``period_pattern`` names
+the token mixer of each layer in the period ("attn" | "mamba") and
+``ffn_pattern`` its FFN ("dense" | "moe" | "none").  The model scans over
+periods with stacked parameters, so the HLO size is O(period), not O(layers).
+Uniform models use a period of length 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    vocab: int
+    d_ff: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0  # 0 => d_model // n_heads
+
+    # attention flavor
+    attention: str = "gqa"  # gqa | mla | none
+    qkv_bias: bool = False
+    window: Optional[int] = None  # sliding-window size (Mixtral SWA)
+    rope_theta: float = 10_000.0
+
+    # MLA (DeepSeek-V3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    d_ff_expert: int = 0  # routed-expert hidden dim (deepseek: 2048)
+    moe_impl: str = "dispatch"  # dispatch (GShard capacity) | dense (oracle)
+    capacity_factor: float = 1.25
+    moe_group_size: int = 0  # routing-group tokens; 0 => one group per batch row.
+    # dispatch/combine einsum FLOPs scale with group size (4*Sg*k*cf*D per
+    # token) — a direct §Perf lever, see EXPERIMENTS.md
+
+    # SSM (Mamba-1)
+    ssm_d_state: int = 0
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0  # 0 => ceil(d_model / 16)
+
+    # layer layout (repeating period)
+    period_pattern: Tuple[str, ...] = ("attn",)
+    ffn_pattern: Tuple[str, ...] = ("dense",)
+
+    # enc-dec (whisper): decoder reuses n_layers/d_model; encoder below
+    n_encoder_layers: int = 0
+    encoder_ctx: int = 1500  # precomputed frame embeddings (conv stub)
+
+    # VLM stub
+    num_image_tokens: int = 0  # precomputed patch embeddings prepended
+
+    # numerics / training
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.period_pattern) == 0, (
+            f"{self.name}: n_layers {self.n_layers} not divisible by period "
+            f"{len(self.period_pattern)}"
+        )
+        assert len(self.period_pattern) == len(self.ffn_pattern)
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.period_pattern)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def has_attention(self) -> bool:
+        return any(p == "attn" for p in self.period_pattern)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM/hybrid state or bounded (SWA) KV."""
+        all_mamba = all(p == "mamba" for p in self.period_pattern)
+        some_mamba = any(p == "mamba" for p in self.period_pattern)
+        return all_mamba or some_mamba or (self.window is not None)
+
+    # -- parameter counting (for roofline MODEL_FLOPS = 6*N*D) ----------------
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or active-per-token) parameter count, embeddings included."""
+        d = self.d_model
+        hd = self.resolved_head_dim
+        total = self.vocab * d  # embedding
+        if not self.tie_embeddings:
+            total += self.vocab * d  # lm head
+        per_period = 0
+        for mixer, ffn in zip(self.period_pattern, self.ffn_pattern):
+            per_period += d  # mixer norm
+            if mixer == "attn":
+                if self.attention == "mla":
+                    per_period += d * self.q_lora_rank + self.q_lora_rank
+                    per_period += self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    per_period += d * (self.kv_lora_rank + self.qk_rope_dim) + self.kv_lora_rank
+                    per_period += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                    per_period += self.n_heads * self.v_head_dim * d
+                else:
+                    per_period += d * self.n_heads * hd
+                    per_period += 2 * d * self.n_kv_heads * hd
+                    per_period += self.n_heads * hd * d
+                    if self.qkv_bias:
+                        per_period += (self.n_heads + 2 * self.n_kv_heads) * hd
+            elif mixer == "mamba":
+                di, n, dtr = self.d_inner, self.ssm_d_state, self.dt_rank
+                per_period += d * 2 * di  # in_proj
+                per_period += self.ssm_d_conv * di + di  # conv
+                per_period += di * (dtr + 2 * n)  # x_proj
+                per_period += dtr * di + di  # dt_proj
+                per_period += di * n + di  # A_log, D
+                per_period += di * d  # out_proj
+            if ffn != "none":
+                per_period += d  # ffn norm
+            if ffn == "dense":
+                per_period += 3 * d * self.d_ff
+            elif ffn == "moe":
+                dff = self.d_ff_expert or self.d_ff
+                per_period += d * self.n_experts  # router
+                experts = self.top_k if active_only else self.n_experts
+                per_period += 3 * d * dff * experts
+                per_period += 3 * d * dff * self.n_shared_experts
+        total += per_period * self.n_periods
+        # encoder (whisper): same attn+dense shape, plus cross-attn in decoder
+        if self.is_encdec:
+            enc = self.n_encoder_layers * (
+                2 * d + d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                + self.n_heads * hd * d + 3 * d * self.d_ff
+            )
+            cross = self.n_layers * (
+                d + d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            )
+            total += enc + cross
+        return int(total)

@@ -1,0 +1,140 @@
+"""Parameter-definition machinery + shared primitive layers.
+
+Each parameter is declared once as a ``ParamDef`` (shape + logical sharding
+axes + initializer); ``init_params`` materializes the pytree and
+``param_specs``/``param_shardings`` derive the matching PartitionSpec pytree —
+one source of truth for shapes, init and distribution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import ShardingRules
+
+__all__ = [
+    "ParamDef", "init_params", "param_specs", "param_shardings", "abstract_params",
+    "rms_norm", "layer_norm", "apply_rope", "rope_freqs", "swiglu",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+    dtype: Optional[str] = None  # override the model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, param_dtype: str):
+    """Materialize a nested dict of ParamDef into arrays (path-keyed RNG)."""
+
+    def rec(tree, path):
+        if _is_def(tree):
+            dtype = jnp.dtype(tree.dtype or param_dtype)
+            k = jax.random.fold_in(key, hash(path) & 0x7FFFFFFF)
+            if tree.init == "zeros":
+                return jnp.zeros(tree.shape, dtype)
+            if tree.init == "ones":
+                return jnp.ones(tree.shape, dtype)
+            if tree.init == "mamba_a":
+                # A_log init: log(1..N) broadcast over channels (Mamba-1)
+                n = tree.shape[-1]
+                a = jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)), tree.shape)
+                return a.astype(dtype)
+            return (tree.scale * jax.random.normal(k, tree.shape, jnp.float32)).astype(dtype)
+        return {k: rec(v, f"{path}/{k}") for k, v in tree.items()}
+
+    return rec(defs, "")
+
+
+def param_specs(defs, rules: ShardingRules):
+    def rec(tree):
+        if _is_def(tree):
+            return rules.spec(tree.logical)
+        return {k: rec(v) for k, v in tree.items()}
+
+    return rec(defs)
+
+
+def param_shardings(defs, rules: ShardingRules):
+    def rec(tree):
+        if _is_def(tree):
+            return rules.shard(tree.logical)
+        return {k: rec(v) for k, v in tree.items()}
+
+    return rec(defs)
+
+
+def abstract_params(defs, param_dtype: str, rules: Optional[ShardingRules] = None):
+    """ShapeDtypeStruct pytree (optionally sharded) — dry-run stand-ins."""
+
+    def rec(tree):
+        if _is_def(tree):
+            dtype = jnp.dtype(tree.dtype or param_dtype)
+            sharding = rules.shard(tree.logical) if rules is not None else None
+            return jax.ShapeDtypeStruct(tree.shape, dtype, sharding=sharding)
+        return {k: rec(v) for k, v in tree.items()}
+
+    return rec(defs)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               n_head_dims: int = 1) -> jnp.ndarray:
+    """x: [..., S, <n_head_dims head axes>, D]; positions: [..., S] int32.
+
+    ``n_head_dims=2`` serves the grouped GQA layout [B, S, Hkv, G, D] without
+    any sharded-dim-merging reshape."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    idx = (Ellipsis,) + (None,) * n_head_dims + (slice(None),)
+    cos = jnp.cos(angles)[idx]  # [..., S, 1(, 1), D/2]
+    sin = jnp.sin(angles)[idx]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """SwiGLU FFN: (silu(x@w1) * (x@w3)) @ w2 — all matmuls f32-accumulated."""
+    h = jax.nn.silu(jnp.einsum("...d,df->...f", x, w1))
+    g = jnp.einsum("...d,df->...f", x, w3)
+    return jnp.einsum("...f,fd->...d", h * g, w2)

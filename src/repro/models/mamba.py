@@ -1,0 +1,124 @@
+"""Mamba-1 block (falcon-mamba, jamba): in-proj, causal depthwise conv,
+selective scan (kernels/mamba_scan), gating, out-proj — train + decode paths.
+
+The selective scan runs the Pallas kernel on TPU and the lax.scan reference
+elsewhere (``backend='auto'``); decode carries (conv window, SSM state) —
+O(1) memory per token, which is what qualifies SSM/hybrid archs for the
+long_500k shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan import mamba_scan, mamba_scan_step_ref
+
+from .config import ModelConfig
+from .layers import ParamDef
+from .sharding import ShardingRules, constrain
+
+__all__ = ["mamba_defs", "mamba_forward", "mamba_init_cache", "mamba_decode", "MambaCache"]
+
+
+def mamba_defs(cfg: ModelConfig, stack: int = 0) -> dict:
+    d, di, n, k, dtr = cfg.d_model, cfg.d_inner, cfg.ssm_d_state, cfg.ssm_d_conv, cfg.dt_rank
+    pre = (stack,) if stack else ()
+    lpre = ("layers",) if stack else ()
+    scale_out = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    return {
+        "in_proj": ParamDef(pre + (d, 2 * di), lpre + ("embed", "ssm_inner")),
+        "conv_w": ParamDef(pre + (k, di), lpre + (None, "ssm_inner"), scale=0.1),
+        "conv_b": ParamDef(pre + (di,), lpre + ("ssm_inner",), init="zeros"),
+        "x_proj": ParamDef(pre + (di, dtr + 2 * n), lpre + ("ssm_inner", None)),
+        "dt_proj": ParamDef(pre + (dtr, di), lpre + (None, "ssm_inner"), scale=dtr**-0.5),
+        "dt_bias": ParamDef(pre + (di,), lpre + ("ssm_inner",), init="zeros"),
+        "a_log": ParamDef(pre + (di, n), lpre + ("ssm_inner", "ssm_state"), init="mamba_a", dtype="float32"),
+        "d_skip": ParamDef(pre + (di,), lpre + ("ssm_inner",), init="ones", dtype="float32"),
+        "out_proj": ParamDef(pre + (di, d), lpre + ("ssm_inner", "embed"), scale=scale_out),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal 1D conv.  x [B,S,Di], w [K,Di] -> [B,S,Di]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # depthwise via feature_group_count = Di; kernel layout (K, 1, Di)
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1],
+    )
+    return out + b
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, xc: jnp.ndarray):
+    """xc [B,S,Di] (post conv+silu) -> (dt [B,S,Di], B [B,S,N], C [B,S,N])."""
+    dtr, n = cfg.dt_rank, cfg.ssm_d_state
+    proj = jnp.einsum("bsi,ij->bsj", xc, p["x_proj"])
+    dt_r, b_mat, c_mat = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_r, p["dt_proj"]) + p["dt_bias"])
+    return dt, b_mat, c_mat
+
+
+def mamba_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D]
+    rules: Optional[ShardingRules] = None,
+    *,
+    impl: str = "auto",  # auto | ref | pallas | pallas_interpret
+) -> jnp.ndarray:
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = constrain(xin, rules, "batch", None, "ssm_inner")
+    xc = jax.nn.silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, xc)
+    a = -jnp.exp(p["a_log"])
+    y = mamba_scan(xc, dt, a, b_mat, c_mat, p["d_skip"], backend=impl if impl != "auto" else "auto")
+    y = y * jax.nn.silu(z)
+    y = constrain(y, rules, "batch", None, "ssm_inner")
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # [B, K-1, Di] — trailing conv window
+    h: jnp.ndarray  # [B, Di, N] — SSM state
+    pos: jnp.ndarray  # [B] int32
+
+
+def mamba_init_cache(cfg: ModelConfig, batch: int, dtype) -> MambaCache:
+    di, n, k = cfg.d_inner, cfg.ssm_d_state, cfg.ssm_d_conv
+    return MambaCache(
+        conv=jnp.zeros((batch, k - 1, di), dtype),
+        h=jnp.zeros((batch, di, n), jnp.float32),
+        pos=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,  # [B, 1, D]
+    cache: MambaCache,
+    rules: Optional[ShardingRules] = None,
+):
+    """One decode step: O(1) state update (the SSM long-context advantage)."""
+    xz = jnp.einsum("bsd,di->bsi", x, p["in_proj"])
+    xin, z = xz[:, 0, : cfg.d_inner], xz[:, 0, cfg.d_inner:]
+    # conv over the cached window + current input
+    window = jnp.concatenate([cache.conv, xin[:, None, :]], axis=1)  # [B,K,Di]
+    xc = jax.nn.silu(jnp.einsum("bki,ki->bi", window, p["conv_w"]) + p["conv_b"])
+    dt, b_mat, c_mat = _ssm_inputs(cfg, p, xc[:, None, :])
+    a = -jnp.exp(p["a_log"])
+    y, h_new = mamba_scan_step_ref(
+        xc, dt[:, 0], a, b_mat[:, 0], c_mat[:, 0], p["d_skip"], cache.h
+    )
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bi,id->bd", y, p["out_proj"])[:, None, :]
+    new_cache = MambaCache(conv=window[:, 1:, :], h=h_new, pos=cache.pos + 1)
+    return out, new_cache

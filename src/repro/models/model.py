@@ -1,0 +1,177 @@
+"""Decoder-only LM (dense / MoE / SSM / hybrid / VLM-stub) with scanned layers.
+
+The layer stack is a ``lax.scan`` over *periods* (config.period_pattern), so
+HLO size is O(period length), not O(n_layers) — essential for compiling the
+126-layer/405B dry-runs.  The scan body is wrapped in ``jax.checkpoint``
+(configurable policy) for activation remat.
+
+Whisper (enc-dec) lives in whisper.py; this module handles everything else,
+including the phi-3-vision stub where precomputed patch embeddings are
+prepended to the token embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks as blocks_mod
+from .config import ModelConfig
+from .layers import ParamDef, rms_norm
+from .sharding import ShardingRules, constrain
+
+__all__ = [
+    "model_defs", "forward", "loss_fn", "init_decode_caches", "decode_step",
+    "REMAT_POLICIES",
+]
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    defs: dict = {
+        "embed": {"tok": ParamDef((cfg.vocab, d), ("vocab", "embed"))},
+        "final_norm": ParamDef((d,), ("embed_unsharded",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.vocab), ("embed", "vocab"))
+    layers = {}
+    for j, (mixer, ffn) in enumerate(zip(cfg.period_pattern, cfg.ffn_pattern)):
+        layers[f"blk{j}"] = blocks_mod.block_defs(cfg, mixer, ffn, stack=cfg.n_periods)
+    defs["layers"] = layers
+    return defs
+
+
+def _embed(cfg: ModelConfig, params, tokens, rules, extra_embeds=None):
+    h = jnp.take(params["embed"]["tok"], tokens, axis=0)  # [B,S,D]
+    if extra_embeds is not None:  # VLM stub: precomputed patch embeddings
+        h = jnp.concatenate([extra_embeds.astype(h.dtype), h], axis=1)
+    return constrain(h, rules, "batch", "seq", None)
+
+
+def _scan_layers(cfg: ModelConfig, params, h, rules, *, positions, attn_impl,
+                 attn_k_block, remat_policy: str):
+    patterns = list(zip(cfg.period_pattern, cfg.ffn_pattern))
+
+    def period_body(carry, period_params):
+        x = carry
+        for j, (mixer, ffn) in enumerate(patterns):
+            x = blocks_mod.block_forward(
+                cfg, period_params[f"blk{j}"], x, mixer, ffn, rules,
+                positions=positions, attn_impl=attn_impl, attn_k_block=attn_k_block,
+            )
+        return x, None
+
+    policy = REMAT_POLICIES[remat_policy]
+    if remat_policy != "none":
+        period_body = jax.checkpoint(period_body, policy=policy, prevent_cse=True)
+    with jax.named_scope("layers_scan"):  # roofline: x n_periods (see roofline/collectives.py)
+        h, _ = jax.lax.scan(period_body, h, params["layers"])
+    return h
+
+
+def forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,  # [B, S] int32
+    rules: Optional[ShardingRules] = None,
+    *,
+    extra_embeds: Optional[jnp.ndarray] = None,  # [B, S_img, D] (VLM stub)
+    attn_impl: str = "blockwise",
+    attn_k_block: int = 1024,
+    remat_policy: str = "full",
+) -> jnp.ndarray:
+    """Full-sequence forward -> logits [B, S(+S_img), V]."""
+    h = _embed(cfg, params, tokens, rules, extra_embeds)
+    positions = jnp.arange(h.shape[1])
+    h = _scan_layers(cfg, params, h, rules, positions=positions,
+                     attn_impl=attn_impl, attn_k_block=attn_k_block,
+                     remat_policy=remat_policy)
+    h = rms_norm(h, params["final_norm"])
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params: dict,
+    batch: dict,
+    rules: Optional[ShardingRules] = None,
+    **fwd_kwargs,
+) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  batch: tokens [B,S], labels [B,S]
+    (+ optional image_embeds for VLM; label positions for image tokens are
+    ignored via label == -100)."""
+    logits = forward(cfg, params, batch["tokens"], rules,
+                     extra_embeds=batch.get("image_embeds"), **fwd_kwargs)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # VLM: image prefix carries no loss
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), -100, labels.dtype), labels], axis=1
+        )
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    per_tok = (lse - ll) * valid
+    return per_tok.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-period-position caches stacked over periods (scan-compatible)."""
+
+    def stack_cache(c):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (cfg.n_periods,) + a.shape), c)
+
+    caches = {}
+    for j, mixer in enumerate(cfg.period_pattern):
+        caches[f"blk{j}"] = stack_cache(
+            blocks_mod.block_init_cache(cfg, mixer, batch, max_len, dtype)
+        )
+    return caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: dict,
+    caches: dict,
+    tokens: jnp.ndarray,  # [B, 1] int32 — one new token per sequence
+    rules: Optional[ShardingRules] = None,
+):
+    """One serving step: logits for the next token + updated caches."""
+    patterns = list(zip(cfg.period_pattern, cfg.ffn_pattern))
+    h = jnp.take(params["embed"]["tok"], tokens, axis=0)  # [B,1,D]
+    h = constrain(h, rules, "batch", None, None)
+
+    def period_body(carry, xs):
+        x = carry
+        period_params, period_caches = xs
+        new_caches = {}
+        for j, (mixer, ffn) in enumerate(patterns):
+            x, new_caches[f"blk{j}"] = blocks_mod.block_decode(
+                cfg, period_params[f"blk{j}"], x, period_caches[f"blk{j}"], mixer, ffn, rules
+            )
+        return x, new_caches
+
+    with jax.named_scope("layers_scan"):
+        h, new_caches = jax.lax.scan(period_body, h, (params["layers"], caches))
+    h = rms_norm(h, params["final_norm"])
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, head)
+    return constrain(logits, rules, "batch", None, "vocab"), new_caches

@@ -1,0 +1,160 @@
+"""Mixture-of-Experts FFN: top-k routing with GShard-style capacity dispatch.
+
+Two implementations sharing one parameter layout:
+
+  * ``dispatch`` — production path.  Token -> expert-slot assignment is a
+    *segmented exclusive prefix sum* over the routing one-hots: each token's
+    position-in-expert is the count of earlier tokens routed to the same
+    expert.  This is the same prefix-sum-as-fetch-and-add primitive as the
+    paper's DCA chunk assignment (DESIGN.md Sec. 4): a coordinator-free
+    self-assignment of work items to bounded queues (expert capacity C).
+    Overflow tokens are dropped (standard GShard semantics, capacity_factor
+    controls the drop rate).  Expert compute is einsum-local under expert
+    parallelism (experts sharded over "model").
+
+  * ``dense`` — oracle path for tests/smoke configs: every expert computes
+    every token, outputs combined with the same top-k weights.  Exact (no
+    capacity drops), O(E) more FLOPs — never used at scale.
+
+Routing groups are per batch row, so the prefix sum never crosses a data
+shard (no routing collectives besides the combine all-reduce).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import ParamDef
+from .sharding import ShardingRules, constrain
+
+__all__ = ["moe_defs", "moe_forward", "dense_ffn_defs", "dense_ffn_forward"]
+
+
+def dense_ffn_defs(cfg: ModelConfig, stack: int = 0, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    pre = (stack,) if stack else ()
+    lpre = ("layers",) if stack else ()
+    scale_out = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    return {
+        "w1": ParamDef(pre + (d, f), lpre + ("embed", "mlp")),
+        "w3": ParamDef(pre + (d, f), lpre + ("embed", "mlp")),
+        "w2": ParamDef(pre + (f, d), lpre + ("mlp", "embed"), scale=scale_out),
+    }
+
+
+def dense_ffn_forward(p: dict, x: jnp.ndarray, rules: Optional[ShardingRules] = None):
+    # NOTE (§Perf iter A5, refuted): forcing FSDP weight gathers here via
+    # with_sharding_constraint was neutral on llama3 train (the dominant ARs
+    # are the inherent dW reduce paths in the backward) and REGRESSED decode
+    # by 15% (one-token activations are far cheaper to all-reduce than
+    # weights are to gather) — so the partitioner keeps the choice.
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    g = jnp.einsum("bsd,df->bsf", x, p["w3"])
+    h = constrain(h * g, rules, "batch", None, "act_mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def moe_defs(cfg: ModelConfig, stack: int = 0) -> dict:
+    d = cfg.d_model
+    e = cfg.n_experts
+    f = cfg.d_ff_expert or cfg.d_ff
+    pre = (stack,) if stack else ()
+    lpre = ("layers",) if stack else ()
+    scale_out = 0.02 / math.sqrt(2.0 * cfg.n_layers)
+    p = {
+        "router": ParamDef(pre + (d, e), lpre + ("embed_unsharded", None), dtype="float32"),
+        "w1": ParamDef(pre + (e, d, f), lpre + ("experts", "embed", "expert_ffn")),
+        "w3": ParamDef(pre + (e, d, f), lpre + ("experts", "embed", "expert_ffn")),
+        "w2": ParamDef(pre + (e, f, d), lpre + ("experts", "expert_ffn", "embed"), scale=scale_out),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = dense_ffn_defs(cfg, stack, d_ff=cfg.n_shared_experts * (cfg.d_ff_expert or cfg.d_ff))
+    return p
+
+
+def _top_k_routing(cfg: ModelConfig, logits: jnp.ndarray):
+    """logits [B,S,E] -> (weights [B,S,k], indices [B,S,k]); weights softmaxed
+    over the selected k (Mixtral/DeepSeek renormalized convention)."""
+    weights, indices = jax.lax.top_k(logits, cfg.top_k)
+    weights = jax.nn.softmax(weights.astype(jnp.float32), axis=-1)
+    return weights, indices
+
+
+def moe_forward(
+    cfg: ModelConfig,
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D]
+    rules: Optional[ShardingRules] = None,
+) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    weights, indices = _top_k_routing(cfg, logits)
+    if cfg.moe_impl == "dense":
+        y = _moe_dense(cfg, p, x, weights, indices)
+    else:
+        y = _moe_dispatch(cfg, p, x, weights, indices, rules)
+    if cfg.n_shared_experts:
+        y = y + dense_ffn_forward(p["shared"], x, rules)
+    return y
+
+
+def _moe_dense(cfg, p, x, weights, indices):
+    """Oracle: all experts on all tokens (tests / tiny smoke configs only)."""
+    e = cfg.n_experts
+    h = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p["w1"]))
+    g = jnp.einsum("bsd,edf->bsef", x, p["w3"])
+    y_e = jnp.einsum("bsef,efd->bsed", h * g, p["w2"])  # [B,S,E,D]
+    onehot = jax.nn.one_hot(indices, e, dtype=jnp.float32)  # [B,S,k,E]
+    cw = jnp.einsum("bske,bsk->bse", onehot, weights)
+    return jnp.einsum("bsed,bse->bsd", y_e.astype(jnp.float32), cw).astype(x.dtype)
+
+
+def _moe_dispatch(cfg, p, x, weights, indices, rules):
+    """GShard capacity dispatch.  Group = batch row (or moe_group_size-token
+    slices of it); token t's slot within its expert queue is the exclusive
+    prefix sum of earlier same-expert tokens — the DCA chunk-assignment
+    primitive (see module docstring).  Dispatch/combine einsum FLOPs are
+    4*Sg*k*cf*D per token, so smaller groups are cheaper but drop more."""
+    b0, s0, d = x.shape
+    sg = cfg.moe_group_size
+    if sg and s0 > sg and s0 % sg == 0:
+        # split each batch row into seq-contiguous groups (stays local under
+        # batch sharding; seq-contiguity keeps drops spread across the row)
+        x = x.reshape(b0 * (s0 // sg), sg, d)
+        weights = weights.reshape(b0 * (s0 // sg), sg, -1)
+        indices = indices.reshape(b0 * (s0 // sg), sg, -1)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    capacity = max(int(math.ceil(s * k / e * cfg.capacity_factor)), 4)
+
+    onehot = jax.nn.one_hot(indices, e, dtype=jnp.float32)  # [B,S,k,E]
+    # flatten the k choices into the token axis in priority order so the
+    # prefix sum assigns earlier-ranked choices first (GShard convention)
+    expert_mask = onehot.transpose(0, 2, 1, 3).reshape(b, k * s, e)  # [B, kS, E]
+    pos_in_expert = jnp.cumsum(expert_mask, axis=1) - expert_mask  # exclusive
+    keep = pos_in_expert < capacity
+    expert_mask = expert_mask * keep
+    slot_oh = jax.nn.one_hot(pos_in_expert.astype(jnp.int32), capacity, dtype=jnp.float32)
+    dispatch = expert_mask[..., None] * slot_oh  # [B, kS, E, C]
+    dispatch = dispatch.reshape(b, k, s, e, capacity)
+    wk = weights.transpose(0, 2, 1)  # [B,k,S]
+    combine = jnp.einsum("bksec,bks->bsec", dispatch, wk)  # [B,S,E,C]
+    dispatch_any = dispatch.sum(axis=1)  # [B,S,E,C] 0/1
+
+    dispatch_any = constrain(dispatch_any, rules, "batch", None, "experts", None)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch_any.astype(x.dtype), x)  # [B,E,C,D]
+    xe = constrain(xe, rules, "batch", "experts", None, None)
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["w1"]))
+    g = jnp.einsum("becd,edf->becf", xe, p["w3"])
+    ye = jnp.einsum("becf,efd->becd", h * g, p["w2"])  # [B,E,C,D]
+    ye = constrain(ye, rules, "batch", "experts", None, None)
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye)
+    y = constrain(y, rules, "batch", None, None)
+    if (b, s) != (b0, s0):
+        y = y.reshape(b0, s0, d)
+    return y

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules mapping parameters/activations onto the mesh.
+
+Every parameter and key activation carries a tuple of *logical* axis names;
+``ShardingRules`` maps logical names to mesh axes.  One rule-set per
+deployment scale keeps model code mesh-agnostic:
+
+  single-pod mesh ("data", "model"):   TP over "model", DP over "data",
+                                       optional FSDP (weight d_model/vocab-dim
+                                       sharded over "data" as well)
+  multi-pod  mesh ("pod", "data", "model"): DP additionally over "pod"
+
+The decode KV cache shards its *sequence* dimension over "model" (and over
+"data" too when batch=1 long-context), relying on XLA SPMD's partial-softmax
+reductions — see DESIGN.md Sec. 6.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["ShardingRules", "logical_to_spec", "constrain", "make_rules"]
+
+Logical = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (str | tuple | None)."""
+
+    rules: dict
+    mesh: Optional[Mesh] = None
+
+    def spec(self, logical: Logical) -> PartitionSpec:
+        used = set()
+        out = []
+        for name in logical:
+            axis = self.rules.get(name) if name else None
+            # a mesh axis may shard only one tensor dim; later dims replicate
+            if axis is None:
+                out.append(None)
+                continue
+            key = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+            if any(a in used for a in key):
+                out.append(None)
+                continue
+            used.update(key)
+            out.append(tuple(axis) if isinstance(axis, (tuple, list)) else axis)
+        return PartitionSpec(*out)
+
+    def shard(self, logical: Logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def logical_to_spec(rules: ShardingRules, logical: Logical) -> PartitionSpec:
+    return rules.spec(logical)
+
+
+def constrain(x, rules: Optional[ShardingRules], *logical):
+    """with_sharding_constraint when a mesh is active; identity otherwise."""
+    if rules is None or rules.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, rules.spec(logical)))
+
+
+def make_rules(
+    mesh: Optional[Mesh] = None,
+    *,
+    fsdp: bool = True,
+    multi_pod: bool = False,
+    seq_shard: bool = False,
+    expert_parallel: bool = True,
+) -> ShardingRules:
+    """Production rule-set for the (pod,) data, model meshes.
+
+    fsdp:   shard the d_model/vocab "long" weight dim over "data" too (ZeRO-3
+            style); XLA inserts the weight all-gathers.  Required for >=30B.
+    seq_shard: shard activation/KV sequence over "model" (SP / long-context).
+    expert_parallel: shard the expert dim of MoE weights over "model" when
+            E >= mesh model size; otherwise expert-ffn TP is used by virtue of
+            the "expert_ffn" logical axis (config-driven in moe.py).
+    """
+    dp: object = ("pod", "data") if multi_pod else "data"
+    rules = {
+        # weights
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "heads_group": None,
+        "mlp": "model",
+        "experts": "model" if expert_parallel else None,
+        "expert_ffn": None if expert_parallel else "model",
+        "embed": "data" if fsdp else None,  # FSDP weight shard
+        "embed_unsharded": None,
+        "layers": None,  # stacked period axis is never sharded
+        "ssm_inner": "model",
+        "ssm_state": None,
+        "lora": None,
+        # activations
+        "batch": dp,
+        "seq": "model" if seq_shard else None,
+        "kv_seq": "model",  # decode cache sequence dim
+        "act_embed": None,
+        "act_heads": "model",
+        "act_mlp": "model",
+    }
+    return ShardingRules(rules=rules, mesh=mesh)

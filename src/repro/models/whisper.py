@@ -1,0 +1,201 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings [B, T_enc, D].  The transformer backbone is
+faithful in shape: bidirectional encoder; decoder with causal self-attention,
+cross-attention over encoder states, dense FFN.
+
+Simplifications recorded in DESIGN.md §Deviations: RMSNorm instead of
+LayerNorm-with-bias and RoPE instead of learned/sinusoidal positions — FLOP
+and memory profiles are unchanged.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_mod
+from .config import ModelConfig
+from .layers import ParamDef, rms_norm
+from .moe import dense_ffn_defs, dense_ffn_forward
+from .sharding import ShardingRules, constrain
+
+__all__ = [
+    "whisper_defs", "whisper_forward", "whisper_loss_fn",
+    "whisper_init_decode_state", "whisper_decode_step",
+]
+
+
+def _cross_attn_defs(cfg: ModelConfig, stack: int) -> dict:
+    # cross-attention: q from decoder, k/v from encoder states
+    return attn_mod.gqa_defs(cfg, stack)
+
+
+def whisper_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    n_enc = cfg.n_encoder_layers
+    n_dec = cfg.n_layers
+    enc = {
+        "attn_norm": ParamDef((n_enc, d), ("layers", "embed_unsharded"), init="ones"),
+        "attn": attn_mod.gqa_defs(cfg, n_enc),
+        "ffn_norm": ParamDef((n_enc, d), ("layers", "embed_unsharded"), init="ones"),
+        "ffn": dense_ffn_defs(cfg, n_enc),
+    }
+    dec = {
+        "self_norm": ParamDef((n_dec, d), ("layers", "embed_unsharded"), init="ones"),
+        "self_attn": attn_mod.gqa_defs(cfg, n_dec),
+        "cross_norm": ParamDef((n_dec, d), ("layers", "embed_unsharded"), init="ones"),
+        "cross_attn": _cross_attn_defs(cfg, n_dec),
+        "ffn_norm": ParamDef((n_dec, d), ("layers", "embed_unsharded"), init="ones"),
+        "ffn": dense_ffn_defs(cfg, n_dec),
+    }
+    return {
+        "embed": {"tok": ParamDef((cfg.vocab, d), ("vocab", "embed"))},
+        "encoder": enc,
+        "enc_final_norm": ParamDef((d,), ("embed_unsharded",), init="ones"),
+        "decoder": dec,
+        "final_norm": ParamDef((d,), ("embed_unsharded",), init="ones"),
+        "lm_head": ParamDef((d, cfg.vocab), ("embed", "vocab")),
+    }
+
+
+def _cross_attention(cfg, p, x, enc_kv, rules):
+    """q from x [B,S,D]; (k,v) precomputed from encoder: [B,T,Hkv,hd]."""
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dngk->bsngk", x, p["wq"])  # grouped layout
+    k, v = enc_kv
+    out = attn_mod.dense_grouped_attention(
+        q, k, v, jnp.full((s,), k.shape[1] - 1), causal=False
+    )
+    return jnp.einsum("bsngk,ngkd->bsd", out, p["wo"])
+
+
+def _cross_kv(p, enc_h):
+    k = jnp.einsum("btd,dnk->btnk", enc_h, p["wk"])
+    v = jnp.einsum("btd,dnk->btnk", enc_h, p["wv"])
+    return k, v
+
+
+def encode(cfg: ModelConfig, params, frame_embeds, rules=None, remat_policy="full"):
+    """Bidirectional encoder over precomputed frame embeddings."""
+    h = constrain(frame_embeds, rules, "batch", None, None)
+    t = h.shape[1]
+    positions = jnp.arange(t)
+
+    def body(x, lp):
+        a = rms_norm(x, lp["attn_norm"])
+        # bidirectional: grouped blockwise attention without causal mask
+        qg, k, v = attn_mod._project_qkv(cfg, lp["attn"], a)
+        qg = attn_mod.apply_rope(qg, positions[None, :], cfg.rope_theta, n_head_dims=2)
+        k = attn_mod.apply_rope(k, positions[None, :], cfg.rope_theta)
+        out = attn_mod.blockwise_attention(qg, k, v, positions, causal=False)
+        x = x + jnp.einsum("bsngk,ngkd->bsd", out, lp["attn"]["wo"])
+        f = rms_norm(x, lp["ffn_norm"])
+        return x + dense_ffn_forward(lp["ffn"], f, rules), None
+
+    from .model import REMAT_POLICIES
+
+    if remat_policy != "none":
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat_policy], prevent_cse=True)
+    with jax.named_scope("enc_layers_scan"):  # roofline: x n_encoder_layers
+        h, _ = jax.lax.scan(body, h, params["encoder"])
+    return rms_norm(h, params["enc_final_norm"])
+
+
+def whisper_forward(
+    cfg: ModelConfig,
+    params: dict,
+    tokens: jnp.ndarray,  # [B, S_dec]
+    frame_embeds: jnp.ndarray,  # [B, T_enc, D]
+    rules: Optional[ShardingRules] = None,
+    remat_policy: str = "full",
+):
+    enc_h = encode(cfg, params, frame_embeds, rules, remat_policy)
+    h = jnp.take(params["embed"]["tok"], tokens, axis=0)
+    h = constrain(h, rules, "batch", "seq", None)
+    positions = jnp.arange(h.shape[1])
+
+    def body(x, lp):
+        a = rms_norm(x, lp["self_norm"])
+        x = x + attn_mod.gqa_forward(cfg, lp["self_attn"], a, rules, positions=positions)
+        c = rms_norm(x, lp["cross_norm"])
+        x = x + _cross_attention(cfg, lp["cross_attn"], c, _cross_kv(lp["cross_attn"], enc_h), rules)
+        f = rms_norm(x, lp["ffn_norm"])
+        return x + dense_ffn_forward(lp["ffn"], f, rules), None
+
+    from .model import REMAT_POLICIES
+
+    if remat_policy != "none":
+        body = jax.checkpoint(body, policy=REMAT_POLICIES[remat_policy], prevent_cse=True)
+    with jax.named_scope("layers_scan"):  # roofline: x n_layers (decoder)
+        h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+def whisper_loss_fn(cfg, params, batch, rules=None, **kw):
+    logits = whisper_forward(cfg, params, batch["tokens"], batch["frame_embeds"], rules,
+                             remat_policy=kw.get("remat_policy", "full"))
+    lf = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    return ((lse - ll) * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+# -- decode -------------------------------------------------------------------
+
+
+class WhisperDecodeState(NamedTuple):
+    self_caches: attn_mod.KVCache  # stacked [n_dec, ...]
+    cross_k: jnp.ndarray  # [n_dec, B, T, Hkv, hd]
+    cross_v: jnp.ndarray
+
+
+def whisper_init_decode_state(cfg: ModelConfig, params, frame_embeds, max_len: int,
+                              rules=None, dtype=jnp.bfloat16) -> WhisperDecodeState:
+    """Run the encoder once, precompute per-layer cross K/V, allocate caches."""
+    enc_h = encode(cfg, params, frame_embeds, rules)
+    b = frame_embeds.shape[0]
+
+    def per_layer_kv(lp):
+        return _cross_kv(lp["cross_attn"], enc_h)
+
+    kv = jax.lax.map(lambda lp: per_layer_kv(lp), params["decoder"])
+    cache0 = attn_mod.gqa_init_cache(cfg, b, max_len, dtype)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape), cache0
+    )
+    return WhisperDecodeState(self_caches=stacked, cross_k=kv[0].astype(dtype),
+                              cross_v=kv[1].astype(dtype))
+
+
+def whisper_decode_step(cfg: ModelConfig, params, state: WhisperDecodeState,
+                        tokens: jnp.ndarray, rules=None):
+    h = jnp.take(params["embed"]["tok"], tokens, axis=0)  # [B,1,D]
+
+    def body(x, xs):
+        lp, cache, ck, cv = xs
+        a = rms_norm(x, lp["self_norm"])
+        out, cache = attn_mod.gqa_decode(cfg, lp["self_attn"], a, cache, rules)
+        x = x + out
+        c = rms_norm(x, lp["cross_norm"])
+        x = x + _cross_attention(cfg, lp["cross_attn"], c, (ck, cv), rules)
+        f = rms_norm(x, lp["ffn_norm"])
+        return x + dense_ffn_forward(lp["ffn"], f, rules), cache
+
+    with jax.named_scope("layers_scan"):
+        h, new_caches = jax.lax.scan(
+            body, h, (params["decoder"], state.self_caches, state.cross_k, state.cross_v)
+        )
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+    new_state = WhisperDecodeState(self_caches=new_caches, cross_k=state.cross_k,
+                                   cross_v=state.cross_v)
+    return constrain(logits, rules, "batch", None, "vocab"), new_state

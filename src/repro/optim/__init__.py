@@ -1,0 +1,9 @@
+from .adamw import AdamWState, adamw_init, adamw_update, adamw_state_defs
+from .schedule import warmup_cosine
+from .compression import topk_compress_decompress, int8_compress_decompress, ef_topk_allreduce
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update", "adamw_state_defs",
+    "warmup_cosine",
+    "topk_compress_decompress", "int8_compress_decompress", "ef_topk_allreduce",
+]

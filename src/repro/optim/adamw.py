@@ -1,0 +1,85 @@
+"""AdamW with configurable state dtype (fp32 default; bf16 for the >=100B
+archs so params+grads+moments fit 16 GB/chip — see DESIGN.md Sec. 6).
+
+Optimizer states inherit each parameter's sharding (same tree structure), so
+moments are ZeRO-sharded exactly like the FSDP weights.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # [] int32
+    m: dict
+    v: dict
+
+
+def adamw_init(params, state_dtype: str = "float32") -> AdamWState:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_state_defs(param_defs, state_dtype: str = "float32"):
+    """ParamDef tree for the optimizer state (same logical sharding)."""
+    import dataclasses
+
+    from repro.models.layers import ParamDef
+
+    def conv(d: ParamDef):
+        return dataclasses.replace(d, init="zeros", dtype=state_dtype)
+
+    m = jax.tree.map(conv, param_defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    v = jax.tree.map(conv, param_defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return {"m": m, "v": v}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    params,
+    grads,
+    state: AdamWState,
+    lr,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    """One AdamW step with global-norm clipping.  lr may be a traced scalar."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        m_hat = m_new / bc1
+        v_hat = v_new / bc2
+        delta = m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

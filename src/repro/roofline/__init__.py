@@ -1,0 +1,5 @@
+from .collectives import parse_collectives
+from .flops import analytic_flops_bytes, model_flops
+from .terms import HW, roofline_terms
+
+__all__ = ["parse_collectives", "analytic_flops_bytes", "model_flops", "HW", "roofline_terms"]

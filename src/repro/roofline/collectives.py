@@ -1,0 +1,88 @@
+"""Collective-traffic accounting from compiled (post-SPMD) HLO text.
+
+``cost_analysis()`` does not report collective bytes, so we parse the HLO:
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op contributes its operand bytes.
+
+XLA counts while-loop bodies ONCE (verified empirically — see EXPERIMENTS.md
+§Methodology), and our programs are scan-heavy (microbatch loop, layer-period
+loop, attention kv-block loop, mamba time loop).  Every scan in the model code
+is wrapped in a ``jax.named_scope`` whose name survives into the HLO op
+metadata (``op_name="jit(f)/.../<scope>/while/body/..."``); a collective's
+trip-count multiplier is the product of the trip counts of every scope present
+in its op_name path.  This attributes loop-nested collectives exactly without
+fragile HLO-CFG analysis.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["parse_collectives", "SCOPE_NAMES"]
+
+SCOPE_NAMES = (
+    "microbatches_scan", "layers_scan", "kv_blocks_scan",
+    "mamba_time_scan", "enc_layers_scan",
+)
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*"
+    r"(\([^)]*\)|\S+)\s+"  # result type: tuple or single
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(",
+    re.M,
+)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "c64": 8, "c128": 16, "f32": 4, "s64": 8, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _bytes_of_type(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        key = dt if dt in _DTYPE_BYTES else ("f8e4m3fn" if dt.startswith("f8") else dt)
+        total += n * _DTYPE_BYTES.get(key, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str, trip_counts: Dict[str, int]) -> dict:
+    """Sum collective bytes (per device, result-shape based) with loop
+    multipliers.  Returns totals per op kind plus the grand total and a
+    per-line record list for debugging."""
+    per_kind: Dict[str, float] = {}
+    records: List[dict] = []
+    for m in _COLL_RE.finditer(hlo_text):
+        line = hlo_text[m.start(): hlo_text.find("\n", m.start())]
+        type_str, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # async pair: the -start already carries the bytes
+        nbytes = _bytes_of_type(type_str)
+        if nbytes == 0:
+            continue
+        op_name_m = re.search(r'op_name="([^"]*)"', line)
+        op_name = op_name_m.group(1) if op_name_m else ""
+        mult = 1
+        for scope, trips in trip_counts.items():
+            # scope substrings can repeat in op_name (the transpose path of a
+            # bwd op embeds the fwd path: "transpose(jvp(...scope...))/..."),
+            # but loops of the same scope never nest — clamp the exponent to 1
+            if scope in op_name:
+                mult *= trips
+        contrib = float(nbytes) * mult
+        per_kind[kind] = per_kind.get(kind, 0.0) + contrib
+        records.append({"kind": kind, "bytes": nbytes, "mult": mult, "op_name": op_name[:160]})
+    total = float(sum(per_kind.values()))
+    return {"per_kind": per_kind, "total_bytes": total, "ops": records}

@@ -1,0 +1,35 @@
+"""Roofline terms from the dry-run artifacts (TPU v5e constants)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+__all__ = ["HW", "roofline_terms"]
+
+HW = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+    "hbm_bytes": 16e9,  # v5e capacity
+}
+
+
+def roofline_terms(
+    flops_global: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    n_chips: int,
+) -> Dict[str, float]:
+    compute_s = flops_global / (n_chips * HW["peak_flops_bf16"])
+    memory_s = bytes_per_device / HW["hbm_bw"]
+    collective_s = collective_bytes_per_device / HW["ici_bw"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "roofline_fraction": (bound / total) if total else 0.0,  # overlap-ideal
+        "step_time_lower_bound_s": bound,
+    }

@@ -1,0 +1,5 @@
+from .failure import FaultTolerantRunner, FaultInjector
+from .straggler import StragglerMitigator, dls_microbatch_assignment
+
+__all__ = ["FaultTolerantRunner", "FaultInjector", "StragglerMitigator",
+           "dls_microbatch_assignment"]

@@ -1,0 +1,3 @@
+from .engine import Request, ServingEngine, DLSAdmission
+
+__all__ = ["Request", "ServingEngine", "DLSAdmission"]

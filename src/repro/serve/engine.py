@@ -1,0 +1,154 @@
+"""Continuous-batching serving engine with DLS request admission.
+
+Orca-style token-level scheduling: every engine tick runs ONE batched
+decode_step; each active slot consumes either its next prompt token (prefill
+phase) or its previously generated token (decode phase).  Slots hold
+independent sequences — the per-slot cache positions introduced for this
+engine (attention.KVCache.pos: [B]) keep masks and RoPE exact per sequence,
+so a slot can be recycled by simply zeroing its position (stale cache entries
+sit beyond ``pos`` and are masked out).
+
+The paper's technique runs the *admission* policy: the queue of pending
+requests is an iteration space, engine refill events are the PEs' work
+requests, and a DLS technique decides the admission chunk size — decreasing
+techniques (GSS/FAC) admit aggressively while the queue is long and taper to
+fine-grained admission near the tail, which keeps slot occupancy high without
+head-of-line blocking bursts.  Closed forms (DCA) mean any engine replica can
+compute the admission schedule from the shared counter alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedule import build_schedule_dca
+from repro.core.techniques import DLSParams
+from repro.models import decode_step, init_decode_caches
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "DLSAdmission", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [T] int32
+    max_new: int
+    # filled by the engine:
+    output: Optional[List[int]] = None
+
+
+class DLSAdmission:
+    """Chunked admission via DCA closed forms over the request queue."""
+
+    def __init__(self, n_requests: int, n_slots: int, technique: str = "gss"):
+        self.schedule = build_schedule_dca(
+            technique, DLSParams(N=n_requests, P=max(n_slots, 1))
+        )
+        self.step = 0
+        self.cursor = 0  # next request index to admit
+
+    def admit(self, free_slots: int, remaining: int) -> int:
+        """How many queued requests to admit now (<= free_slots)."""
+        if remaining <= 0 or free_slots <= 0:
+            return 0
+        if self.step < self.schedule.num_steps:
+            chunk = int(self.schedule.sizes[self.step])
+            self.step += 1
+        else:
+            chunk = 1
+        return min(chunk, free_slots, remaining)
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, max_slots: int, max_len: int,
+                 technique: str = "gss", dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.caches = init_decode_caches(cfg, max_slots, max_len, dtype=dtype)
+        self._step = jax.jit(lambda p, c, t: decode_step(cfg, p, c, t))
+        # slot state (host side)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
+        self.slot_prompt_left: np.ndarray = np.zeros(max_slots, np.int64)
+        self.slot_gen_left: np.ndarray = np.zeros(max_slots, np.int64)
+        self.slot_next_token: np.ndarray = np.zeros(max_slots, np.int32)
+        self.ticks = 0
+        self.occupancy: List[int] = []
+
+    # -- slot plumbing ---------------------------------------------------------
+
+    def _reset_slot_pos(self, slot: int):
+        """Recycle a slot: zero its per-sequence cache positions (stale
+        entries beyond pos are masked, no wipe needed)."""
+
+        def zero_pos(leaf_name, leaf):
+            return leaf.at[:, slot].set(0) if leaf_name == "pos" else leaf
+
+        new = {}
+        for blk, cache in self.caches.items():
+            new[blk] = type(cache)(*[
+                zero_pos(fname, leaf) for fname, leaf in zip(cache._fields, cache)
+            ])
+        self.caches = new
+
+    def _admit(self, req: Request, slot: int):
+        req.output = []
+        self.slot_req[slot] = req
+        self.slot_prompt_left[slot] = len(req.prompt)
+        self.slot_gen_left[slot] = req.max_new
+        self.slot_next_token[slot] = int(req.prompt[0])
+        self._reset_slot_pos(slot)
+
+    # -- main loop --------------------------------------------------------------
+
+    def run(self, requests: List[Request], technique: str = "gss") -> Dict[int, List[int]]:
+        queue = list(requests)
+        admission = DLSAdmission(len(queue), self.max_slots, technique)
+        done: Dict[int, List[int]] = {}
+
+        while queue or any(r is not None for r in self.slot_req):
+            # refill: DLS decides the admission chunk
+            free = [i for i, r in enumerate(self.slot_req) if r is None]
+            n_admit = admission.admit(len(free), len(queue))
+            for slot in free[:n_admit]:
+                if not queue:
+                    break
+                self._admit(queue.pop(0), slot)
+
+            active = np.array([r is not None for r in self.slot_req])
+            if not active.any():
+                continue
+            self.occupancy.append(int(active.sum()))
+
+            # one batched token step for every slot
+            toks = jnp.asarray(self.slot_next_token)[:, None]
+            logits, self.caches = self._step(self.params, self.caches, toks)
+            next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+
+            for i, req in enumerate(self.slot_req):
+                if req is None:
+                    continue
+                if self.slot_prompt_left[i] > 1:
+                    # still feeding the prompt: next input is the next prompt token
+                    consumed = len(req.prompt) - self.slot_prompt_left[i]
+                    self.slot_next_token[i] = int(req.prompt[consumed + 1])
+                    self.slot_prompt_left[i] -= 1
+                else:
+                    # generating: model output becomes the next input
+                    self.slot_prompt_left[i] = 0
+                    tok = int(next_ids[i])
+                    req.output.append(tok)
+                    self.slot_next_token[i] = tok
+                    self.slot_gen_left[i] -= 1
+                    if self.slot_gen_left[i] <= 0:
+                        done[req.rid] = req.output
+                        self.slot_req[i] = None
+            self.ticks += 1
+        return done

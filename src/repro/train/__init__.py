@@ -1,0 +1,3 @@
+from .step import RuntimePlan, build_train_step, build_serve_step, build_prefill
+
+__all__ = ["RuntimePlan", "build_train_step", "build_serve_step", "build_prefill"]

@@ -1,0 +1,130 @@
+"""Train/serve step builders: microbatched gradient accumulation, remat,
+AdamW update — the functions the launcher jits and the dry-run lowers.
+
+The microbatch loop is a lax.scan whose iteration space is the natural DLS
+target: runtime/straggler.py self-schedules these microbatches across DP
+groups with the paper's closed-form chunking when heterogeneity is detected
+(see that module); the default static split below is the STATIC technique in
+the paper's taxonomy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn as lm_loss_fn
+from repro.models import decode_step as lm_decode_step
+from repro.models import forward as lm_forward
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingRules
+from repro.models.whisper import whisper_decode_step, whisper_forward, whisper_loss_fn
+from repro.optim import adamw_update, warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimePlan:
+    """Per-(arch, shape, mesh) runtime decisions (launch/rules.py computes)."""
+
+    n_microbatches: int = 1
+    remat_policy: str = "full"
+    attn_impl: str = "blockwise"
+    attn_k_block: int = 1024
+    grad_dtype: str = "float32"
+    opt_state_dtype: str = "float32"
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def _loss_for(cfg: ModelConfig) -> Callable:
+    return whisper_loss_fn if cfg.family == "audio" else lm_loss_fn
+
+
+def build_train_step(cfg: ModelConfig, rules: Optional[ShardingRules], plan: RuntimePlan):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    lfn = _loss_for(cfg)
+
+    def split_micro(batch):
+        n = plan.n_microbatches
+        return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+    def micro_loss(params, mb):
+        kw = dict(remat_policy=plan.remat_policy)
+        if cfg.family != "audio":
+            kw.update(attn_impl=plan.attn_impl, attn_k_block=plan.attn_k_block)
+        return lfn(cfg, params, mb, rules, **kw)
+
+    def train_step(params, opt_state, batch):
+        micro = split_micro(batch)
+        gdt = jnp.dtype(plan.grad_dtype)
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+
+        def body(acc, mb):
+            loss, grads = jax.value_and_grad(micro_loss)(params, mb)
+            acc = jax.tree.map(lambda a, g: a + g.astype(gdt), acc, grads)
+            return acc, loss
+
+        if plan.n_microbatches == 1:
+            grads, losses = body(acc0, jax.tree.map(lambda x: x[0], micro))
+            losses = jnp.asarray([losses])
+        else:
+            with jax.named_scope("microbatches_scan"):  # roofline: x n_micro
+                grads, losses = jax.lax.scan(body, acc0, micro)
+        grads = jax.tree.map(lambda g: g / plan.n_microbatches, grads)
+        lr = warmup_cosine(opt_state.step, peak_lr=plan.peak_lr,
+                           warmup_steps=plan.warmup_steps, total_steps=plan.total_steps)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr,
+            weight_decay=plan.weight_decay, clip_norm=plan.clip_norm,
+        )
+        metrics = {"loss": losses.mean(), "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill(cfg: ModelConfig, rules: Optional[ShardingRules], plan: RuntimePlan):
+    """Inference prefill: full-sequence forward -> logits.
+
+    (Cache emission is not modeled — a memory-bound epilogue; DESIGN.md
+    §Deviations.)"""
+
+    if cfg.family == "audio":
+
+        def prefill(params, batch):
+            return whisper_forward(cfg, params, batch["tokens"], batch["frame_embeds"],
+                                   rules, remat_policy="none")
+
+    else:
+
+        def prefill(params, batch):
+            return lm_forward(cfg, params, batch["tokens"], rules,
+                              extra_embeds=batch.get("image_embeds"),
+                              attn_impl=plan.attn_impl, attn_k_block=plan.attn_k_block,
+                              remat_policy="none")
+
+    return prefill
+
+
+def build_serve_step(cfg: ModelConfig, rules: Optional[ShardingRules]):
+    """One-token decode against the cache: (params, caches, tokens) ->
+    (logits, caches)."""
+
+    if cfg.family == "audio":
+
+        def serve_step(params, state, tokens):
+            return whisper_decode_step(cfg, params, state, tokens, rules)
+
+    else:
+
+        def serve_step(params, caches, tokens):
+            return lm_decode_step(cfg, params, caches, tokens, rules)
+
+    return serve_step

@@ -1,0 +1,79 @@
+"""Decode-vs-teacher-forced equivalence for every cache architecture.
+
+llama (dense GQA), mixtral (SWA ring buffer) and falcon (SSM state) are
+covered in test_arch_smoke; here: MLA *absorbed* decode (deepseek), hybrid
+period caches (jamba), QKV-bias (qwen), and the enc-dec state (whisper).
+MoE archs use the exact dense oracle (capacity drops differ between shapes).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.specs import model_param_defs
+from repro.models import decode_step, forward, init_decode_caches, init_params
+from repro.models.whisper import (
+    whisper_forward,
+    whisper_init_decode_state,
+    whisper_decode_step,
+)
+
+
+def _roundtrip(cfg, seq=10):
+    # f32 params: the tests pin the *algebra* (absorbed-MLA reorders the
+    # contractions, which is exact in math but reorders bf16 rounding)
+    cfg = dataclasses.replace(cfg, param_dtype="float32", compute_dtype="float32")
+    params = init_params(model_param_defs(cfg), jax.random.key(0), cfg.param_dtype)
+    toks = jax.random.randint(jax.random.key(4), (1, seq), 0, cfg.vocab)
+    full = forward(cfg, params, toks)
+    caches = init_decode_caches(cfg, 1, seq, dtype=jnp.float32)
+    outs = []
+    for t in range(seq):
+        lg, caches = decode_step(cfg, params, caches, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        atol=2e-4, rtol=2e-4, err_msg=cfg.name,
+    )
+
+
+def test_mla_absorbed_decode_matches_forward():
+    """The latent-space (absorbed) MLA decode must equal the expanded
+    training attention — this is the least-trivial algebra in the stack."""
+    cfg = dataclasses.replace(get_smoke_config("deepseek-v3-671b"), moe_impl="dense")
+    _roundtrip(cfg)
+
+
+def test_jamba_hybrid_period_caches():
+    """Mixed KV + SSM caches threaded through one scan."""
+    cfg = dataclasses.replace(get_smoke_config("jamba-1.5-large-398b"), moe_impl="dense")
+    _roundtrip(cfg, seq=9)  # not a multiple of the period — exercises stacking
+
+
+def test_qwen_bias_decode():
+    _roundtrip(get_smoke_config("qwen1.5-32b"))
+
+
+def test_whisper_decode_matches_teacher_forced():
+    cfg = get_smoke_config("whisper-base")
+    params = init_params(model_param_defs(cfg), jax.random.key(0), cfg.param_dtype)
+    b, seq = 1, 8
+    frames = jax.random.normal(jax.random.key(1), (b, cfg.encoder_ctx, cfg.d_model),
+                               jnp.float32)
+    toks = jax.random.randint(jax.random.key(2), (b, seq), 0, cfg.vocab)
+    full = whisper_forward(cfg, params, toks, frames)
+    state = whisper_init_decode_state(cfg, params, frames, seq, dtype=jnp.float32)
+    outs = []
+    for t in range(seq):
+        lg, state = whisper_decode_step(cfg, params, state, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        atol=3e-2, rtol=3e-2,
+    )

@@ -1,0 +1,57 @@
+"""dls_chunks Pallas kernel: shape/technique sweeps vs the pure-jnp oracle
+and the float64 host schedule builder."""
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import build_schedule_dca
+from repro.core.techniques import DLSParams
+from repro.core.techniques_jnp import TECH_IDS, pack_params
+from repro.kernels.dls_chunks import dls_chunk_schedule, dls_chunk_schedule_ref
+
+TECHS = ["static", "ss", "fsc", "gss", "tap", "tss", "fac", "tfss", "fiss", "viss", "rnd", "pls"]
+
+
+@pytest.mark.parametrize("tech", TECHS)
+@pytest.mark.parametrize("n,p", [(1000, 4), (262_144, 256), (40_000, 64)])
+def test_kernel_matches_jnp_oracle(tech, n, p):
+    """Kernel output must equal ref.py exactly (identical f32 math)."""
+    params = DLSParams(N=n, P=p)
+    sizes_k, offs_k = dls_chunk_schedule(tech, params, interpret=True)
+    sizes_r, offs_r = dls_chunk_schedule_ref(TECH_IDS[tech], pack_params(params), len(sizes_k))
+    np.testing.assert_array_equal(np.asarray(sizes_k), np.asarray(sizes_r))
+    np.testing.assert_array_equal(np.asarray(offs_k), np.asarray(offs_r))
+
+
+@pytest.mark.parametrize("tech", ["gss", "fac", "tss", "fiss"])
+def test_kernel_matches_host_schedule_table2(tech):
+    """At Table-2 scale the kernel reproduces the paper's chunk sequences."""
+    params = DLSParams(N=1000, P=4)
+    sizes_k, offs_k = dls_chunk_schedule(tech, params, interpret=True)
+    keep = np.asarray(sizes_k) > 0
+    host = build_schedule_dca(tech, params)
+    np.testing.assert_array_equal(np.asarray(sizes_k)[keep], host.sizes)
+    np.testing.assert_array_equal(np.asarray(offs_k)[keep], host.offsets)
+
+
+@pytest.mark.parametrize("tech", TECHS)
+def test_kernel_coverage_invariant(tech):
+    """Non-overlapping complete coverage, straight from kernel output."""
+    params = DLSParams(N=54_321, P=37)
+    sizes, offs = dls_chunk_schedule(tech, params, interpret=True)
+    sizes, offs = np.asarray(sizes), np.asarray(offs)
+    keep = sizes > 0
+    s, o = sizes[keep], offs[keep]
+    assert o[0] == 0
+    np.testing.assert_array_equal(o[1:], (o + s)[:-1])
+    assert s.sum() == params.N
+
+
+def test_kernel_carry_across_tiles():
+    """Schedules longer than one (8x128) tile exercise the SMEM carry."""
+    params = DLSParams(N=20_000, P=2)  # ss => 20k steps => 20 tiles
+    sizes, offs = dls_chunk_schedule("ss", params, interpret=True)
+    sizes, offs = np.asarray(sizes), np.asarray(offs)
+    keep = sizes > 0
+    assert keep.sum() == 20_000
+    np.testing.assert_array_equal(offs[keep], np.arange(20_000))

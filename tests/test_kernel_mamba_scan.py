@@ -1,0 +1,73 @@
+"""mamba_scan Pallas kernel: shape/dtype sweeps vs the lax.scan oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mamba_scan import mamba_scan, mamba_scan_ref, mamba_scan_step_ref
+
+
+def _rand_inputs(key, b, l, d, n, dtype):
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (b, l, d), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, d), dtype) - 1.0)
+    a = -jnp.exp(jax.random.normal(ks[2], (d, n), jnp.float32))  # stable: A < 0
+    bm = jax.random.normal(ks[3], (b, l, n), dtype)
+    cm = jax.random.normal(ks[4], (b, l, n), dtype)
+    d_skip = jax.random.normal(ks[5], (d,), jnp.float32)
+    return x, dt, a, bm, cm, d_skip
+
+
+TOL = {jnp.float32: 3e-5, jnp.bfloat16: 3e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,l,d,n,bl,bd",
+    [
+        (1, 128, 256, 16, 128, 256),
+        (2, 256, 512, 16, 128, 256),   # multi seq-chunk: state carried in VMEM
+        (1, 512, 256, 8, 128, 128),    # 4 chunks, 2 d-blocks
+    ],
+)
+def test_mamba_kernel_matches_ref(b, l, d, n, bl, bd, dtype):
+    x, dt, a, bm, cm, d_skip = _rand_inputs(jax.random.key(0), b, l, d, n, dtype)
+    out_k = mamba_scan(x, dt, a, bm, cm, d_skip, block_l=bl, block_d=bd,
+                       backend="pallas_interpret")
+    out_r = mamba_scan_ref(x, dt, a, bm, cm, d_skip)
+    np.testing.assert_allclose(
+        np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_mamba_state_carry_across_chunks():
+    """A long-decay signal placed in chunk 0 must influence chunk 3's output;
+    equality with the scan oracle proves the VMEM state carry is correct."""
+    b, l, d, n = 1, 512, 128, 16
+    x = jnp.zeros((b, l, d)).at[:, 0, :].set(1.0)  # impulse at t=0
+    dt = jnp.full((b, l, d), 0.01)
+    a = -jnp.full((d, n), 0.1)  # slow decay
+    bm = jnp.ones((b, l, n))
+    cm = jnp.ones((b, l, n))
+    d_skip = jnp.zeros((d,))
+    out_k = mamba_scan(x, dt, a, bm, cm, d_skip, block_l=128, block_d=128,
+                       backend="pallas_interpret")
+    out_r = mamba_scan_ref(x, dt, a, bm, cm, d_skip)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5, rtol=1e-5)
+    assert np.abs(np.asarray(out_k)[0, 300:]).max() > 0  # state really persists
+
+
+def test_mamba_decode_step_consistency():
+    """Running the per-token decode step over a sequence == the full scan."""
+    b, l, d, n = 2, 64, 128, 16
+    x, dt, a, bm, cm, d_skip = _rand_inputs(jax.random.key(7), b, l, d, n, jnp.float32)
+    full = mamba_scan_ref(x, dt, a, bm, cm, d_skip)
+    h = jnp.zeros((b, d, n), jnp.float32)
+    ys = []
+    for t in range(l):
+        y_t, h = mamba_scan_step_ref(x[:, t], dt[:, t], a, bm[:, t], cm[:, t], d_skip, h)
+        ys.append(y_t)
+    step_out = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(step_out), np.asarray(full), atol=2e-5, rtol=2e-5)

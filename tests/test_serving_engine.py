@@ -1,0 +1,91 @@
+"""Continuous-batching engine: slot isolation, completeness, DLS admission.
+
+The decisive test: a request decoded inside a busy heterogeneous batch must
+produce exactly the tokens it produces alone (greedy, f32) — proving per-slot
+cache positions, masks and RoPE are sequence-exact.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.launch.specs import model_param_defs
+from repro.models import init_params
+from repro.serve import Request, ServingEngine
+
+
+def _setup(arch="yi-34b"):
+    cfg = get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, param_dtype="float32", compute_dtype="float32")
+    params = init_params(model_param_defs(cfg), jax.random.key(0), cfg.param_dtype)
+    return cfg, params
+
+
+def _mk_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(2, 9))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new=int(rng.integers(2, 7)),
+        ))
+    return reqs
+
+
+def test_engine_completes_all_requests():
+    cfg, params = _setup()
+    engine = ServingEngine(cfg, params, max_slots=4, max_len=32)
+    reqs = _mk_requests(cfg, 10)
+    done = engine.run(reqs, technique="gss")
+    assert sorted(done) == list(range(10))
+    for r in reqs:
+        assert len(done[r.rid]) == r.max_new
+    # continuous batching actually batched: peak occupancy > 1
+    assert max(engine.occupancy) > 1
+
+
+def test_slot_isolation_exactness():
+    """Tokens from the busy engine == tokens decoded solo."""
+    cfg, params = _setup()
+    reqs = _mk_requests(cfg, 6, seed=3)
+    engine = ServingEngine(cfg, params, max_slots=3, max_len=32)
+    done_busy = engine.run([dataclasses.replace(r) for r in reqs], technique="fac")
+
+    for probe in (0, 3, 5):
+        solo_engine = ServingEngine(cfg, params, max_slots=1, max_len=32)
+        done_solo = solo_engine.run([dataclasses.replace(reqs[probe])])
+        assert done_busy[probe] == done_solo[probe], (
+            f"request {probe}: busy {done_busy[probe]} != solo {done_solo[probe]}"
+        )
+
+
+def test_slot_recycling_is_clean():
+    """A slot reused by a second request must not leak the first's cache."""
+    cfg, params = _setup()
+    r0 = _mk_requests(cfg, 1, seed=7)[0]
+    # run r0 then r1 through a single-slot engine (forced recycling)
+    r1 = _mk_requests(cfg, 2, seed=11)[1]
+    engine = ServingEngine(cfg, params, max_slots=1, max_len=32)
+    done = engine.run([dataclasses.replace(r0), dataclasses.replace(r1)])
+    fresh = ServingEngine(cfg, params, max_slots=1, max_len=32)
+    done_fresh = fresh.run([dataclasses.replace(r1)])
+    assert done[r1.rid] == done_fresh[r1.rid]
+
+
+def test_dls_admission_schedules():
+    from repro.serve import DLSAdmission
+
+    adm = DLSAdmission(n_requests=100, n_slots=8, technique="gss")
+    admitted = []
+    remaining = 100
+    while remaining > 0:
+        n = adm.admit(free_slots=8, remaining=remaining)
+        assert 0 < n <= 8
+        admitted.append(n)
+        remaining -= n
+    assert sum(admitted) == 100
