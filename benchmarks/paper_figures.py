@@ -16,6 +16,7 @@ import time
 
 import numpy as np
 
+from repro.core.fastsim import simulate_sweep
 from repro.core.schedule import build_schedule_dca
 from repro.core.simulator import SimConfig, mandelbrot_costs, psia_costs, simulate
 from repro.core.techniques import DLSParams, TECHNIQUES
@@ -47,32 +48,66 @@ def bench_fig1(emit):
 
 
 def _factorial(emit, app: str, costs, n, p):
-    for tech in TECHS:
-        for approach in ("cca", "dca"):
-            for delay in DELAYS:
-                cfg = SimConfig(
-                    technique=tech, params=DLSParams(N=n, P=p),
-                    approach=approach, delay_calc_s=delay,
-                )
-                t0 = time.perf_counter()
-                res = simulate(cfg, costs)
-                dt = (time.perf_counter() - t0) * 1e6
-                emit(
-                    f"{app}/{tech}/{approach}/delay{int(delay*1e6)}us",
-                    dt,
-                    f"T_par={res.t_parallel:.4f};chunks={res.num_chunks};"
-                    f"cov={res.cov_finish:.4f}",
-                )
+    """The Table-4 factorial through ``simulate_sweep`` — one batched call
+    per workload (AF rides the event engine inside the sweep)."""
+    params = DLSParams(N=n, P=p)
+    t0 = time.perf_counter()
+    rows = simulate_sweep(params, costs, TECHS, delays_s=DELAYS)
+    dt_per_row = (time.perf_counter() - t0) * 1e6 / len(rows)
+    for row in rows:
+        emit(
+            f"{app}/{row['technique']}/{row['approach']}/"
+            f"delay{int(row['delay_us'])}us",
+            dt_per_row,
+            f"T_par={row['t_parallel']:.4f};chunks={row['num_chunks']};"
+            f"cov={row['cov_finish']:.4f};engine={row['engine']}",
+        )
+
+
+def _workload(app: str, full: bool):
+    n, p = (262_144, 256) if full else (65_536, 256)
+    if app == "fig4_psia":
+        return psia_costs(n, mean_s=0.07298 if full else 0.018), n, p
+    return mandelbrot_costs(n, conversion_threshold=512 if full else 256,
+                            mean_s=0.01025 if full else 0.0025), n, p
 
 
 def bench_fig4(emit, full: bool = False):
-    n, p = (262_144, 256) if full else (65_536, 256)
-    costs = psia_costs(n, mean_s=0.07298 if full else 0.018)
+    costs, n, p = _workload("fig4_psia", full)
     _factorial(emit, "fig4_psia", costs, n, p)
 
 
 def bench_fig5(emit, full: bool = False):
-    n, p = (262_144, 256) if full else (65_536, 256)
-    costs = mandelbrot_costs(n, conversion_threshold=512 if full else 256,
-                             mean_s=0.01025 if full else 0.0025)
+    costs, n, p = _workload("fig5_mandelbrot", full)
     _factorial(emit, "fig5_mandelbrot", costs, n, p)
+
+
+def bench_engine_speedup(emit, full: bool = False):
+    """Old (per-chunk heapq) vs new (round-based vectorized) engine on the
+    fig4/fig5 sweeps — the perf claim of the analytic schedule engine.
+
+    AF is excluded: it runs on the event engine in both cases (Sec. 4).
+    """
+    techs = [t for t in TECHS if t != "af"]
+    for app in ("fig4_psia", "fig5_mandelbrot"):
+        costs, n, p = _workload(app, full)
+        params = DLSParams(N=n, P=p)
+
+        t0 = time.perf_counter()
+        rows = simulate_sweep(params, costs, techs, delays_s=DELAYS)
+        t_new = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for tech in techs:
+            for approach in ("cca", "dca"):
+                for delay in DELAYS:
+                    simulate(SimConfig(technique=tech, params=params,
+                                       approach=approach, delay_calc_s=delay),
+                             costs)
+        t_old = time.perf_counter() - t0
+
+        emit(f"engine/{app}/event", t_old * 1e6,
+             f"rows={len(rows)};N={n};P={p}")
+        emit(f"engine/{app}/analytic", t_new * 1e6,
+             f"rows={len(rows)};N={n};P={p}")
+        emit(f"engine/{app}/speedup", 0.0, f"x={t_old / t_new:.2f}")

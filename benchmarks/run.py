@@ -1,13 +1,16 @@
 """Benchmark driver: one function per paper table/figure + framework benches.
 
-Prints ``name,us_per_call,derived`` CSV (the harness contract).  ``--full``
-runs the paper-exact scales (N=262,144 / P=256); default is the 4x-reduced
-regime used in CI.
+Prints ``name,us_per_call,derived`` CSV (the harness contract); ``--json``
+additionally writes the rows as a structured JSON document (used for the
+committed BENCH_*.json perf snapshots).  ``--full`` runs the paper-exact
+scales (N=262,144 / P=256); default is the 4x-reduced regime used in CI.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 
 
@@ -15,6 +18,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-exact scales")
     ap.add_argument("--only", default="", help="substring filter on bench names")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write rows as JSON to PATH")
     args, _ = ap.parse_known_args()
 
     rows = []
@@ -34,6 +39,7 @@ def main() -> None:
     pf.bench_fig1(emit)
     pf.bench_fig4(emit, full=args.full)
     pf.bench_fig5(emit, full=args.full)
+    pf.bench_engine_speedup(emit, full=args.full)
     fb.bench_chunk_calc_scaling(emit)
     fb.bench_chunk_calc_kernel(emit)
     fb.bench_data_balance(emit)
@@ -45,6 +51,21 @@ def main() -> None:
     except Exception as e:  # dry-run artifacts may be absent in fresh clones
         print(f"roofline/skipped,0.00,reason={e!r}")
     print(f"# {len(rows)} benchmark rows", file=sys.stderr)
+
+    if args.json:
+        doc = {
+            "scale": "full" if args.full else "ci",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "rows": [
+                {"name": n, "us_per_call": round(us, 2), "derived": d}
+                for n, us, d in rows
+            ],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,354 @@
+"""Vectorized schedule-execution engine: the fast path of the Sec. 6 evaluation.
+
+``simulator.simulate`` walks a Python heapq event loop chunk by chunk — exact,
+but at paper scale (N=262,144; SS emits one chunk per iteration) a single
+config costs hundreds of thousands of interpreter iterations, and the full
+factorial of Figs. 4-5 (techniques x {cca,dca} x delays x workloads) dominates
+benchmark wall time.  SimAS-style online technique selection needs the
+simulator to be orders of magnitude faster than the loop it models.
+
+This module exploits the analytic schedule engine (DESIGN.md Sec. 7):
+
+* chunk tables first: for every non-feedback technique the full chunk table
+  (sizes, offsets, per-chunk execution times via the cost prefix-sum trick)
+  is precomputed in one vectorized pass — chunk *identity* never depends on
+  execution timing, only chunk *placement* does;
+* the event loop becomes a **round-based vectorized loop**: per round, sort
+  the P PE free-times once (the heap's total order), tentatively assign up to
+  P chunks with pure-vector math, then commit exactly the prefix for which no
+  newly assigned PE would have re-entered the queue (a prefix-min check).
+  In the regimes the paper studies (chunk execution ≫ assignment service)
+  almost every round commits ~P chunks, so the interpreter cost drops from
+  O(chunks) to O(chunks / P);
+* every floating-point operation replicates the heapq loop's op order — the
+  serialized coordinator recurrence ``done = max(ready, coord) + service`` is
+  reproduced with ``np.add.accumulate`` (sequential by definition) over the
+  queued runs — so results are **bit-identical** to the event engine
+  (tests/test_fastsim_equivalence.py asserts exact equality of chunk
+  sequences, placements, and T_loop^par).
+
+AF (adaptive factoring) keeps the event engine: its chunk sizes depend on
+live per-PE timing feedback, so the table cannot be precomputed — the paper's
+own caveat in Sec. 4.  ``simulate_sweep`` falls back automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .schedule import build_schedule_cca, build_schedule_dca
+from .simulator import SimConfig, SimResult, simulate
+from .techniques import DLSParams, get_technique
+
+__all__ = ["simulate_fast", "simulate_sweep", "sweep_configs"]
+
+
+def _coord_recurrence(ready: np.ndarray, svc: float, coord0: float) -> np.ndarray:
+    """done_k = max(ready_k, done_{k-1}) + svc, done_{-1} = coord0 — exactly.
+
+    Vectorized over *runs*: while requests arrive after the coordinator frees
+    up (``ready_k >= done_{k-1}``) the answer is the precomputed
+    ``ready + svc``; while they queue, done advances by repeated addition of
+    ``svc``, reproduced with np.add.accumulate (whose accumulation order is
+    sequential, hence bit-identical to the scalar loop).  Run boundaries are
+    found with vector comparisons, so the Python iteration count is the
+    number of regime switches, not K.
+    """
+    k = len(ready)
+    g = ready + svc  # un-queued candidate: max() picks ready
+
+    # Whole-block fast paths — the two regimes of the paper's scenarios:
+    # exec >> service (requests arrive sparse: nobody queues) and the
+    # saturated coordinator (everybody queues).  Both settle in one shot.
+    if ready[0] >= coord0:
+        if k == 1 or (ready[1:] >= g[:-1]).all():
+            return g
+    else:
+        buf = np.full(k + 1, svc)
+        buf[0] = coord0
+        acc = np.add.accumulate(buf)[1:]
+        if k == 1 or (ready[1:] < acc[:-1]).all():
+            return acc
+
+    # Mixed block: alternate unqueued stretches (vector assignments between
+    # precomputed stretch breaks) with queued steps (scalar f64 adds — the
+    # same IEEE operation the event loop performs, one element at a time;
+    # queued runs are short in the mixed regime, so scalar beats a numpy
+    # call's overhead).
+    done = np.empty(k)
+    unq = np.empty(k, bool)  # stretch-continuation mask: ready_j >= g_{j-1}
+    unq[0] = True
+    np.greater_equal(ready[1:], g[:-1], out=unq[1:])
+    breaks = np.flatnonzero(~unq)
+    # Common sub-pattern: every queued run has length 1 and the stretch
+    # resumes immediately after — then the whole block is g with the break
+    # positions bumped to (previous done) + svc, in one vector pass.
+    if (
+        ready[0] >= coord0
+        and breaks[0] > 0
+        and (np.diff(breaks) > 1).all()
+    ):
+        nxt = breaks[breaks < k - 1] + 1
+        if (ready[nxt] >= g[nxt - 2] + svc).all():
+            done[:] = g
+            done[breaks] = g[breaks - 1] + svc
+            return done
+    nb = len(breaks)
+    bp = 0  # pointer into breaks
+    pos = 0
+    cur = coord0
+    while pos < k:
+        if ready[pos] >= cur:
+            while bp < nb and breaks[bp] <= pos:
+                bp += 1
+            end = int(breaks[bp]) if bp < nb else k
+            done[pos:end] = g[pos:end]
+            cur = float(g[end - 1])
+            pos = end
+        else:
+            cur = cur + svc
+            done[pos] = cur
+            pos += 1
+    return done
+
+
+def _seq_sum(start: float, step: float, count: int) -> float:
+    """start + step + step + ... (count adds), sequentially — bit-exact
+    replica of a scalar accumulation loop."""
+    if count <= 0:
+        return start
+    buf = np.full(count + 1, step)
+    buf[0] = start
+    return float(np.add.accumulate(buf)[-1])
+
+
+def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds):
+    """Blocked event loop for one config; bit-identical to the heapq loop.
+
+    exec_chunks: [S] per-chunk execution time at unit speed.
+    Returns (pe_finish [P], pe_busy [P], pes [S]).
+    """
+    p = len(speeds)
+    s_total = len(exec_chunks)
+    t_free = np.zeros(p)
+    pes = np.empty(s_total, np.int64)
+    coord = 0.0
+    extra = 0.0
+    svc = service if is_cca else h
+    unit_speed = bool(np.all(speeds == 1.0))  # x/1.0 == x: skip the division
+    track_extra = is_cca and nonded
+    s = 0
+    while s < s_total:
+        k = min(p, s_total - s)
+        # stable argsort: exact-time ties resolve by index, which is the
+        # heap's (t, pe) total order
+        cand = np.argsort(t_free, kind="stable")
+        t_req = t_free[cand[:k]] if k < p else t_free[cand]
+        # DCA: the chunk calculation runs on the requesting PE before it asks
+        # the coordinator; CCA: it is part of the serialized service.
+        ready = t_req if is_cca else (t_req + delay) + calc
+        done = _coord_recurrence(ready, svc, coord)
+        exec_t = exec_chunks[s:s + k]
+        if not unit_speed:
+            exec_t = exec_t / speeds[cand[:k]]
+        fin = done + exec_t
+        acc = None
+        if track_extra:
+            # master displacement: extra grows by one service per assignment
+            # (sequential adds), flushed into PE0's finish when PE0 completes
+            buf = np.full(k + 1, service)
+            buf[0] = extra
+            acc = np.add.accumulate(buf)[1:]
+            k0 = np.flatnonzero(cand[:k] == 0)
+            if k0.size:
+                fin[k0[0]] = fin[k0[0]] + acc[k0[0]]
+        # Commit only the prefix no earlier-assigned PE would preempt: the
+        # heap pops candidate j before candidate j' > j unless an assigned
+        # PE re-entered with an earlier (finish, pe) key.  A conservative
+        # prefix-min split (<=) preserves exact heap order.
+        commit = k
+        if k > 1:
+            reenter = np.minimum.accumulate(fin[:-1]) <= t_req[1:]
+            first = int(reenter.argmax())
+            if reenter[first]:
+                commit = first + 1
+        idx = cand[:commit]
+        fins = fin[:commit]
+        t_free[idx] = fins
+        pes[s:s + commit] = idx
+        coord = float(done[commit - 1])
+        if track_extra:
+            k0 = np.flatnonzero(idx == 0)
+            if k0.size:  # PE0 flushed at block position k0: extra restarts
+                extra = _seq_sum(0.0, service, commit - int(k0[0]) - 1)
+            else:
+                extra = float(acc[commit - 1])
+        s += commit
+    # busy times rebuilt from the trace: np.add.at accumulates in assignment
+    # order, matching the event loop's ``pe_busy[pe] += exec_t`` exactly
+    pe_busy = np.zeros(p)
+    all_exec = exec_chunks if unit_speed else exec_chunks / speeds[pes]
+    np.add.at(pe_busy, pes, all_exec)
+    return t_free, pe_busy, pes
+
+
+def _chunk_table(technique: str, params: DLSParams, approach: str):
+    """(sizes, offsets) exactly as the event engine emits them.
+
+    The event loop's chunk sequence is timing-independent for non-feedback
+    techniques: DCA evaluates the closed form per step, CCA walks the
+    recursion against the remaining-iterations counter — both reproduced by
+    the schedule builders.
+    """
+    tech = get_technique(technique)
+    if tech.requires_feedback:
+        raise ValueError(
+            f"{technique} needs execution feedback; its chunk table cannot be "
+            "precomputed — use the event engine (simulator.simulate)"
+        )
+    if approach == "dca" or tech.pattern == "fixed":
+        # fixed-size techniques (static/ss/fsc) have R-independent recursions:
+        # the CCA master emits the same sequence as the closed form, so the
+        # vectorized builder replaces the Python recursion (pinned by
+        # tests/test_fastsim_equivalence.py).
+        sched = build_schedule_dca(technique, params)
+    else:
+        sched = build_schedule_cca(technique, params)
+    return sched.sizes, sched.offsets
+
+
+def _exec_base(sizes, offsets, costs, n):
+    csum = np.concatenate([[0.0], np.cumsum(costs[:n])])
+    return csum[offsets + sizes] - csum[offsets]
+
+
+def _cfg_engine_args(cfg: SimConfig):
+    speeds = (np.asarray(cfg.pe_speeds, np.float64)
+              if cfg.pe_speeds is not None else np.ones(cfg.params.P))
+    is_cca = cfg.approach == "cca"
+    service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+    return dict(
+        is_cca=is_cca, service=service, delay=cfg.delay_calc_s,
+        calc=cfg.calc_cost_s, h=cfg.h_assign_s,
+        nonded=is_cca and not cfg.dedicated_master, speeds=speeds,
+    )
+
+
+def simulate_fast(cfg: SimConfig, costs: np.ndarray) -> SimResult:
+    """Drop-in ``simulate`` replacement for non-feedback techniques.
+
+    Bit-identical to the event engine (same chunk sizes, same PE placement,
+    same T_loop^par) — the equivalence suite pins this.
+    """
+    p = cfg.params
+    sizes, offsets = _chunk_table(cfg.technique, p, cfg.approach)
+    exec_base = _exec_base(sizes, offsets, costs, p.N)
+    t_free, busy, pes = _run_config(exec_base, **_cfg_engine_args(cfg))
+    return SimResult(
+        t_parallel=float(t_free.max()),
+        num_chunks=len(sizes),
+        pe_finish=t_free,
+        pe_busy=busy,
+        chunk_sizes=sizes.astype(np.int64),
+        chunk_pes=pes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sweep API
+# ---------------------------------------------------------------------------
+
+
+def sweep_configs(
+    techniques: Sequence[str],
+    approaches: Sequence[str] = ("cca", "dca"),
+    delays_s: Sequence[float] = (0.0, 1e-5, 1e-4),
+    speed_scenarios: Optional[Dict[str, Optional[np.ndarray]]] = None,
+) -> List[dict]:
+    """The factorial grid of Figs. 4-5, as a flat list of config dicts."""
+    speed_scenarios = speed_scenarios or {"homog": None}
+    return [
+        dict(technique=t, approach=a, delay_s=d, scenario=sname, speeds=sp)
+        for t in techniques
+        for a in approaches
+        for d in delays_s
+        for sname, sp in speed_scenarios.items()
+    ]
+
+
+def simulate_sweep(
+    params: DLSParams,
+    costs: np.ndarray,
+    techniques: Sequence[str],
+    approaches: Sequence[str] = ("cca", "dca"),
+    delays_s: Sequence[float] = (0.0, 1e-5, 1e-4),
+    speed_scenarios: Optional[Dict[str, Optional[np.ndarray]]] = None,
+    h_assign_s: float = 1e-6,
+    calc_cost_s: float = 2e-7,
+    dedicated_master: bool = False,
+) -> List[dict]:
+    """Run a whole (technique x approach x delay x speed) grid, batched.
+
+    Per technique, every scenario shares the chunk tables (built once with
+    the vectorized analytic builders); each scenario then replays through the
+    round-based engine.  Feedback techniques (AF) transparently fall back to
+    the event engine.  Returns a structured row list; each row carries the
+    engine that produced it.
+    """
+    speed_scenarios = speed_scenarios or {"homog": None}
+    rows: List[dict] = []
+
+    def _row(technique, approach, delay, sname, engine, res):
+        return dict(
+            technique=technique,
+            approach=approach,
+            delay_s=delay,
+            delay_us=delay * 1e6,
+            scenario=sname,
+            engine=engine,
+            t_parallel=float(res.t_parallel),
+            num_chunks=int(res.num_chunks),
+            cov_finish=float(res.cov_finish),
+            load_imbalance=float(res.load_imbalance),
+        )
+
+    grid = [
+        (a, d, sname, sp)
+        for a in approaches
+        for d in delays_s
+        for sname, sp in speed_scenarios.items()
+    ]
+    for technique in techniques:
+        tech = get_technique(technique)
+        if not tech.requires_feedback:
+            # tables + exec times shared across the technique's whole grid
+            tables = {a: _chunk_table(technique, params, a) for a in approaches}
+            execs = {
+                a: _exec_base(sizes, offsets, costs, params.N)
+                for a, (sizes, offsets) in tables.items()
+            }
+        for a, d, sname, sp in grid:
+            cfg = SimConfig(
+                technique=technique, params=params, approach=a,
+                delay_calc_s=d, h_assign_s=h_assign_s,
+                calc_cost_s=calc_cost_s, pe_speeds=sp,
+                dedicated_master=dedicated_master,
+            )
+            if tech.requires_feedback:
+                rows.append(_row(technique, a, d, sname, "event",
+                                 simulate(cfg, costs)))
+                continue
+            sizes, offsets = tables[a]
+            t_free, busy, pes = _run_config(execs[a], **_cfg_engine_args(cfg))
+            res = SimResult(
+                t_parallel=float(t_free.max()),
+                num_chunks=len(sizes),
+                pe_finish=t_free,
+                pe_busy=busy,
+                chunk_sizes=sizes.astype(np.int64),
+                chunk_pes=pes,
+            )
+            rows.append(_row(technique, a, d, sname, "analytic", res))
+    return rows

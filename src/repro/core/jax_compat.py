@@ -1,0 +1,48 @@
+"""Small jax version-compat shims.
+
+The container pins jax 0.4.37, where ``shard_map`` still lives under
+``jax.experimental``, takes ``check_rep`` (later renamed ``check_vma``), and
+``jax.lax.axis_size`` does not exist yet; newer jax promotes/renames all
+three.  Import from here so the code runs on either.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kwargs):
+    """shard_map accepting either the old or new replication-check kwarg."""
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    return _shard_map(f, **kwargs)
+
+
+def pallas_tpu_compiler_params():
+    """The pltpu compiler-params class across the rename.
+
+    jax <= 0.4.x spells it ``TPUCompilerParams``; newer jax ``CompilerParams``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    return getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named mesh axis, usable inside shard_map."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    # psum of a python constant is evaluated eagerly against the axis env and
+    # returns a concrete int (so it stays usable as a static shape).
+    return jax.lax.psum(1, axis_name)

@@ -21,13 +21,19 @@ from typing import Optional
 
 import numpy as np
 
-from .techniques import DLSParams, closed_form_sizes, get_technique
+from .techniques import (
+    DLSParams,
+    closed_form_prefix,
+    closed_form_sizes,
+    get_technique,
+)
 
 __all__ = [
     "Schedule",
     "build_schedule_dca",
     "build_schedule_cca",
     "chunk_of_step",
+    "drain_steps",
     "verify_coverage",
 ]
 
@@ -73,6 +79,22 @@ def _clamp_and_trim(raw: np.ndarray, N: int) -> tuple:
     return sizes[keep], excl[keep]
 
 
+def drain_steps(technique: str, params: DLSParams) -> int:
+    """First step count whose cumulative assignment reaches N.
+
+    Binary search on the (monotone) closed-form prefix — O(log N) prefix
+    evaluations instead of materializing N candidate chunk sizes.
+    """
+    lo, hi = 0, int(np.ceil(params.N / max(params.min_chunk, 1)))
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if float(closed_form_prefix(technique, np.asarray([mid]), params)[0]) >= params.N:
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo
+
+
 def build_schedule_dca(
     technique: str,
     params: DLSParams,
@@ -80,14 +102,15 @@ def build_schedule_dca(
 ) -> Schedule:
     """Vectorized DCA schedule: every chunk computed independently from its index.
 
-    ``max_steps`` bounds the candidate step range; defaults to N/min_chunk
-    (always sufficient since each chunk is >= min_chunk >= 1).
+    ``max_steps`` bounds the candidate step range; the default uses the
+    closed-form prefix to evaluate exactly the steps that carry work (the
+    drain point), instead of the always-sufficient N/min_chunk upper bound.
     """
     tech = get_technique(technique)
     if not tech.dca_supported:
         raise ValueError(f"{technique} is not DCA-schedulable without feedback")
     if max_steps is None:
-        max_steps = int(np.ceil(params.N / max(params.min_chunk, 1)))
+        max_steps = max(drain_steps(technique, params), 1)
     # Chunk calculation: embarrassingly parallel over i (the paper's DCA).
     i = np.arange(max_steps, dtype=np.int64)
     raw = closed_form_sizes(technique, i, params)
@@ -139,17 +162,16 @@ def chunk_of_step(technique: str, i: int, params: DLSParams) -> tuple:
     """DCA's per-PE view: (lp_start, size) for step ``i`` with *no* global state.
 
     A PE holding the shared step counter value ``i`` computes its own chunk:
-    size via the closed form, offset via the (locally evaluated) prefix sum of
-    the closed form over [0, i).  No communication with other PEs, which is
-    exactly the property the paper exploits.
+    size via the closed form, offset via the *closed-form prefix* — both pure
+    functions of ``i``, with no carried state and no communication with other
+    PEs.  This is one level stronger than the paper's formulation (which still
+    serializes the offset through a fetch-and-add): see DESIGN.md Sec. 7.
     """
-    params_i = np.arange(i + 1, dtype=np.int64)
-    raw = closed_form_sizes(technique, params_i, params)
+    raw = closed_form_sizes(technique, np.asarray([i], dtype=np.int64), params)
     n = float(params.N)
-    raw = np.clip(np.round(np.nan_to_num(raw, nan=1.0, posinf=n)), 1, n).astype(np.int64)
-    csum = np.cumsum(raw)
-    excl = int(csum[i] - raw[i])
-    size = int(min(raw[i], max(params.N - excl, 0)))
+    raw = int(np.clip(np.round(np.nan_to_num(raw[0], nan=1.0, posinf=n)), 1, n))
+    excl = int(min(closed_form_prefix(technique, np.asarray([i]), params)[0], n))
+    size = int(min(raw, max(params.N - excl, 0)))
     return excl, size
 
 

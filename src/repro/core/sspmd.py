@@ -30,11 +30,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .techniques_jnp import TECH_IDS, pack_params, sizes_for_steps
+from .jax_compat import axis_size
+from .techniques_jnp import (
+    TECH_IDS,
+    default_head_cap,
+    pack_params,
+    prefix_for_steps,
+    sizes_for_steps,
+)
 
 __all__ = [
     "dca_round_assignments",
+    "dca_round_assignments_stateless",
     "dca_schedule_scan",
+    "dca_schedule_stateless",
     "cca_round_assignments",
     "num_rounds_upper_bound",
 ]
@@ -50,7 +59,7 @@ def dca_round_assignments(round_state, tech_id, pv, axis_name: str):
         size 0 <=> queue exhausted (device idles / masks its work).
     """
     i0, lp0 = round_state
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     j = jax.lax.axis_index(axis_name)
 
     # Chunk calculation (distributed, the paper's Sec. 4): every device
@@ -72,6 +81,64 @@ def dca_round_assignments(round_state, tech_id, pv, axis_name: str):
     return new_state, (my_offset, my_size)
 
 
+def dca_round_assignments_stateless(round_idx, tech_id, pv, axis_name: str,
+                                    head_cap: int = 4096):
+    """One DCA scheduling round with ZERO carried state.
+
+    ``dca_round_assignments`` already needs no communication, but it still
+    threads (i0, lp0) through a scan.  Here both are derived from the round
+    number alone via the closed-form prefix (DESIGN.md Sec. 7): device j's
+    step is ``round_idx*P + j`` and its offset is ``prefix(step)`` — a pure
+    function, so rounds can be evaluated out of order, re-entered after
+    preemption, or vmapped in bulk with no carried dependency at all.
+
+    Returns (my_offset, my_size); size 0 <=> queue exhausted.
+
+    ``head_cap`` must come from ``default_head_cap`` sized to the *largest
+    step index this device will evaluate* (rounds * axis size + axis size) —
+    an undersized cap silently mis-prices gss/tap/pls/rnd offsets past it.
+    ``dca_schedule_stateless`` derives it correctly; pass-through callers
+    must do the same.
+    """
+    n_dev = axis_size(axis_name)
+    j = jax.lax.axis_index(axis_name)
+    n_total = pv[0]
+    step = (jnp.asarray(round_idx, jnp.int32) * n_dev + j).astype(jnp.float32)
+    raw = jnp.clip(jnp.round(sizes_for_steps(tech_id, step, pv)), 1.0, n_total)
+    base = prefix_for_steps(tech_id, step, pv, head_cap=head_cap)
+    my_offset = jnp.clip(base, 0.0, n_total).astype(jnp.int32)
+    my_size = jnp.clip(n_total - base, 0.0, raw).astype(jnp.int32)
+    return my_offset, my_size
+
+
+def dca_schedule_stateless(tech_name: str, params, axis_name: str,
+                           max_rounds: int = None):
+    """Full per-device schedule from the closed-form prefix — no scan at all.
+
+    The stateful ``dca_schedule_scan`` walks rounds sequentially because the
+    queue head is carried; with the closed-form prefix every round is
+    independent, so the whole schedule is one vectorized evaluation (the
+    HLO contains no sequential chain — compare the scan in the CCA baseline).
+    """
+    tech_id = TECH_IDS[tech_name]
+    pv = pack_params(params)
+    if max_rounds is None:
+        max_rounds = num_rounds_upper_bound(params)
+
+    n_dev = axis_size(axis_name)  # a python int inside shard_map
+    # size the prefix head to the largest step index actually evaluated —
+    # steps stride by the mesh axis size, which may exceed params.P
+    head_cap = default_head_cap(tech_name, params, max_rounds * n_dev + n_dev)
+    j = jax.lax.axis_index(axis_name)
+    n_total = pv[0]
+    steps = (jnp.arange(max_rounds, dtype=jnp.int32) * n_dev + j).astype(jnp.float32)
+    raw = jnp.clip(jnp.round(sizes_for_steps(tech_id, steps, pv)), 1.0, n_total)
+    base = prefix_for_steps(tech_id, steps, pv, head_cap=head_cap)
+    offs = jnp.clip(base, 0.0, n_total).astype(jnp.int32)
+    sizes = jnp.clip(n_total - base, 0.0, raw).astype(jnp.int32)
+    return offs, sizes
+
+
 def cca_round_assignments(round_state, tech_name: str, params, axis_name: str):
     """CCA baseline round: device 0 walks the recursion, result broadcast.
 
@@ -82,7 +149,7 @@ def cca_round_assignments(round_state, tech_name: str, params, axis_name: str):
     contrasting the two execution models on-device.
     """
     i0, lp0, prev, remaining = round_state
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     j = jax.lax.axis_index(axis_name)
     p_f = jnp.float32(params.P)
 

@@ -49,6 +49,7 @@ __all__ = [
     "TECHNIQUES",
     "get_technique",
     "closed_form_sizes",
+    "closed_form_prefix",
     "technique_names",
 ]
 
@@ -157,6 +158,10 @@ class Technique:
         technique is irreducibly recursive (AF).
     recursive_step(i, R, prev_chunk, params, feedback) -> raw chunk size for
         step i given remaining iterations R (the CCA master's view).
+    prefix_form(i_array, params) -> cumulative iterations assigned before step
+        i (the chunk *offset* as a pure function of i — see
+        ``closed_form_prefix`` for the exactness contract).  ``None`` falls
+        back to the generic bounded head-summation.
     pattern: fixed | decreasing | increasing | irregular (paper Fig. 1).
     requires_feedback: needs live timing data (AF, and PLS's SWR probe in the
         strictest reading; we treat SWR as a supplied constant like the paper).
@@ -168,6 +173,7 @@ class Technique:
     recursive_step: Callable
     requires_feedback: bool = False
     batched: bool = False  # chunks assigned in batches of P equal sizes
+    prefix_form: Optional[Callable[[np.ndarray, DLSParams], np.ndarray]] = None
 
     @property
     def dca_supported(self) -> bool:
@@ -429,23 +435,172 @@ def _af_rec(i, R, prev, p: DLSParams, fb=None):
 
 
 # ---------------------------------------------------------------------------
+# Closed-form prefixes (cumulative iterations before step i)
+# ---------------------------------------------------------------------------
+#
+# The paper makes each chunk *size* a pure function of the step index; for
+# most techniques the cumulative offset sum_{j<i} K_j is *also* a closed form
+# (arithmetic/geometric series), so chunk assignment needs no carried state at
+# all.  Exactness contract (see ``closed_form_prefix``): the returned value
+# equals the true prefix wherever that prefix is < N; once the schedule is
+# drained (true prefix >= N) any value >= N is acceptable, because assignment
+# clamps chunks to the remaining work there.  This lets every formula ignore
+# the elementwise top-clip of sizes at N: if some size was top-clipped, every
+# later prefix is >= N on both sides of the comparison.
+
+
+def _eff_min_chunk(p: DLSParams) -> float:
+    """Lower clamp actually applied to sizes: max(min_chunk, 1)."""
+    return float(max(p.min_chunk, 1))
+
+
+def _head_tail_prefix(closed_fn, i, p: DLSParams, head_len: int = 0):
+    """Exact prefix via a bounded head table + constant-mc tail.
+
+    Grows the evaluated head until its cumulative sum reaches N (the schedule
+    is drained — beyond that point exactness is not required) or it covers
+    max(i).  For gss/tap/pls the head is O(P log(N/P)) long (geometric decay
+    to the min chunk); for rnd it is the counter-based drain length ~2P.
+    """
+    i = np.asarray(i, dtype=np.int64)
+    mce = _eff_min_chunk(p)
+    imax = int(i.max()) if i.size else 0
+    L = max(min(imax, head_len or (4 * p.P + 64)), 0)
+    while True:
+        js = np.arange(L, dtype=np.int64)
+        sizes = np.clip(np.round(closed_fn(js, p)), mce, float(p.N))
+        csum = np.concatenate([[0.0], np.cumsum(sizes)])
+        if L >= imax or csum[-1] >= p.N:
+            break
+        L = min(imax, L * 2 + 64)
+    idx = np.minimum(i, L)
+    return csum[idx] + np.maximum(i - L, 0).astype(np.float64) * mce
+
+
+def _batched_prefix(closed_fn, i, p: DLSParams, bmax: int):
+    """Prefix for batched techniques (P equal chunks per batch) whose batch
+    value is constant for every batch >= ``bmax``."""
+    i = np.asarray(i, dtype=np.int64)
+    mce = _eff_min_chunk(p)
+    bs = np.arange(bmax + 1, dtype=np.int64)
+    vb = np.clip(np.round(closed_fn(bs * p.P, p)), mce, float(p.N))
+    cum = np.concatenate([[0.0], np.cumsum(vb[:-1])])  # cum[b] = sum_{b'<b} vb
+    B = i // p.P
+    rr = (i % p.P).astype(np.float64)
+    Bc = np.minimum(B, bmax)
+    tail = (B - Bc).astype(np.float64) * vb[bmax]
+    return float(p.P) * (cum[Bc] + tail) + rr * vb[Bc]
+
+
+def _static_prefix(i, p: DLSParams):
+    i = np.asarray(i, dtype=np.float64)
+    mce = _eff_min_chunk(p)
+    base = float(p.N // p.P)
+    rem = float(p.N % p.P)
+    a = max(base + 1.0, mce)  # chunks j < rem
+    b = max(base, mce)  # chunks rem <= j < P
+    ip = np.minimum(i, float(p.P))
+    return (
+        np.minimum(i, rem) * a
+        + np.clip(ip - rem, 0.0, None) * b
+        + np.maximum(i - p.P, 0.0) * mce
+    )
+
+
+def _ss_prefix(i, p: DLSParams):
+    return np.asarray(i, dtype=np.float64) * _eff_min_chunk(p)
+
+
+def _fsc_prefix(i, p: DLSParams):
+    k = np.clip(math.floor(_fsc_size(p)), _eff_min_chunk(p), float(p.N))
+    return np.asarray(i, dtype=np.float64) * k
+
+
+def _tss_prefix(i, p: DLSParams):
+    k0, k_last, s, c = _tss_consts(p)
+    i = np.asarray(i, dtype=np.float64)
+    mce = _eff_min_chunk(p)
+    if c <= 0:
+        return i * np.clip(float(k0), mce, float(p.N))
+    # sizes are max(k0 - j*c, mce); m = #unclamped terms before i
+    m_full = max(int(math.ceil((k0 - mce) / c)), 0)
+    m = np.minimum(i, float(m_full))
+    return m * float(k0) - float(c) * m * (m - 1.0) / 2.0 + (i - m) * mce
+
+
+def _fac_prefix(i, p: DLSParams):
+    a = p.N / p.P
+    mce = _eff_min_chunk(p)
+    bmax = max(int(math.ceil(math.log2(max(a / mce, 1.0)))) + 2, 1)
+    return _batched_prefix(_fac_closed, i, p, bmax)
+
+
+def _tfss_prefix(i, p: DLSParams):
+    k0, k_last, s, c = _tss_consts(p)
+    bmax = 1 if c <= 0 else int(math.ceil(((k0 - 1.0) / c) / p.P)) + 2
+    return _batched_prefix(_tfss_closed, i, p, max(bmax, 1))
+
+
+def _fiss_prefix(i, p: DLSParams):
+    k0, c = _fiss_consts(p)
+    bmax = 1 if c <= 0 else int(math.ceil((p.N - k0) / c)) + 2
+    return _batched_prefix(_fiss_closed, i, p, max(bmax, 1))
+
+
+def _viss_prefix(i, p: DLSParams):
+    k0_real = p.N / (p.viss_x * p.P)
+    bmax = max(int(math.ceil(math.log2(max(k0_real, 2.0)))) + 3, 1)
+    return _batched_prefix(_viss_closed, i, p, bmax)
+
+
+def _gss_prefix(i, p: DLSParams):
+    return _head_tail_prefix(_gss_closed, i, p)
+
+
+def _tap_prefix(i, p: DLSParams):
+    # TAP's adjustment never exceeds the GSS value, so the same geometric
+    # head bound applies (adjust(x) <= x for all x >= 0).
+    return _head_tail_prefix(_tap_closed, i, p)
+
+
+def _pls_prefix(i, p: DLSParams):
+    return _head_tail_prefix(_pls_closed, i, p, head_len=2 * p.P + 64)
+
+
+def _rnd_prefix(i, p: DLSParams):
+    # Counter-based prefix: every head term is a pure function of (seed, j),
+    # so the head summation is stateless and reproducible on any PE.
+    return _head_tail_prefix(_rnd_closed, i, p, head_len=4 * p.P + 64)
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
 
 TECHNIQUES: Dict[str, Technique] = {
-    "static": Technique("static", "fixed", _static_closed, _static_rec),
-    "ss": Technique("ss", "fixed", _ss_closed, _ss_rec),
-    "fsc": Technique("fsc", "fixed", _fsc_closed, _fsc_rec),
-    "gss": Technique("gss", "decreasing", _gss_closed, _gss_rec),
-    "tap": Technique("tap", "decreasing", _tap_closed, _tap_rec),
-    "tss": Technique("tss", "decreasing", _tss_closed, _tss_rec),
-    "fac": Technique("fac", "decreasing", _fac_closed, _fac_rec, batched=True),
-    "tfss": Technique("tfss", "decreasing", _tfss_closed, _tfss_rec, batched=True),
-    "fiss": Technique("fiss", "increasing", _fiss_closed, _fiss_rec, batched=True),
-    "viss": Technique("viss", "increasing", _viss_closed, _viss_rec, batched=True),
-    "rnd": Technique("rnd", "irregular", _rnd_closed, _rnd_rec),
-    "pls": Technique("pls", "decreasing", _pls_closed, _pls_rec),
+    "static": Technique("static", "fixed", _static_closed, _static_rec,
+                        prefix_form=_static_prefix),
+    "ss": Technique("ss", "fixed", _ss_closed, _ss_rec, prefix_form=_ss_prefix),
+    "fsc": Technique("fsc", "fixed", _fsc_closed, _fsc_rec, prefix_form=_fsc_prefix),
+    "gss": Technique("gss", "decreasing", _gss_closed, _gss_rec,
+                     prefix_form=_gss_prefix),
+    "tap": Technique("tap", "decreasing", _tap_closed, _tap_rec,
+                     prefix_form=_tap_prefix),
+    "tss": Technique("tss", "decreasing", _tss_closed, _tss_rec,
+                     prefix_form=_tss_prefix),
+    "fac": Technique("fac", "decreasing", _fac_closed, _fac_rec, batched=True,
+                     prefix_form=_fac_prefix),
+    "tfss": Technique("tfss", "decreasing", _tfss_closed, _tfss_rec, batched=True,
+                      prefix_form=_tfss_prefix),
+    "fiss": Technique("fiss", "increasing", _fiss_closed, _fiss_rec, batched=True,
+                      prefix_form=_fiss_prefix),
+    "viss": Technique("viss", "increasing", _viss_closed, _viss_rec, batched=True,
+                      prefix_form=_viss_prefix),
+    "rnd": Technique("rnd", "irregular", _rnd_closed, _rnd_rec,
+                     prefix_form=_rnd_prefix),
+    "pls": Technique("pls", "decreasing", _pls_closed, _pls_rec,
+                     prefix_form=_pls_prefix),
     "af": Technique("af", "irregular", None, _af_rec, requires_feedback=True),
 }
 
@@ -471,3 +626,29 @@ def closed_form_sizes(name: str, i, params: DLSParams) -> np.ndarray:
         )
     raw = tech.closed_form(np.asarray(i), params)
     return np.maximum(raw, float(params.min_chunk))
+
+
+def closed_form_prefix(name: str, i, params: DLSParams) -> np.ndarray:
+    """Cumulative iterations assigned before step ``i`` — the DCA chunk
+    *offset* as a pure function of the step index (no carried state).
+
+    Exactness contract: for each entry of ``i`` the result equals
+    ``sum_{j<i} clip(round(closed_form(j)), max(min_chunk,1), N)`` whenever
+    that sum is < N.  Once the schedule is drained (true prefix >= N) the
+    result is only guaranteed to be >= N — chunk assignment clamps to the
+    remaining work there, so downstream offsets/sizes are unaffected.
+
+    Complexity: O(1) per entry for static/ss/fsc/tss, O(log N) bounded-term
+    sums for fac/tfss/fiss/viss, and a bounded head summation of
+    O(P log(N/P)) terms for gss/tap/pls (geometric decay) / O(P) for rnd
+    (counter-based drain).
+    """
+    tech = get_technique(name)
+    if tech.closed_form is None:
+        raise ValueError(
+            f"technique {name!r} has no straightforward (closed-form) formula; "
+            "the paper (Sec. 4) requires extra synchronization for it under DCA"
+        )
+    if tech.prefix_form is not None:
+        return tech.prefix_form(np.asarray(i), params)
+    return _head_tail_prefix(tech.closed_form, np.asarray(i), params)

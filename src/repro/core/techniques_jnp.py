@@ -15,6 +15,7 @@ Parameters travel as a flat float32 vector (``pack_params``) with layout:
 
 from __future__ import annotations
 
+import math
 from typing import Sequence
 
 import jax
@@ -23,7 +24,15 @@ import numpy as np
 
 from .techniques import DLSParams
 
-__all__ = ["TECH_IDS", "TECH_NAMES_DCA", "pack_params", "sizes_for_steps", "PARAM_LEN"]
+__all__ = [
+    "TECH_IDS",
+    "TECH_NAMES_DCA",
+    "pack_params",
+    "sizes_for_steps",
+    "prefix_for_steps",
+    "default_head_cap",
+    "PARAM_LEN",
+]
 
 # DCA-capable techniques only (AF excluded — no closed form; paper Sec. 4).
 TECH_NAMES_DCA: Sequence[str] = (
@@ -170,3 +179,191 @@ def sizes_for_steps(tech_id, i, pv):
     else:
         raw = jax.lax.switch(tech_id, list(_FNS), i, pv)
     return jnp.maximum(raw, pv[_MINK])
+
+
+# ---------------------------------------------------------------------------
+# Closed-form prefixes (cumulative iterations before step i) — f32 mirror of
+# techniques.closed_form_prefix, consistent with the f32 sizes above:
+# prefix(i) == sum_{j<i} clip(round(sizes_for_steps(j)), 1, N) in exact f32
+# integer arithmetic wherever the true prefix is < N (and >= N beyond, where
+# assignment clamps anyway).  This is what makes the Pallas chunk kernel's
+# grid fully parallel and the SPMD round state derivable from the round
+# number alone — see DESIGN.md Sec. 7.
+# ---------------------------------------------------------------------------
+
+
+def _mce(pv):
+    """Effective lower size clamp (>=1), top-clipped at N."""
+    return jnp.clip(jnp.maximum(pv[_MINK], 1.0), 1.0, pv[_N])
+
+
+def _clipped_size(fn, j, pv):
+    """The schedule's view of fn: round + clamp to [max(min_chunk,1), N]."""
+    return jnp.clip(jnp.round(jnp.maximum(fn(j, pv), pv[_MINK])), 1.0, pv[_N])
+
+
+def _tri(x):
+    # x*(x-1)/2 with the product formed first: x*(x-1) is an exact even f32
+    # integer up to 2**25, so the halving stays exact in the pre-drain range.
+    return x * (x - 1.0) * 0.5
+
+
+def _head_prefix(fn, i, pv, head_cap: int):
+    """Bounded head summation + constant-mc tail (gss/tap/pls/rnd).
+
+    Requires every step >= head_cap to have size == min chunk (callers pick
+    head_cap from ``default_head_cap``; for rnd the cap must cover the whole
+    evaluated step range).
+    """
+    i = jnp.asarray(i, dtype=jnp.float32)
+    js = jnp.arange(max(head_cap, 1), dtype=jnp.float32)
+    sz = _clipped_size(fn, js, pv)
+    mask = js < i[..., None]
+    head = jnp.sum(sz * mask, axis=-1)
+    return head + jnp.maximum(i - float(max(head_cap, 1)), 0.0) * _mce(pv)
+
+
+def _batched_prefix(fn, i, pv, bcap: int):
+    """Prefix for batched techniques whose batch value saturates by bcap-1."""
+    i = jnp.asarray(i, dtype=jnp.float32)
+    p_ = pv[_P]
+    bs = jnp.arange(bcap, dtype=jnp.float32)
+    vb = _clipped_size(fn, bs * p_, pv)  # [bcap] batch values
+    b = jnp.floor(i / p_)
+    rr = i - b * p_
+    bc = jnp.minimum(b, float(bcap - 1))
+    cum = jnp.sum(vb * (bs < bc[..., None]), axis=-1)
+    vcur = jnp.sum(vb * (bs == bc[..., None]), axis=-1)
+    tail = (b - bc) * vb[bcap - 1]
+    return p_ * (cum + tail) + rr * vcur
+
+
+def _static_pfx(i, pv, head_cap):
+    base = jnp.floor(pv[_N] / pv[_P])
+    rem = pv[_N] - base * pv[_P]
+    mce = _mce(pv)
+    a = jnp.clip(jnp.maximum(base + 1.0, mce), 1.0, pv[_N])
+    bsz = jnp.clip(jnp.maximum(base, mce), 1.0, pv[_N])
+    ip = jnp.minimum(i, pv[_P])
+    return (
+        jnp.minimum(i, rem) * a
+        + jnp.maximum(ip - rem, 0.0) * bsz
+        + jnp.maximum(i - pv[_P], 0.0) * mce
+    )
+
+
+def _ss_pfx(i, pv, head_cap):
+    return i * _mce(pv)
+
+
+def _fsc_pfx(i, pv, head_cap):
+    logp = jnp.log2(jnp.maximum(pv[_P], 2.0))
+    k = (jnp.sqrt(2.0) * pv[_N] * pv[_H]) / (pv[_SIGMA] * pv[_P] * jnp.sqrt(logp) + 1e-30)
+    k_eff = jnp.clip(jnp.maximum(jnp.floor(k), _mce(pv)), 1.0, pv[_N])
+    return i * k_eff
+
+
+def _tss_pfx(i, pv, head_cap):
+    k0, c = _tss_consts(pv)
+    mce = _mce(pv)
+    safe_c = jnp.maximum(c, 1.0)
+    m_full = jnp.maximum(jnp.ceil((k0 - mce) / safe_c), 0.0)
+    m = jnp.minimum(i, m_full)
+    # sum of the unclamped arithmetic head: m*k0 - c*m*(m-1)/2
+    lin = m * k0 - c * _tri(m) + (i - m) * mce
+    return jnp.where(c > 0, lin, i * jnp.clip(k0, mce, pv[_N]))
+
+
+def _fiss_pfx(i, pv, head_cap):
+    b_ = pv[_FISS_B]
+    k0 = jnp.floor(pv[_N] / ((2.0 + b_) * pv[_P]))
+    cc = jnp.floor((2.0 * pv[_N] * (1.0 - b_ / (2.0 + b_))) / (pv[_P] * b_ * jnp.maximum(b_ - 1.0, 1.0)))
+    mce = _mce(pv)
+    p_ = pv[_P]
+    B = jnp.floor(i / p_)
+    rr = i - B * p_
+    safe_cc = jnp.maximum(cc, 1.0)
+    b_lo = jnp.maximum(jnp.ceil((mce - k0) / safe_cc), 0.0)  # value==mce below
+    b_hi = jnp.maximum(jnp.ceil((pv[_N] - k0) / safe_cc), b_lo)  # value==N above
+    u = jnp.clip(B, b_lo, b_hi)
+    s_mid = (u - b_lo) * k0 + cc * (_tri(u) - _tri(b_lo))
+    s = mce * jnp.minimum(B, b_lo) + s_mid + pv[_N] * jnp.maximum(B - b_hi, 0.0)
+    v_cur = jnp.clip(k0 + B * cc, mce, pv[_N])
+    lin = p_ * s + rr * v_cur
+    return jnp.where(cc > 0, lin, i * jnp.clip(k0, mce, pv[_N]))
+
+
+def _fac_pfx(i, pv, head_cap):
+    return _batched_prefix(_fac, i, pv, 40)
+
+
+def _tfss_pfx(i, pv, head_cap):
+    return _batched_prefix(_tfss, i, pv, 16)
+
+
+def _viss_pfx(i, pv, head_cap):
+    return _batched_prefix(_viss, i, pv, 40)
+
+
+def _gss_pfx(i, pv, head_cap):
+    return _head_prefix(_gss, i, pv, head_cap)
+
+
+def _tap_pfx(i, pv, head_cap):
+    return _head_prefix(_tap, i, pv, head_cap)
+
+
+def _pls_pfx(i, pv, head_cap):
+    return _head_prefix(_pls, i, pv, head_cap)
+
+
+def _rnd_pfx(i, pv, head_cap):
+    return _head_prefix(_rnd, i, pv, head_cap)
+
+
+_PFX_FNS = (_static_pfx, _ss_pfx, _fsc_pfx, _gss_pfx, _tap_pfx, _tss_pfx,
+            _fac_pfx, _tfss_pfx, _fiss_pfx, _viss_pfx, _rnd_pfx, _pls_pfx)
+
+
+def default_head_cap(technique: str, params: DLSParams, max_steps: int) -> int:
+    """Static head length for ``prefix_for_steps``' bounded summations.
+
+    For gss/tap the head covers the geometric decay down to the min chunk
+    (plus a safety margin absorbing f32 exp/log boundary jitter); pls adds its
+    P static chunks; rnd has no analytic bound, so its head must span every
+    step the caller will evaluate.  Exact-series techniques return 1 (unused).
+    """
+    mce = max(params.min_chunk, 1)
+
+    def _decay_len(a: float) -> int:
+        if params.P <= 1 or a <= mce:
+            return 2
+        return int(math.ceil(math.log(a / mce) / math.log(params.P / (params.P - 1.0)))) + 64
+
+    if technique in ("gss", "tap"):
+        return min(_decay_len(params.N / params.P), max_steps)
+    if technique == "pls":
+        static_chunk = math.floor(params.N * params.swr / params.P)
+        n_dyn = max(params.N - static_chunk * params.P, 1)
+        return min(params.P + _decay_len(n_dyn / params.P), max_steps)
+    if technique == "rnd":
+        return max_steps
+    return 1
+
+
+def prefix_for_steps(tech_id, i, pv, head_cap: int = 4096):
+    """Cumulative f32 chunk iterations before step ``i`` — no carried state.
+
+    Mirrors ``techniques.closed_form_prefix`` with the same exactness
+    contract, expressed against this module's f32 sizes: wherever the true
+    prefix is < N the result equals the f32 cumsum of
+    ``clip(round(sizes_for_steps(j)), 1, N)`` bit-exactly (all quantities stay
+    integral below 2**24); past the drain point it is only guaranteed >= N.
+    ``head_cap`` must come from ``default_head_cap`` for gss/tap/pls/rnd and
+    must be a Python int (static shape).
+    """
+    i = jnp.asarray(i, dtype=jnp.float32)
+    if isinstance(tech_id, (int, np.integer)):
+        return _PFX_FNS[int(tech_id)](i, pv, head_cap)
+    fns = [lambda i_, pv_, f=f: f(i_, pv_, head_cap) for f in _PFX_FNS]
+    return jax.lax.switch(tech_id, fns, i, pv)

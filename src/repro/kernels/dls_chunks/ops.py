@@ -8,10 +8,22 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.schedule import drain_steps
 from repro.core.techniques import DLSParams
-from repro.core.techniques_jnp import TECH_IDS, pack_params
+from repro.core.techniques_jnp import TECH_IDS, default_head_cap, pack_params
 
 from .kernel import TILE, dls_chunks_pallas
+
+
+def _default_max_steps(technique: str, params: DLSParams) -> int:
+    """Smallest step count that drains the loop, from the closed-form prefix.
+
+    The f64 host prefix tells us where cumulative assignment reaches N; a one
+    tile margin absorbs any f32-vs-f64 boundary drift (the drift is at most a
+    handful of steps, never a whole 1024-step tile).
+    """
+    upper = int(math.ceil(params.N / max(params.min_chunk, 1)))
+    return min(drain_steps(technique, params) + TILE, upper)
 
 
 def dls_chunk_schedule(
@@ -28,8 +40,11 @@ def dls_chunk_schedule(
     """
     tech_id = TECH_IDS[technique]
     if max_steps is None:
-        max_steps = int(math.ceil(params.N / max(params.min_chunk, 1)))
+        max_steps = _default_max_steps(technique, params)
     num_tiles = max(int(math.ceil(max_steps / TILE)), 1)
+    head_cap = default_head_cap(technique, params, num_tiles * TILE)
     pv_tuple = tuple(float(x) for x in np.asarray(pack_params(params)))
-    sizes, offsets = dls_chunks_pallas(tech_id, pv_tuple, num_tiles, interpret=interpret)
+    sizes, offsets = dls_chunks_pallas(
+        tech_id, pv_tuple, num_tiles, head_cap=head_cap, interpret=interpret
+    )
     return sizes.reshape(-1), offsets.reshape(-1)

@@ -1,21 +1,22 @@
 """Pure-jnp oracle for the dls_chunks kernel (identical float32/int32 semantics).
 
-Mirrors the kernel's tile-wise evaluation: within-tile exclusive prefix sums
-and a queue-head carry saturated at N between tiles (which is what keeps the
-int32 arithmetic in range for increasing techniques — see kernel.py).
+Mirrors the kernel's stateless tile evaluation: each tile's base offset is
+the closed-form prefix at its first step (no carry between tiles), plus a
+within-tile exclusive prefix sum.  All quantities below the drain point are
+f32-exact integers, so this matches the kernel bit-for-bit (see kernel.py for
+the N <= 2**23 range argument).
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.techniques_jnp import sizes_for_steps
+from repro.core.techniques_jnp import prefix_for_steps, sizes_for_steps
 
-from .kernel import TILE
+from .kernel import LANES, ROWS, TILE
 
 
-def dls_chunk_schedule_ref(tech_id: int, pv: jnp.ndarray, max_steps: int):
+def dls_chunk_schedule_ref(tech_id: int, pv, max_steps: int, head_cap: int = 4096):
     """(sizes, offsets) int32 [max_steps_padded]; zero-size entries mark the
     drained tail.  Mirrors core.schedule.build_schedule_dca in f32/jnp."""
     pv = jnp.asarray(pv, dtype=jnp.float32)
@@ -23,17 +24,20 @@ def dls_chunk_schedule_ref(tech_id: int, pv: jnp.ndarray, max_steps: int):
     n_steps = max_steps + pad
     steps = jnp.arange(n_steps, dtype=jnp.float32)
     raw = sizes_for_steps(tech_id, steps, pv)
-    raw = jnp.clip(jnp.round(raw), 1.0, pv[0]).astype(jnp.int32)
-    n_total = pv[0].astype(jnp.int32)
+    raw = jnp.clip(jnp.round(raw), 1.0, pv[0])
+    n_total = pv[0]
 
-    tiles = raw.reshape(-1, TILE)
+    tiles = raw.reshape(-1, ROWS, LANES)
+    tile_starts = jnp.arange(tiles.shape[0], dtype=jnp.float32) * TILE
+    bases = prefix_for_steps(int(tech_id), tile_starts, pv, head_cap=head_cap)
 
-    def tile_step(lp0, tile_raw):
-        excl = jnp.cumsum(tile_raw) - tile_raw
-        starts = lp0 + excl
-        sizes = jnp.clip(n_total - starts, 0, tile_raw)
-        offsets = jnp.clip(starts, 0, n_total)
-        return jnp.minimum(lp0 + jnp.sum(tile_raw), n_total), (sizes, offsets)
+    # within-tile exclusive cumsum, matching the kernel's row-major tile order
+    within_row = jnp.cumsum(tiles, axis=2) - tiles
+    row_totals = jnp.sum(tiles, axis=2)
+    row_prefix = jnp.cumsum(row_totals, axis=1) - row_totals
+    excl = within_row + row_prefix[:, :, None]
 
-    _, (sizes, offsets) = jax.lax.scan(tile_step, jnp.int32(0), tiles)
+    starts = bases[:, None, None] + excl
+    sizes = jnp.clip(n_total - starts, 0.0, tiles).astype(jnp.int32)
+    offsets = jnp.clip(starts, 0.0, n_total).astype(jnp.int32)
     return sizes.reshape(-1)[:max_steps], offsets.reshape(-1)[:max_steps]

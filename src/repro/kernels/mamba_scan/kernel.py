@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.jax_compat import pallas_tpu_compiler_params
+
+_CompilerParams = pallas_tpu_compiler_params()
+
 
 def _mamba_kernel(
     x_ref, dt_ref, a_ref, b_ref, c_ref, dskip_ref,  # blocks, see specs below
@@ -88,7 +92,7 @@ def mamba_scan_pallas(
         out_specs=pl.BlockSpec((1, block_l, block_d), lambda b_, di, li: (b_, li, di)),
         out_shape=jax.ShapeDtypeStruct((bsz, l, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,112 @@
+"""Engine equivalence: the round-based vectorized engine (core/fastsim) must
+reproduce the per-chunk heapq event engine (core/simulator) **bit-identically**
+— same chunk sizes, same PE placement, same per-PE finish/busy times, same
+T_loop^par — for every non-feedback technique, both CCA and DCA, homogeneous
+and slowed-down PE speeds, across the paper's delay scenarios."""
+
+import numpy as np
+import pytest
+
+from repro.core.fastsim import simulate_fast, simulate_sweep, sweep_configs
+from repro.core.schedule import build_schedule_cca, build_schedule_dca
+from repro.core.simulator import SimConfig, mandelbrot_costs, simulate
+from repro.core.techniques import DLSParams, TECHNIQUES
+
+NONFEEDBACK = sorted(n for n, t in TECHNIQUES.items() if not t.requires_feedback)
+
+N = 4096
+P = 32
+
+
+@pytest.fixture(scope="module")
+def costs():
+    return mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+
+
+@pytest.fixture(scope="module")
+def slow_speeds():
+    rng = np.random.default_rng(0)
+    return rng.uniform(0.5, 1.5, P)
+
+
+def _assert_identical(a, b, ctx):
+    assert np.array_equal(a.chunk_sizes, b.chunk_sizes), ctx
+    assert np.array_equal(a.chunk_pes, b.chunk_pes), ctx
+    assert a.t_parallel == b.t_parallel, (ctx, a.t_parallel, b.t_parallel)
+    assert np.array_equal(a.pe_finish, b.pe_finish), ctx
+    assert np.array_equal(a.pe_busy, b.pe_busy), ctx
+    assert a.num_chunks == b.num_chunks, ctx
+
+
+@pytest.mark.parametrize("approach", ["cca", "dca"])
+@pytest.mark.parametrize("tech", NONFEEDBACK)
+def test_engines_identical(tech, approach, costs, slow_speeds):
+    for delay in (0.0, 1e-4):
+        for speeds in (None, slow_speeds):
+            cfg = SimConfig(
+                technique=tech, params=DLSParams(N=N, P=P),
+                approach=approach, delay_calc_s=delay, pe_speeds=speeds,
+            )
+            _assert_identical(
+                simulate(cfg, costs), simulate_fast(cfg, costs),
+                (tech, approach, delay, speeds is not None),
+            )
+
+
+@pytest.mark.parametrize("approach", ["cca", "dca"])
+def test_engines_identical_constant_costs(approach):
+    """Constant costs + homogeneous PEs produce massive exact-time ties —
+    the stress case for the engine's heap-order (t, pe) tie-breaking."""
+    from repro.core.simulator import constant_costs
+
+    cc = constant_costs(2048, 1e-3)
+    for tech in ("ss", "fac", "static"):
+        cfg = SimConfig(
+            technique=tech, params=DLSParams(N=2048, P=16),
+            approach=approach, delay_calc_s=1e-5,
+        )
+        _assert_identical(simulate(cfg, cc), simulate_fast(cfg, cc),
+                          (tech, approach, "const"))
+
+
+def test_af_requires_event_engine(costs):
+    cfg = SimConfig(technique="af", params=DLSParams(N=N, P=P), approach="dca")
+    with pytest.raises(ValueError):
+        simulate_fast(cfg, costs)
+
+
+def test_fixed_pattern_cca_equals_dca_schedule():
+    """The CCA table shortcut for fixed-size techniques (fastsim._chunk_table)
+    rests on their recursions being R-independent: pin it."""
+    params = DLSParams(N=10_000, P=16)
+    for tech in ("static", "ss", "fsc"):
+        cca = build_schedule_cca(tech, params)
+        dca = build_schedule_dca(tech, params)
+        np.testing.assert_array_equal(cca.sizes, dca.sizes)
+        np.testing.assert_array_equal(cca.offsets, dca.offsets)
+
+
+def test_sweep_matches_per_config_loop(costs, slow_speeds):
+    scenarios = {"homog": None, "slowed": slow_speeds}
+    params = DLSParams(N=N, P=P)
+    techs = ["gss", "ss", "af"]
+    rows = simulate_sweep(params, costs, techs, delays_s=(0.0, 1e-4),
+                          speed_scenarios=scenarios)
+    assert len(rows) == len(techs) * 2 * 2 * 2
+    for row in rows:
+        cfg = SimConfig(
+            technique=row["technique"], params=params,
+            approach=row["approach"], delay_calc_s=row["delay_s"],
+            pe_speeds=scenarios[row["scenario"]],
+        )
+        ref = simulate(cfg, costs)
+        expected_engine = "event" if row["technique"] == "af" else "analytic"
+        assert row["engine"] == expected_engine
+        assert row["t_parallel"] == ref.t_parallel, row
+        assert row["num_chunks"] == ref.num_chunks, row
+
+
+def test_sweep_configs_grid_shape():
+    grid = sweep_configs(["gss", "fac"], delays_s=(0.0, 1e-5))
+    assert len(grid) == 2 * 2 * 2  # tech x approach x delay (1 scenario)
+    assert {g["technique"] for g in grid} == {"gss", "fac"}

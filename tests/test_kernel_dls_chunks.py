@@ -47,11 +47,38 @@ def test_kernel_coverage_invariant(tech):
     assert s.sum() == params.N
 
 
-def test_kernel_carry_across_tiles():
-    """Schedules longer than one (8x128) tile exercise the SMEM carry."""
+def test_kernel_multi_tile_offsets_continuous():
+    """Schedules longer than one (8x128) tile: tile base offsets come from
+    the closed-form prefix (no SMEM carry) and must still be continuous."""
     params = DLSParams(N=20_000, P=2)  # ss => 20k steps => 20 tiles
     sizes, offs = dls_chunk_schedule("ss", params, interpret=True)
     sizes, offs = np.asarray(sizes), np.asarray(offs)
     keep = sizes > 0
     assert keep.sum() == 20_000
     np.testing.assert_array_equal(offs[keep], np.arange(20_000))
+
+
+@pytest.mark.parametrize("tech", ["gss", "fac", "fiss", "tss", "viss"])
+def test_kernel_beyond_old_int32_bound(tech):
+    """N > 1e6: the carry-saturation era capped the kernel at ~1e6 iterations
+    (unclamped int32 tile prefix sums of increasing techniques overflowed).
+    The stateless f32 tile offsets support N up to 2**23 — prove coverage at
+    N = 2**22 for decreasing AND increasing techniques."""
+    n = 4_194_304  # 2**22
+    params = DLSParams(N=n, P=256)
+    sizes, offs = dls_chunk_schedule(tech, params, interpret=True)
+    sizes, offs = np.asarray(sizes), np.asarray(offs)
+    keep = sizes > 0
+    s, o = sizes[keep], offs[keep]
+    assert s.sum() == n, f"{tech}: covered {s.sum()} of {n}"
+    assert o[0] == 0
+    np.testing.assert_array_equal(o[1:], (o + s)[:-1])
+    # head of the schedule must agree with the float64 host builder
+    host = build_schedule_dca(tech, params)
+    head = min(64, len(host.sizes), len(s))
+    np.testing.assert_array_equal(s[:head], host.sizes[:head])
+
+
+def test_kernel_rejects_n_beyond_f32_exact_range():
+    with pytest.raises(ValueError):
+        dls_chunk_schedule("gss", DLSParams(N=2 ** 23 + 1, P=256), interpret=True)

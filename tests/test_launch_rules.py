@@ -9,6 +9,7 @@ import pytest
 
 PROG = textwrap.dedent("""
     import os
+    os.environ["JAX_PLATFORMS"] = "cpu"  # skip TPU probing in the bare env
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
     import math
     import jax
@@ -59,9 +60,11 @@ def test_rules_valid_for_all_cells():
 
 COMPRESS_PROG = textwrap.dedent("""
     import os
+    os.environ["JAX_PLATFORMS"] = "cpu"  # skip TPU probing in the bare env
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.core.jax_compat import shard_map
     from repro.optim.compression import ef_topk_allreduce
 
     mesh = jax.make_mesh((4,), ("dp",))
@@ -71,7 +74,7 @@ COMPRESS_PROG = textwrap.dedent("""
     def f(g, e):
         return ef_topk_allreduce(g, e, "dp", ratio=0.25)
 
-    out, err = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("dp"), P("dp")),
+    out, err = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("dp"), P("dp")),
                                      out_specs=(P("dp"), P("dp"))))(g, e)
     # every device's reduced gradient equals the mean of the compressed locals
     comp = []

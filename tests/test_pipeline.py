@@ -40,6 +40,7 @@ def test_gpipe_single_stage_degenerate():
 
 SUBPROCESS_PROG = textwrap.dedent("""
     import os
+    os.environ["JAX_PLATFORMS"] = "cpu"  # skip TPU probing in the bare env
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
     from repro.models.pipeline import gpipe_forward

@@ -37,7 +37,10 @@ def test_analytic_matches_xla_on_scan_free_forward():
     tokens = jax.ShapeDtypeStruct((b, s), jnp.int32)
     pshapes = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
     compiled = jax.jit(fwd).lower(pshapes, tokens).compile()
-    xla_flops = compiled.cost_analysis()["flops"]
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # jax <= 0.4.x: one dict per device
+        cost = cost[0]
+    xla_flops = cost["flops"]
 
     shape = ShapeSpec("xval", "prefill", s, b)
     ana = analytic_flops_bytes(cfg, shape, RuntimePlan(), n_devices=1, model_shards=1)

@@ -8,6 +8,8 @@ agree with the host float64 oracle when evaluated in jnp/float32.
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.schedule import (
