@@ -1,0 +1,91 @@
+"""StaticSource claim overhead vs the pre-refactor inlined executor loop.
+
+The ChunkSource redesign replaced the executor's inlined DCA claim path
+(lock-guarded step fetch-and-add + schedule table lookup) with
+``StaticSource.claim`` (itertools.count fetch-and-add, no lock).  This bench
+pins that the protocol indirection costs nothing: ns/claim for both paths,
+single-threaded and contended, plus the ratio.
+
+Run:  JAX_PLATFORMS=cpu PYTHONPATH=src:. python benchmarks/source_overhead.py [--json out.json]
+
+The committed snapshot is BENCH_source_overhead.json.
+"""
+
+import argparse
+import json
+import threading
+import time
+
+from repro.core.schedule import build_schedule_dca
+from repro.core.source import StaticSource
+from repro.core.techniques import DLSParams
+
+
+class _InlinedLoop:
+    """The pre-refactor SelfSchedulingExecutor._claim_dca, verbatim shape:
+    lock-guarded fetch-and-add, then closed-form table lookup outside it."""
+
+    def __init__(self, schedule):
+        self._schedule = schedule
+        self._lock = threading.Lock()
+        self._step = 0
+
+    def claim(self):
+        with self._lock:  # the fetch-and-add critical section
+            step = self._step
+            if step >= self._schedule.num_steps:
+                return None
+            self._step += 1
+        lo = int(self._schedule.offsets[step])
+        hi = lo + int(self._schedule.sizes[step])
+        return step, lo, hi
+
+
+def _drain_timed(claim, n_threads: int) -> float:
+    """Wall time to drain the whole schedule across n_threads claimers."""
+
+    def worker():
+        while claim() is not None:
+            pass
+
+    t0 = time.perf_counter()
+    if n_threads == 1:
+        worker()
+    else:
+        ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    return time.perf_counter() - t0
+
+
+def bench(n_claims: int = 200_000, n_threads: int = 4, repeats: int = 5) -> dict:
+    # SS: one chunk per iteration -> num_steps == n_claims claim events
+    params = DLSParams(N=n_claims, P=8)
+    schedule = build_schedule_dca("ss", params)
+    out = {"n_claims": n_claims, "technique": "ss", "threads_contended": n_threads}
+    for label, threads in (("1thread", 1), (f"{n_threads}threads", n_threads)):
+        olds, news = [], []
+        for _ in range(repeats):
+            inlined = _InlinedLoop(schedule)
+            olds.append(_drain_timed(inlined.claim, threads))
+            src = StaticSource(schedule)
+            news.append(_drain_timed(lambda: src.claim(0), threads))
+        old, new = min(olds), min(news)
+        out[f"inlined_ns_per_claim_{label}"] = old / n_claims * 1e9
+        out[f"source_ns_per_claim_{label}"] = new / n_claims * 1e9
+        out[f"ratio_{label}"] = new / old
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--claims", type=int, default=200_000)
+    args = ap.parse_args()
+    res = bench(n_claims=args.claims)
+    print(json.dumps(res, indent=2))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(res, f, indent=2)

@@ -62,3 +62,27 @@ while not DLS_Terminated(info):
     DLS_EndChunk(info)
 DLS_EndLoop(info)
 print(f"\nLB4MPI-style loop covered {total} iterations")
+
+# 5. The ChunkSource protocol: one API for every backend ----------------------
+from repro.core import ScheduleSpec, make_source
+
+for spec in (
+    ScheduleSpec("fac", N=10_000, P=8, mode="dca"),  # lock-free static claims
+    ScheduleSpec("fac", N=10_000, P=8, mode="cca"),  # recursion under the lock
+    ScheduleSpec("awf_b", N=10_000, P=8, mode="adaptive"),  # AWF under DCA
+    ScheduleSpec("gss", N=10_000, P=8, levels=(("gss", 4), ("fac", 2))),
+):
+    source = make_source(spec)
+    n_chunks = covered = 0
+    active = set(range(8))  # each worker claims until *its* queue is done
+    while active:
+        for w in sorted(active):
+            c = source.claim(worker=w)
+            if c is None:
+                active.discard(w)
+                continue
+            covered += c.size
+            source.report(c, elapsed=1e-6 * c.size)  # feeds adaptive weights
+            n_chunks += 1
+    kind = type(source).__name__
+    print(f"{spec.technique:6s} -> {kind:22s} {n_chunks:4d} chunks, {covered} iters")

@@ -1,31 +1,43 @@
 """Reproduce the paper's headline experiment (Sec. 6): CCA vs DCA under
 injected chunk-calculation delays, on both applications.
 
-Run:  PYTHONPATH=src python examples/slowdown_reproduction.py [--full]
+Run:  PYTHONPATH=src python examples/slowdown_reproduction.py [--full|--smoke]
 
 --full uses the paper's exact scale (262,144 iterations, 256 ranks); default
-is 4x reduced.  Expect: ~equal at 0/10us; CCA collapses at 100us, worst for
-fine-chunk techniques (SS/FSC/AF) — the paper's Fig. 4c/5c.
+is 4x reduced; --smoke is a fast CI-sized run.  Expect: ~equal at 0/10us;
+CCA collapses at 100us, worst for fine-chunk techniques (SS/FSC/AF) — the
+paper's Fig. 4c/5c.  Feedback techniques (AWF-B, AF) additionally show the
+"adaptive" column: the same technique under DCA semantics through
+``AdaptiveSource`` (epoch-published weights), which keeps the calculation off
+the critical path even though the chunks react to measured speeds.
 """
 
 import argparse
 
 from repro.core.simulator import SimConfig, mandelbrot_costs, psia_costs, simulate
-from repro.core.techniques import DLSParams
+from repro.core.techniques import DLSParams, get_technique
 
-TECHS = ["static", "ss", "fsc", "gss", "tss", "fac", "fiss", "viss", "pls", "af"]
+TECHS = ["static", "ss", "fsc", "gss", "tss", "fac", "fiss", "viss", "pls",
+         "awf_b", "af"]
+DELAYS = (0.0, 1e-5, 1e-4)
 
 
 def run(app: str, costs, n, p):
     print(f"\n=== {app} (N={n}, P={p}) — T_loop_par seconds ===")
-    header = f"{'technique':8s} " + "".join(
-        f"{a}/{d}us".rjust(13) for a in ("cca", "dca") for d in (0, 10, 100)
+    header = f"{'technique':9s} " + "".join(
+        f"{a}/{d}us".rjust(13)
+        for a in ("cca", "dca", "adapt")
+        for d in (0, 10, 100)
     )
     print(header)
     for tech in TECHS:
-        row = f"{tech:8s} "
-        for approach in ("cca", "dca"):
-            for delay in (0.0, 1e-5, 1e-4):
+        adaptive = get_technique(tech).requires_feedback
+        row = f"{tech:9s} "
+        for approach in ("cca", "dca", "adaptive"):
+            for delay in DELAYS:
+                if approach == "adaptive" and not adaptive:
+                    row += f"{'-':>13s}"
+                    continue
                 res = simulate(
                     SimConfig(technique=tech, params=DLSParams(N=n, P=p),
                               approach=approach, delay_calc_s=delay),
@@ -38,10 +50,16 @@ def run(app: str, costs, n, p):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI-sized run (N=8,192, P=64)")
     args = ap.parse_args()
     if args.full:
         n, p = 262_144, 256
         ps, mb = psia_costs(n), mandelbrot_costs(n, conversion_threshold=512)
+    elif args.smoke:
+        n, p = 8_192, 64
+        ps = psia_costs(n, mean_s=0.018)
+        mb = mandelbrot_costs(n, conversion_threshold=64, mean_s=0.0025)
     else:
         n, p = 65_536, 256
         ps = psia_costs(n, mean_s=0.018)

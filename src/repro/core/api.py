@@ -1,9 +1,13 @@
 """LB4MPI-compatible API facade (paper Sec. 5, Listing 1).
 
 Mirrors the six LB4MPI entry points plus the paper's new
-``Configure_Chunk_Calculation_Mode``.  The backing runtime is the
-thread-based ``SelfSchedulingExecutor`` (one address space stands in for the
-MPI communicator in this container; the call protocol is identical).
+``Configure_Chunk_Calculation_Mode``.  Since the ChunkSource redesign the
+facade is a thin adapter: ``DLS_StartLoop`` builds the backend selected by
+the configured mode (see core/source.py) and the chunk calls delegate to it.
+Feedback techniques (AF, AWF-B/C/D/E) under ``dca`` now run through the
+adaptive epoch source instead of silently downgrading to CCA; requesting a
+mode that cannot run as asked emits a ``ModeDowngradeWarning`` and the
+resolved mode is recorded as ``info.effective_mode``.
 
 Typical usage (cf. Listing 1):
 
@@ -22,9 +26,10 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Optional
+import warnings
+from typing import Dict, Optional, Tuple
 
-from .schedule import build_schedule_dca
+from .source import Chunk, ChunkSource, ModeDowngradeWarning, resolve_mode, source_for
 from .techniques import DLSParams, get_technique
 
 __all__ = [
@@ -42,83 +47,84 @@ __all__ = [
 class _LoopInfo:
     params: DLSParams
     technique: str
-    mode: str = "dca"
-    # shared scheduling state (the "coordinator memory" of Fig. 3)
+    mode: str = "dca"  # requested mode
+    effective_mode: str = "dca"  # what actually runs (recorded by Configure)
     lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
-    step: int = 0
-    lp_start: int = 0
-    remaining: int = 0
-    prev_raw: float = 0.0
-    schedule: object = None
+    source: Optional[ChunkSource] = None
     started: bool = False
     current_chunk: Optional[tuple] = None
+    # per-thread in-flight chunk (worker id, Chunk, t_start) for EndChunk reports
+    inflight: Dict[int, Tuple[Chunk, float]] = dataclasses.field(default_factory=dict)
     t_start: float = 0.0
     t_loop: float = 0.0
+
+
+def _require_started(info: _LoopInfo, call: str) -> None:
+    if not info.started or info.source is None:
+        raise RuntimeError(
+            f"{call}: loop not started — call DLS_StartLoop(info) first"
+        )
 
 
 def DLS_Parameters_Setup(n_workers: int, N: int, technique: str = "fac", **kw) -> _LoopInfo:
     params = DLSParams(N=N, P=n_workers, **kw)
     get_technique(technique)  # validate early
-    return _LoopInfo(params=params, technique=technique, remaining=N)
+    mode, _ = resolve_mode(technique, "auto")
+    return _LoopInfo(params=params, technique=technique, mode=mode, effective_mode=mode)
 
 
 def Configure_Chunk_Calculation_Mode(info: _LoopInfo, mode: str) -> None:
-    """Select 'cca' or 'dca' (the paper's new API)."""
-    if mode not in ("cca", "dca"):
-        raise ValueError(f"mode must be 'cca' or 'dca', got {mode!r}")
-    tech = get_technique(info.technique)
-    if mode == "dca" and not tech.dca_supported:
-        mode = "cca"  # AF: the paper's synchronized fallback
+    """Select 'cca' or 'dca' (the paper's new API; 'adaptive'/'dca_sync' are
+    this repo's extensions).  When the technique cannot run the requested
+    mode as asked, a ``ModeDowngradeWarning`` explains what runs instead and
+    ``info.effective_mode`` records it — never a silent fallback."""
+    if mode not in ("cca", "dca", "adaptive", "dca_sync"):
+        raise ValueError(
+            f"mode must be 'cca', 'dca', 'adaptive' or 'dca_sync', got {mode!r}"
+        )
+    effective, message = resolve_mode(info.technique, mode)
+    if message:
+        warnings.warn(message, ModeDowngradeWarning, stacklevel=2)
     info.mode = mode
+    info.effective_mode = effective
 
 
 def DLS_StartLoop(info: _LoopInfo) -> None:
-    info.step = 0
-    info.lp_start = 0
-    info.remaining = info.params.N
-    info.prev_raw = 0.0
+    info.source = source_for(
+        info.technique, info.params, info.effective_mode, warn=False
+    )
+    with info.lock:
+        info.current_chunk = None
+        info.inflight.clear()
     info.started = True
     info.t_start = time.perf_counter()
-    if info.mode == "dca":
-        info.schedule = build_schedule_dca(info.technique, info.params)
 
 
 def DLS_Terminated(info: _LoopInfo) -> bool:
-    with info.lock:
-        if info.mode == "dca":
-            return info.step >= info.schedule.num_steps
-        return info.remaining <= 0
+    _require_started(info, "DLS_Terminated")
+    return info.source.drained()
 
 
-def DLS_StartChunk(info: _LoopInfo):
+def DLS_StartChunk(info: _LoopInfo, worker: int = 0):
     """Claim the next chunk; returns (lo, hi) or None when the loop is drained."""
-    if info.mode == "dca":
-        with info.lock:  # fetch-and-add
-            step = info.step
-            if step >= info.schedule.num_steps:
-                return None
-            info.step += 1
-        lo = int(info.schedule.offsets[step])  # closed form, outside the lock
-        hi = lo + int(info.schedule.sizes[step])
-    else:
-        tech = get_technique(info.technique)
-        with info.lock:  # calculation inside the critical section (CCA)
-            if info.remaining <= 0:
-                return None
-            raw = tech.recursive_step(info.step, info.remaining, info.prev_raw, info.params, None)
-            k = int(min(max(int(raw), info.params.min_chunk), info.remaining))
-            info.prev_raw = raw if raw > 0 else k
-            lo = info.lp_start
-            hi = lo + k
-            info.step += 1
-            info.lp_start += k
-            info.remaining -= k
-    info.current_chunk = (lo, hi)
-    return lo, hi
+    _require_started(info, "DLS_StartChunk")
+    chunk = info.source.claim(worker)
+    if chunk is None:
+        return None
+    with info.lock:  # cross-thread visibility of the in-flight chunk
+        info.current_chunk = (chunk.lo, chunk.hi)
+        info.inflight[threading.get_ident()] = (chunk, time.perf_counter())
+    return chunk.lo, chunk.hi
 
 
 def DLS_EndChunk(info: _LoopInfo) -> None:
-    info.current_chunk = None
+    _require_started(info, "DLS_EndChunk")
+    with info.lock:
+        info.current_chunk = None
+        entry = info.inflight.pop(threading.get_ident(), None)
+    if entry is not None:
+        chunk, t0 = entry
+        info.source.report(chunk, time.perf_counter() - t0)
 
 
 def DLS_EndLoop(info: _LoopInfo) -> float:

@@ -2,19 +2,23 @@
 
 This is the working analogue of LB4MPI inside one address space: worker
 threads self-schedule chunks of an iteration space and execute a user
-function.  Two modes, switchable exactly like the paper's
-``Configure_Chunk_Calculation_Mode``:
+function.  Since the ChunkSource redesign the executor owns **no scheduling
+logic at all** — it drives whatever ``ChunkSource`` backend the mode selects
+(see core/source.py):
 
-* CCA — a designated coordinator computes every chunk size while holding the
-  queue lock (chunk calculation inside the critical section).
-* DCA — each worker atomically fetch-and-adds the step counter (critical
-  section is two integer reads + one add), then computes its chunk size and
-  offset *outside* the lock from the closed form.
+* ``dca``      -> ``StaticSource``: lock-free fetch-and-add against the
+  precomputed closed-form schedule (the paper's DCA).
+* ``cca``      -> ``CriticalSectionSource``: the recursion runs while holding
+  the queue lock (the paper's baseline).
+* ``adaptive`` -> ``AdaptiveSource``: AWF-B/C/D/E and AF under DCA semantics
+  via epoch-published snapshots.  ``mode="dca"`` with a feedback technique
+  promotes here (with a warning) instead of silently synchronizing.
+* ``dca_sync`` -> the paper's explicit AF-under-DCA fallback (calculation
+  pulled back under the lock).
 
-For non-adaptive techniques under DCA the offset is also derived lock-free:
-``lp_start(i)`` is the prefix sum of the closed form, a pure function of i.
-We memoize the prefix sums incrementally per executor to keep claims O(1)
-amortized.
+``calc_delay_s`` injects the paper's chunk-calculation slowdown: serialized
+inside the lock for CCA-style sources, concurrent on the claiming worker for
+DCA-style sources.
 
 Used by: data/scheduler.py (document->rank assignment), runtime/straggler.py
 (microbatch claims), examples/slowdown_reproduction.py.
@@ -28,7 +32,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from .schedule import build_schedule_dca
+from .source import ChunkSource, resolve_mode, source_for
 from .techniques import DLSParams, get_technique
 
 __all__ = ["SelfSchedulingExecutor", "ChunkRecord"]
@@ -54,68 +58,33 @@ class SelfSchedulingExecutor:
         params: DLSParams,
         mode: str = "dca",
         calc_delay_s: float = 0.0,
+        source: Optional[ChunkSource] = None,
     ):
-        if mode not in ("cca", "dca"):
-            raise ValueError(f"mode must be 'cca' or 'dca', got {mode!r}")
         self.technique = get_technique(technique)
-        if mode == "dca" and not self.technique.dca_supported:
-            # the paper's AF-under-DCA fallback: synchronize the calculation
-            mode = "dca_sync"
-        self.mode = mode
         self.params = params
         self.calc_delay_s = calc_delay_s
-        self._lock = threading.Lock()
-        self._step = 0
-        self._lp_start = 0
-        self._prev_raw = 0.0
-        self._remaining = params.N
-        # DCA: precompute the closed-form schedule once (pure function of i;
-        # any worker could recompute any entry independently — this table *is*
-        # the distributable object).
-        self._dca_schedule = (
-            build_schedule_dca(technique, params) if mode == "dca" else None
-        )
+        if source is not None:
+            self.source = source
+            self.mode = "custom"
+        else:
+            self.mode, _ = resolve_mode(technique, mode)
+            self.source = source_for(
+                technique, params, mode, calc_delay_s=calc_delay_s
+            )
         self.records: List[ChunkRecord] = []
         self._records_lock = threading.Lock()
 
     # -- chunk claiming ------------------------------------------------------
 
-    def _claim_cca(self) -> Optional[Tuple[int, int, int]]:
-        """Coordinator path: calculation inside the critical section."""
-        with self._lock:
-            if self._remaining <= 0:
-                return None
-            if self.calc_delay_s:
-                time.sleep(self.calc_delay_s)  # injected slowdown (serialized!)
-            raw = self.technique.recursive_step(
-                self._step, self._remaining, self._prev_raw, self.params, None
-            )
-            k = int(min(max(int(raw), self.params.min_chunk), self._remaining))
-            self._prev_raw = raw if raw > 0 else k
-            step, lo = self._step, self._lp_start
-            self._step += 1
-            self._lp_start += k
-            self._remaining -= k
-            return step, lo, lo + k
-
-    def _claim_dca(self) -> Optional[Tuple[int, int, int]]:
-        """Worker path: fetch-and-add only; calculation outside the lock."""
-        with self._lock:  # the fetch-and-add critical section
-            step = self._step
-            if step >= self._dca_schedule.num_steps:
-                return None
-            self._step += 1
-        if self.calc_delay_s:
+    def _claim(self, worker: int = 0) -> Optional[Tuple[int, int, int]]:
+        """Legacy-shaped claim: (step, lo, hi) or None.  Kept for callers of
+        the pre-ChunkSource executor; new code should use ``source.claim``."""
+        c = self.source.claim(worker)
+        if c is None:
+            return None
+        if self.calc_delay_s and not self.source.serialized:
             time.sleep(self.calc_delay_s)  # injected slowdown (concurrent)
-        # closed-form lookup — pure function of `step`, no shared state
-        lo = int(self._dca_schedule.offsets[step])
-        hi = lo + int(self._dca_schedule.sizes[step])
-        return step, lo, hi
-
-    def _claim(self):
-        if self.mode == "dca":
-            return self._claim_dca()
-        return self._claim_cca()  # cca and dca_sync (AF fallback)
+        return c.step, c.lo, c.hi
 
     # -- execution -----------------------------------------------------------
 
@@ -124,16 +93,23 @@ class SelfSchedulingExecutor:
         t0 = time.perf_counter()
 
         def worker(wid: int):
+            source = self.source
+            delay = self.calc_delay_s if not source.serialized else 0.0
             while True:
-                claim = self._claim()
-                if claim is None:
+                t_req = time.perf_counter()
+                chunk = source.claim(wid)
+                if chunk is None:
                     return
-                step, lo, hi = claim
+                if delay:
+                    time.sleep(delay)  # calculation slowdown, concurrent (DCA)
                 t_claim = time.perf_counter()
-                fn(lo, hi)
+                fn(chunk.lo, chunk.hi)
                 t_done = time.perf_counter()
+                source.report(chunk, t_done - t_claim, overhead=t_claim - t_req)
                 with self._records_lock:
-                    self.records.append(ChunkRecord(step, lo, hi, wid, t_claim, t_done))
+                    self.records.append(
+                        ChunkRecord(chunk.step, chunk.lo, chunk.hi, wid, t_claim, t_done)
+                    )
 
         threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_workers)]
         for t in threads:

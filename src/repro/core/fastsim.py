@@ -34,6 +34,7 @@ own caveat in Sec. 4.  ``simulate_sweep`` falls back automatically.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -236,13 +237,48 @@ def _cfg_engine_args(cfg: SimConfig):
     )
 
 
-def simulate_fast(cfg: SimConfig, costs: np.ndarray) -> SimResult:
+def simulate_fast(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
     """Drop-in ``simulate`` replacement for non-feedback techniques.
 
     Bit-identical to the event engine (same chunk sizes, same PE placement,
     same T_loop^par) — the equivalence suite pins this.
+
+    ``source``: a ChunkSource whose chunk table is execution-independent
+    (``materialize()``-capable, e.g. StaticSource / non-feedback
+    CriticalSectionSource) runs through the vectorized engine with the
+    timing model chosen by ``source.serialized``; adaptive sources fall back
+    to the event engine (their chunks depend on live timings — the same
+    reason AF keeps the event engine).
     """
     p = cfg.params
+    if source is not None:
+        mat = getattr(source, "materialize", None)
+        if mat is None:
+            return simulate(cfg, costs, source=source)
+        try:
+            sched = mat()
+        except ValueError:
+            # materialize exists but the source is feedback-driven (e.g. a
+            # CriticalSectionSource over AF/AWF): event engine, as promised
+            return simulate(cfg, costs, source=source)
+        args = _cfg_engine_args(cfg)
+        args["is_cca"] = bool(getattr(source, "serialized", False))
+        args["nonded"] = args["is_cca"] and not cfg.dedicated_master
+        exec_base = _exec_base(sched.sizes, sched.offsets, costs, p.N)
+        t_free, busy, pes = _run_config(exec_base, **args)
+        return SimResult(
+            t_parallel=float(t_free.max()),
+            num_chunks=sched.num_steps,
+            pe_finish=t_free,
+            pe_busy=busy,
+            chunk_sizes=sched.sizes.astype(np.int64),
+            chunk_pes=pes,
+        )
+    if cfg.approach == "adaptive":
+        if get_technique(cfg.technique).requires_feedback:
+            return simulate(cfg, costs)  # event engine + AdaptiveSource
+        # no feedback to adapt to: plain dca through the vectorized engine
+        cfg = dataclasses.replace(cfg, approach="dca")
     sizes, offsets = _chunk_table(cfg.technique, p, cfg.approach)
     exec_base = _exec_base(sizes, offsets, costs, p.N)
     t_free, busy, pes = _run_config(exec_base, **_cfg_engine_args(cfg))
@@ -324,11 +360,19 @@ def simulate_sweep(
         tech = get_technique(technique)
         if not tech.requires_feedback:
             # tables + exec times shared across the technique's whole grid
-            tables = {a: _chunk_table(technique, params, a) for a in approaches}
-            execs = {
-                a: _exec_base(sizes, offsets, costs, params.N)
-                for a, (sizes, offsets) in tables.items()
+            # ("adaptive" degenerates to dca for non-feedback techniques,
+            # aliasing the same table rather than rebuilding it)
+            table_key = {a: ("dca" if a == "adaptive" else a) for a in approaches}
+            built = {
+                k: _chunk_table(technique, params, k)
+                for k in set(table_key.values())
             }
+            built_exec = {
+                k: _exec_base(sizes, offsets, costs, params.N)
+                for k, (sizes, offsets) in built.items()
+            }
+            tables = {a: built[k] for a, k in table_key.items()}
+            execs = {a: built_exec[k] for a, k in table_key.items()}
         for a, d, sname, sp in grid:
             cfg = SimConfig(
                 technique=technique, params=params, approach=a,
@@ -337,6 +381,10 @@ def simulate_sweep(
                 dedicated_master=dedicated_master,
             )
             if tech.requires_feedback:
+                # cca/dca keep the paper's synchronized event paths;
+                # "adaptive" drives the technique through AdaptiveSource
+                # (DCA semantics via epoch snapshots) — a fresh source per
+                # config, since sources are stateful.
                 rows.append(_row(technique, a, d, sname, "event",
                                  simulate(cfg, costs)))
                 continue

@@ -12,16 +12,21 @@ fewer contention events than flat scheduling at 1000-node scale), and the
 local schedule is a pure function of (local N, W, local step).  This is the
 scaling story for the 1000+ node target: global contention drops from
 O(total chunks) to O(group chunks).
+
+The claim loop lives in ``core.source.HierarchicalSource`` — this executor
+only supplies threads and bookkeeping.  Any ``ChunkSource`` composition works
+as the levels (e.g. an ``AdaptiveSource`` local queue under a static global
+schedule); the default composes two ``StaticSource`` closed-form levels.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, List, Tuple
 
 import numpy as np
 
-from .schedule import build_schedule_dca
+from .source import HierarchicalSource, make_source, ScheduleSpec
 from .techniques import DLSParams
 
 __all__ = ["HierarchicalExecutor"]
@@ -38,69 +43,45 @@ class HierarchicalExecutor:
         workers_per_group: int,
         global_technique: str = "gss",
         local_technique: str = "fac",
+        mode: str = "dca",
     ):
         self.N = n_iterations
         self.n_groups = n_groups
         self.w_per_group = workers_per_group
         self.global_technique = global_technique
         self.local_technique = local_technique
-        # level-1 schedule: closed form over group-level steps
-        self.global_schedule = build_schedule_dca(
-            global_technique, DLSParams(N=n_iterations, P=n_groups)
+        self.source: HierarchicalSource = make_source(
+            ScheduleSpec(
+                technique=global_technique,
+                N=n_iterations,
+                P=n_groups,
+                mode=mode,
+                levels=(
+                    (global_technique, n_groups),
+                    (local_technique, workers_per_group),
+                ),
+            )
         )
-        self._global_lock = threading.Lock()
-        self._global_step = 0
-        # per-group local state: (base_offset, local_schedule, local_step)
-        self._group_lock = [threading.Lock() for _ in range(n_groups)]
-        self._group_queue: List[Optional[Tuple[int, object, int]]] = [None] * n_groups
         self.records: List[Tuple[int, int, int, int]] = []  # (group, worker, lo, hi)
         self._rec_lock = threading.Lock()
 
-    def _claim_global(self) -> Optional[Tuple[int, int]]:
-        """Fetch-and-add on the global counter -> a group-level chunk."""
-        with self._global_lock:
-            step = self._global_step
-            if step >= self.global_schedule.num_steps:
-                return None
-            self._global_step += 1
-        lo = int(self.global_schedule.offsets[step])
-        hi = lo + int(self.global_schedule.sizes[step])
-        return lo, hi
-
-    def _claim_local(self, group: int) -> Optional[Tuple[int, int]]:
-        with self._group_lock[group]:
-            state = self._group_queue[group]
-            if state is not None:
-                base, sched, lstep = state
-                if lstep < sched.num_steps:
-                    self._group_queue[group] = (base, sched, lstep + 1)
-                    lo = base + int(sched.offsets[lstep])
-                    hi = lo + int(sched.sizes[lstep])
-                    return lo, hi
-                self._group_queue[group] = None  # drained
-            # refill from the global queue
-            g = self._claim_global()
-            if g is None:
-                return None
-            base, ghi = g
-            local_n = ghi - base
-            sched = build_schedule_dca(
-                self.local_technique, DLSParams(N=local_n, P=self.w_per_group)
-            )
-            self._group_queue[group] = (base, sched, 1)
-            lo = base + int(sched.offsets[0])
-            return lo, lo + int(sched.sizes[0])
+    @property
+    def global_schedule(self):
+        """Level-1 schedule: the StaticSource table under ``dca``; for other
+        global backends, the materialized (execution-independent) plan."""
+        gs = self.source.global_source
+        return gs.schedule if hasattr(gs, "schedule") else gs.materialize()
 
     def run(self, fn: Callable[[int, int], None]) -> None:
         def worker(group: int, wid: int):
+            worker_id = group * self.w_per_group + wid
             while True:
-                claim = self._claim_local(group)
-                if claim is None:
+                chunk = self.source.claim(worker_id)
+                if chunk is None:
                     return
-                lo, hi = claim
-                fn(lo, hi)
+                fn(chunk.lo, chunk.hi)
                 with self._rec_lock:
-                    self.records.append((group, wid, lo, hi))
+                    self.records.append((group, wid, chunk.lo, chunk.hi))
 
         threads = [
             threading.Thread(target=worker, args=(g, w))
@@ -118,4 +99,4 @@ class HierarchicalExecutor:
     @property
     def global_contention_events(self) -> int:
         """Fetch-and-adds on the *global* counter (vs N/chunk for flat)."""
-        return self._global_step
+        return self.source.global_claims

@@ -16,6 +16,11 @@ Timing model (see DESIGN.md Sec. 2 for the mapping from the MPI runtime):
 * AF under DCA (paper Sec. 4): the calculation needs R_i, so it is pulled
   back inside the critical section — AF-DCA serializes like CCA but without
   master displacement.
+* adaptive (``approach="adaptive"`` or an explicit ``source=``): chunks come
+  from a ``ChunkSource`` (core/source.py) — e.g. ``AdaptiveSource`` running
+  AWF-B/C/D/E or AF under DCA semantics.  The source's ``serialized`` flag
+  selects the CCA or DCA timing model; per-chunk execution times feed
+  ``report()`` so the technique reacts to the simulated speeds.
 
 The simulator is deterministic given the cost vector and PE speeds.
 """
@@ -29,7 +34,7 @@ from typing import Optional
 
 import numpy as np
 
-from .techniques import DLSParams, closed_form_sizes, get_technique
+from .techniques import AWFFeedback, DLSParams, awf_variant, closed_form_sizes, get_technique
 
 __all__ = [
     "SimConfig",
@@ -106,7 +111,7 @@ def constant_costs(n_iterations: int, cost_s: float = 1e-3) -> np.ndarray:
 class SimConfig:
     technique: str
     params: DLSParams
-    approach: str = "dca"  # "cca" | "dca"
+    approach: str = "dca"  # "cca" | "dca" | "adaptive"
     delay_calc_s: float = 0.0  # the paper's injected delay (0 / 1e-5 / 1e-4)
     h_assign_s: float = 1e-6  # fetch-and-add / message latency
     calc_cost_s: float = 2e-7  # intrinsic formula evaluation cost
@@ -154,10 +159,28 @@ class AFFeedback:
         self._count[pe] += 1
 
 
-def simulate(cfg: SimConfig, costs: np.ndarray) -> SimResult:
-    """Run one CCA or DCA execution and return T_loop^par and diagnostics."""
+def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
+    """Run one CCA/DCA/adaptive execution; returns T_loop^par and diagnostics.
+
+    ``source`` (any ``ChunkSource``) overrides the technique/approach pair:
+    chunks are claimed from it and per-chunk execution times are reported
+    back, with the timing model selected by ``source.serialized``.  A fresh
+    source must be supplied per call (sources are stateful).
+    ``approach="adaptive"`` builds an ``AdaptiveSource`` internally.
+    """
     p = cfg.params
     assert len(costs) >= p.N, f"need >= {p.N} iteration costs, got {len(costs)}"
+    if source is None and cfg.approach == "adaptive":
+        if get_technique(cfg.technique).requires_feedback:
+            from .source import AdaptiveSource
+
+            source = AdaptiveSource(cfg.technique, p)
+        else:
+            # no feedback to adapt to: degenerate to plain dca, matching
+            # resolve_mode and simulate_sweep
+            cfg = dataclasses.replace(cfg, approach="dca")
+    if source is not None:
+        return _simulate_with_source(cfg, costs, source)
     tech = get_technique(cfg.technique)
     speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
     assert len(speeds) == p.P
@@ -175,7 +198,13 @@ def simulate(cfg: SimConfig, costs: np.ndarray) -> SimResult:
         var = max((csum2[hi] - csum2[lo]) / n - mean * mean, 0.0)
         return mean, math.sqrt(var)
 
-    feedback = AFFeedback(p.P, p.mu, p.sigma) if tech.requires_feedback else None
+    feedback = None
+    if tech.requires_feedback:
+        feedback = (
+            AWFFeedback(p.P, awf_variant(cfg.technique))
+            if cfg.technique.startswith("awf_")
+            else AFFeedback(p.P, p.mu, p.sigma)
+        )
 
     # DCA evaluates the *closed form* at each step (vectorized once here —
     # which is itself the DCA property at work); CCA walks the recursion.
@@ -229,6 +258,8 @@ def simulate(cfg: SimConfig, costs: np.ndarray) -> SimResult:
         # chunk calculation value
         if feedback is not None:
             feedback.requesting_pe = pe
+            if step and step % p.P == 0 and hasattr(feedback, "end_batch"):
+                feedback.end_batch()  # AWF batch boundary (B/D flush, C/E refresh)
         if dca_closed is not None:
             raw = float(dca_closed[step])
         else:
@@ -251,8 +282,78 @@ def simulate(cfg: SimConfig, costs: np.ndarray) -> SimResult:
         chunk_sizes.append(k)
         chunk_pes.append(pe)
         if feedback is not None:
-            m, s = chunk_stats(lo, hi)
-            feedback.update(pe, m, s)
+            if hasattr(feedback, "record"):  # AWF: (size, time[, overhead])
+                feedback.record(pe, k, exec_t, service)
+            else:  # AF: exact per-chunk iteration statistics
+                m, s = chunk_stats(lo, hi)
+                feedback.update(pe, m, s)
+        heapq.heappush(heap, (t_free, pe))
+
+    return SimResult(
+        t_parallel=float(pe_finish.max()),
+        num_chunks=len(chunk_sizes),
+        pe_finish=pe_finish,
+        pe_busy=pe_busy,
+        chunk_sizes=np.asarray(chunk_sizes, dtype=np.int64),
+        chunk_pes=np.asarray(chunk_pes, dtype=np.int64),
+    )
+
+
+def _simulate_with_source(cfg: SimConfig, costs: np.ndarray, source) -> SimResult:
+    """Event loop driven by a ChunkSource instead of inlined chunk logic.
+
+    ``source.serialized`` selects the timing model: True reproduces the CCA
+    master (the whole service is serialized, with non-dedicated-master
+    displacement per ``cfg.dedicated_master``); False reproduces DCA (the
+    calculation runs on the requesting PE, only ``h_assign`` serializes).
+    Per-chunk execution time (and the scheduling overhead, for AWF-D/E) is
+    fed back through ``report()`` at assignment, matching the legacy AF loop.
+    """
+    p = cfg.params
+    speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
+    assert len(speeds) == p.P
+    csum = np.concatenate([[0.0], np.cumsum(costs[: p.N])])
+
+    serialized = bool(getattr(source, "serialized", False))
+    heap = [(0.0, pe) for pe in range(p.P)]
+    heapq.heapify(heap)
+    coord_free = 0.0
+    master_extra = 0.0
+    pe_finish = np.zeros(p.P)
+    pe_busy = np.zeros(p.P)
+    chunk_sizes, chunk_pes = [], []
+
+    while heap:
+        t_req, pe = heapq.heappop(heap)
+        chunk = source.claim(pe)
+        if chunk is None:
+            pe_finish[pe] = max(pe_finish[pe], t_req)
+            continue  # PE retires; remaining PEs drain the queue
+        if serialized:
+            service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+            start = max(t_req, coord_free)
+            done = start + service
+            coord_free = done
+            if not cfg.dedicated_master:
+                master_extra += service
+            overhead = service
+        else:
+            t_calc_done = t_req + cfg.delay_calc_s + cfg.calc_cost_s
+            start = max(t_calc_done, coord_free)
+            done = start + cfg.h_assign_s
+            coord_free = done
+            overhead = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+
+        exec_t = float(csum[chunk.hi] - csum[chunk.lo]) / speeds[pe]
+        t_free = done + exec_t
+        if serialized and not cfg.dedicated_master and pe == 0:
+            t_free += master_extra
+            master_extra = 0.0
+        pe_finish[pe] = t_free
+        pe_busy[pe] += exec_t
+        chunk_sizes.append(chunk.size)
+        chunk_pes.append(pe)
+        source.report(chunk, exec_t, overhead)
         heapq.heappush(heap, (t_free, pe))
 
     return SimResult(

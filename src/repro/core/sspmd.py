@@ -44,6 +44,7 @@ __all__ = [
     "dca_round_assignments_stateless",
     "dca_schedule_scan",
     "dca_schedule_stateless",
+    "dca_schedule_for_spec",
     "cca_round_assignments",
     "num_rounds_upper_bound",
 ]
@@ -137,6 +138,28 @@ def dca_schedule_stateless(tech_name: str, params, axis_name: str,
     offs = jnp.clip(base, 0.0, n_total).astype(jnp.int32)
     sizes = jnp.clip(n_total - base, 0.0, raw).astype(jnp.int32)
     return offs, sizes
+
+
+def dca_schedule_for_spec(spec, axis_name: str, max_rounds: int = None):
+    """``ScheduleSpec`` front-end for the device-level scheduler — the SPMD
+    face of the unified ChunkSource API (see core/source.py).
+
+    The BSP adaptation cannot hold a Python source object inside a compiled
+    program; what it *can* share is the spec: the same (technique, N, P,
+    mode) that builds a host ``ChunkSource`` here builds the per-device
+    stateless schedule.  Feedback techniques have no closed form, so specs
+    resolving to ``adaptive`` are rejected with the same message a
+    ``StaticSource`` build would produce.
+    """
+    eff = spec.effective_mode
+    if eff != "dca":
+        raise ValueError(
+            f"device-level scheduling requires closed forms (dca); spec "
+            f"resolves to {eff!r} — adaptive/cca sources are host-only"
+        )
+    return dca_schedule_stateless(
+        spec.technique, spec.to_params(), axis_name, max_rounds=max_rounds
+    )
 
 
 def cca_round_assignments(round_state, tech_name: str, params, axis_name: str):

@@ -47,6 +47,8 @@ __all__ = [
     "DLSParams",
     "Technique",
     "TECHNIQUES",
+    "AWFFeedback",
+    "ADAPTIVE_TECHNIQUES",
     "get_technique",
     "closed_form_sizes",
     "closed_form_prefix",
@@ -434,6 +436,111 @@ def _af_rec(i, R, prev, p: DLSParams, fb=None):
     return max(int(k), p.min_chunk)
 
 
+# --- AWF (adaptive weighted factoring; B/C/D/E variants) ----------------------
+#
+# Weighted factoring (Banicescu et al.) sizes PE p's chunk as w_p times the
+# factoring share R/(2P); AWF adapts the weights from measured execution.  The
+# four variants differ only in how performance is accumulated:
+#   AWF-B  per *batch*,  compute time only
+#   AWF-C  per *chunk*,  compute time only
+#   AWF-D  per *batch*,  compute time + scheduling overhead
+#   AWF-E  per *chunk*,  compute time + scheduling overhead
+# The chunk rule itself is shared; the variant lives in the feedback object.
+
+
+class AWFFeedback:
+    """Per-PE adapted weights from weighted-average performance (AWF).
+
+    Each measurement m of PE p contributes its per-iteration time t_m/c_m
+    with weight m (recent measurements count more):
+
+        wap_p = (sum_m m * t_m/c_m) / (sum_m m)
+        w_p   = P * (1/wap_p) / sum_q (1/wap_q)        (sum of weights == P)
+
+    ``record`` is called once per finished chunk; batch variants (B/D) pool
+    chunk timings until ``end_batch`` flushes them as one measurement, chunk
+    variants (C/E) re-weight on every record.  D/E add the scheduling overhead
+    to the measured time.  PEs without measurements hold weight 1.
+    """
+
+    def __init__(self, P: int, variant: str = "b"):
+        if variant not in ("b", "c", "d", "e"):
+            raise ValueError(f"AWF variant must be one of b/c/d/e, got {variant!r}")
+        self.P = P
+        self.variant = variant
+        self.include_overhead = variant in ("d", "e")
+        self.per_batch = variant in ("b", "d")
+        self._sum_w = np.zeros(P)  # sum of measurement weights m
+        self._sum_wr = np.zeros(P)  # sum of m * (t_m / c_m)
+        self._count = np.zeros(P, dtype=np.int64)  # measurements per PE
+        self._bat_iters = np.zeros(P)
+        self._bat_time = np.zeros(P)
+        self.weights = np.ones(P)
+        self.requesting_pe = 0
+
+    @property
+    def ready(self) -> bool:
+        """Weights are meaningful once every PE has at least one measurement
+        (before that the un-measured PEs would pin the mean)."""
+        return bool((self._count > 0).all())
+
+    def record(self, pe: int, size: int, t_compute: float, t_overhead: float = 0.0):
+        t = t_compute + (t_overhead if self.include_overhead else 0.0)
+        if self.per_batch:
+            self._bat_iters[pe] += size
+            self._bat_time[pe] += t
+        else:
+            self._push(pe, size, t)
+            self.refresh_weights()
+
+    def _push(self, pe: int, size: float, t: float):
+        self._count[pe] += 1
+        m = float(self._count[pe])
+        self._sum_w[pe] += m
+        self._sum_wr[pe] += m * (t / max(size, 1.0))
+
+    def end_batch(self):
+        """Batch boundary: flush pooled timings (B/D) and re-weight."""
+        if self.per_batch:
+            for pe in np.flatnonzero(self._bat_iters > 0):
+                self._push(int(pe), self._bat_iters[pe], self._bat_time[pe])
+            self._bat_iters[:] = 0.0
+            self._bat_time[:] = 0.0
+        self.refresh_weights()
+
+    def refresh_weights(self):
+        measured = self._sum_w > 0
+        if not measured.any():
+            return
+        wap = np.full(self.P, np.nan)
+        wap[measured] = self._sum_wr[measured] / self._sum_w[measured]
+        # un-measured PEs assume the mean performance of the measured ones
+        wap = np.where(measured, wap, np.nanmean(wap))
+        inv = 1.0 / np.maximum(wap, 1e-30)
+        self.weights = self.P * inv / inv.sum()
+
+
+def _awf_rec(i, R, prev, p: DLSParams, fb=None):
+    """AWF chunk for the requesting PE: w_p * R/(2P) (factoring share times
+    the adapted weight).  Without feedback (or before every PE has reported)
+    the weights are 1 and this degenerates to the FAC share — the same
+    warm-up LB4MPI uses."""
+    w = 1.0
+    if fb is not None and getattr(fb, "ready", False):
+        w = float(fb.weights[fb.requesting_pe])
+    return max(int(math.ceil(w * R / (2.0 * p.P))), 1)
+
+
+ADAPTIVE_TECHNIQUES = ("awf_b", "awf_c", "awf_d", "awf_e", "af")
+
+
+def awf_variant(name: str) -> str:
+    """'awf_b' -> 'b'; raises for non-AWF names."""
+    if not name.startswith("awf_"):
+        raise ValueError(f"{name!r} is not an AWF technique")
+    return name.split("_", 1)[1]
+
+
 # ---------------------------------------------------------------------------
 # Closed-form prefixes (cumulative iterations before step i)
 # ---------------------------------------------------------------------------
@@ -602,6 +709,10 @@ TECHNIQUES: Dict[str, Technique] = {
     "pls": Technique("pls", "decreasing", _pls_closed, _pls_rec,
                      prefix_form=_pls_prefix),
     "af": Technique("af", "irregular", None, _af_rec, requires_feedback=True),
+    "awf_b": Technique("awf_b", "decreasing", None, _awf_rec, requires_feedback=True),
+    "awf_c": Technique("awf_c", "decreasing", None, _awf_rec, requires_feedback=True),
+    "awf_d": Technique("awf_d", "decreasing", None, _awf_rec, requires_feedback=True),
+    "awf_e": Technique("awf_e", "decreasing", None, _awf_rec, requires_feedback=True),
 }
 
 

@@ -23,8 +23,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.schedule import Schedule, build_schedule_cca, build_schedule_dca
-from repro.core.techniques import DLSParams
+from repro.core.schedule import Schedule
+from repro.core.source import ScheduleSpec, materialize
 
 from .corpus import SyntheticCorpus
 from .packing import pack_documents
@@ -33,7 +33,12 @@ __all__ = ["DLSBatchScheduler"]
 
 
 class DLSBatchScheduler:
-    """Self-scheduling document->DP-group assignment + batch assembly."""
+    """Self-scheduling document->DP-group assignment + batch assembly.
+
+    The chunk table comes from the ``ChunkSource`` layer (``materialize`` of
+    a ``ScheduleSpec``): the BSP round-robin needs *random access* to steps
+    (restart state is one integer), so it consumes the materialized schedule
+    of an execution-independent source rather than claiming live."""
 
     def __init__(
         self,
@@ -47,12 +52,10 @@ class DLSBatchScheduler:
         self.n_groups = n_groups
         self.technique = technique
         self.mode = mode
-        params = DLSParams(N=corpus.n_docs, P=n_groups, seed=seed)
-        self.schedule: Schedule = (
-            build_schedule_dca(technique, params)
-            if mode == "dca"
-            else build_schedule_cca(technique, params)
+        self.spec = ScheduleSpec(
+            technique, N=corpus.n_docs, P=n_groups, mode=mode, seed=seed
         )
+        self.schedule: Schedule = materialize(self.spec)
         # deterministic round-robin of schedule steps to groups: step i is
         # claimed by group (i mod P) — the BSP specialization of the paper's
         # "first free PE" (core/sspmd.py), reproducible for restart

@@ -19,12 +19,12 @@ inside compiled steps.
 
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.core.executor import SelfSchedulingExecutor
-from repro.core.schedule import build_schedule_dca
+from repro.core.source import ChunkSource, ScheduleSpec, materialize
 from repro.core.techniques import DLSParams
 
 __all__ = ["dls_microbatch_assignment", "StragglerMitigator"]
@@ -36,8 +36,7 @@ def dls_microbatch_assignment(n_micro: int, n_groups: int, technique: str = "fac
 
     Group g claims schedule step r*P+g in round r — every group computes the
     full assignment locally from the closed form (zero coordination)."""
-    params = DLSParams(N=n_micro, P=n_groups)
-    sched = build_schedule_dca(technique, params)
+    sched = materialize(ScheduleSpec(technique, N=n_micro, P=n_groups, mode="dca"))
     per_group: List[List[int]] = [[] for _ in range(n_groups)]
     for i in range(sched.num_steps):
         g = i % n_groups
@@ -53,14 +52,19 @@ class StragglerMitigator:
     ``run`` executes ``work_fn(micro_index)`` across ``n_groups`` workers with
     per-worker speed factors; returns per-worker busy time.  Compare
     ``technique='static'`` vs ``'fac'`` under heterogeneity to see the paper's
-    effect at the training-runtime level (benchmarks/straggler_bench.py)."""
+    effect at the training-runtime level (benchmarks/straggler_bench.py).
+
+    Any ``ChunkSource`` can drive the claims (``source=``) — adaptive
+    techniques (``awf_*``/``af``) get one automatically under ``mode='dca'``,
+    so persistently slow DP groups receive proportionally smaller microbatch
+    chunks as measurements accumulate."""
 
     def __init__(self, n_micro: int, n_groups: int, technique: str = "fac",
-                 mode: str = "dca"):
+                 mode: str = "dca", source: Optional[ChunkSource] = None):
         self.n_micro = n_micro
         self.n_groups = n_groups
         self.executor = SelfSchedulingExecutor(
-            technique, DLSParams(N=n_micro, P=n_groups), mode=mode
+            technique, DLSParams(N=n_micro, P=n_groups), mode=mode, source=source
         )
 
     def run(self, work_fn, n_workers=None) -> float:

@@ -20,14 +20,14 @@ compute the admission schedule from the shared counter alone.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.schedule import build_schedule_dca
-from repro.core.techniques import DLSParams
+from repro.core.source import Chunk, ChunkSource, ScheduleSpec, make_source
 from repro.models import decode_step, init_decode_caches
 from repro.models.config import ModelConfig
 
@@ -44,25 +44,46 @@ class Request:
 
 
 class DLSAdmission:
-    """Chunked admission via DCA closed forms over the request queue."""
+    """Chunked admission driven by a ``ChunkSource`` over the request queue.
 
-    def __init__(self, n_requests: int, n_slots: int, technique: str = "gss"):
-        self.schedule = build_schedule_dca(
-            technique, DLSParams(N=n_requests, P=max(n_slots, 1))
+    Any backend works: the default is the DCA closed-form ``StaticSource``
+    (any engine replica can compute the admission schedule from the shared
+    counter alone); pass ``mode='adaptive'`` with ``technique='af'`` — or an
+    explicit ``source=`` — and ``note_service`` feedback adapts admission
+    chunk sizes to the measured engine service times (AF sizes chunks from
+    the service-time mean/variance).  Claims rotate through the source's P
+    virtual PEs so every feedback slot accumulates measurements (there is
+    one engine, not P workers; for ``awf_*`` the rotation makes the weights
+    track *recent* service rounds rather than collapsing to all-ones)."""
+
+    def __init__(self, n_requests: int, n_slots: int, technique: str = "gss",
+                 mode: str = "auto", source: Optional[ChunkSource] = None):
+        self._n_slots = max(n_slots, 1)
+        self.source = source or make_source(
+            ScheduleSpec(technique, N=n_requests, P=self._n_slots, mode=mode)
         )
-        self.step = 0
-        self.cursor = 0  # next request index to admit
+        self._last: Optional[Chunk] = None
+        self._round = 0
 
     def admit(self, free_slots: int, remaining: int) -> int:
         """How many queued requests to admit now (<= free_slots)."""
         if remaining <= 0 or free_slots <= 0:
             return 0
-        if self.step < self.schedule.num_steps:
-            chunk = int(self.schedule.sizes[self.step])
-            self.step += 1
+        chunk = self.source.claim(self._round % self._n_slots)
+        self._round += 1
+        if chunk is not None:
+            self._last = chunk
+            n = chunk.size
         else:
-            chunk = 1
-        return min(chunk, free_slots, remaining)
+            n = 1  # queue outlived the schedule (late arrivals): fine-grained
+        return min(n, free_slots, remaining)
+
+    def note_service(self, elapsed: float) -> None:
+        """Feed back the service time of the last admitted chunk (adaptive
+        sources resize future admissions; static sources ignore it)."""
+        if self._last is not None:
+            self.source.report(self._last, elapsed)
+            self._last = None
 
 
 class ServingEngine:
@@ -128,9 +149,12 @@ class ServingEngine:
             self.occupancy.append(int(active.sum()))
 
             # one batched token step for every slot
+            t_tick = time.perf_counter()
             toks = jnp.asarray(self.slot_next_token)[:, None]
             logits, self.caches = self._step(self.params, self.caches, toks)
             next_ids = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+            # adaptive admission feedback: the tick time that served the chunk
+            admission.note_service(time.perf_counter() - t_tick)
 
             for i, req in enumerate(self.slot_req):
                 if req is None:

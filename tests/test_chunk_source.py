@@ -1,0 +1,474 @@
+"""ChunkSource protocol: CCA/DCA parity, adaptive-under-DCA, retarget parity.
+
+The redesign's acceptance criteria, pinned:
+
+  1. StaticSource claims reproduce ``build_schedule_dca`` exactly and
+     CriticalSectionSource claims reproduce ``build_schedule_cca`` exactly,
+     for every non-adaptive technique (identical schedules);
+  2. every backend yields complete, non-overlapping coverage of [0, N) under
+     real concurrency;
+  3. AdaptiveSource (AWF-B/C/D/E, AF under DCA semantics) covers [0, N) with
+     bounded divergence from the CCA chunk count, and in the simulator's
+     slowdown scenarios its load balance is no worse than the CCA form;
+  4. the retargeted executors produce the same chunk logs as the pre-refactor
+     implementations (whose DCA/CCA paths were these builders by
+     construction);
+  5. the LB4MPI facade raises a clear error before DLS_StartLoop and records
+     the effective mode (with a warning) instead of silently downgrading.
+"""
+
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.executor import SelfSchedulingExecutor
+from repro.core.hierarchical import HierarchicalExecutor
+from repro.core.schedule import build_schedule_cca, build_schedule_dca
+from repro.core.simulator import SimConfig, mandelbrot_costs, simulate
+from repro.core.source import (
+    AdaptiveSource,
+    CriticalSectionSource,
+    HierarchicalSource,
+    ModeDowngradeWarning,
+    ScheduleSpec,
+    StaticSource,
+    make_source,
+    materialize,
+    resolve_mode,
+    source_for,
+)
+from repro.core.techniques import ADAPTIVE_TECHNIQUES, TECHNIQUES, DLSParams
+
+NON_ADAPTIVE = sorted(n for n, t in TECHNIQUES.items() if not t.requires_feedback)
+ADAPTIVE = list(ADAPTIVE_TECHNIQUES)
+
+
+def _drain(source, worker_fn=lambda i: 0):
+    out = []
+    i = 0
+    while True:
+        c = source.claim(worker_fn(i))
+        if c is None:
+            return out
+        out.append(c)
+        i += 1
+
+
+# ---------------------------------------------------------------------------
+# 1. identical schedules (parity with the builders)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", NON_ADAPTIVE)
+def test_static_source_matches_dca_schedule(tech):
+    params = DLSParams(N=7777, P=8)
+    src = StaticSource.build(tech, params)
+    ranges = [(c.lo, c.hi) for c in _drain(src)]
+    assert ranges == build_schedule_dca(tech, params).as_ranges()
+    assert src.drained()
+    assert src.claimed == len(ranges)
+
+
+@pytest.mark.parametrize("tech", NON_ADAPTIVE)
+def test_critical_section_source_matches_cca_schedule(tech):
+    params = DLSParams(N=7777, P=8)
+    src = CriticalSectionSource(tech, params)
+    ranges = [(c.lo, c.hi) for c in _drain(src)]
+    assert ranges == build_schedule_cca(tech, params).as_ranges()
+    assert src.drained()
+
+
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_materialize_matches_builders(mode):
+    spec = ScheduleSpec("fac", N=5000, P=8, mode=mode)
+    sched = materialize(spec)
+    ref = (build_schedule_dca if mode == "dca" else build_schedule_cca)(
+        "fac", DLSParams(N=5000, P=8)
+    )
+    np.testing.assert_array_equal(sched.sizes, ref.sizes)
+    np.testing.assert_array_equal(sched.offsets, ref.offsets)
+
+
+def test_materialize_rejects_adaptive():
+    with pytest.raises(ValueError, match="feedback|execution"):
+        materialize(ScheduleSpec("af", N=100, P=4, mode="adaptive"))
+
+
+# ---------------------------------------------------------------------------
+# 2. concurrent coverage through every backend
+# ---------------------------------------------------------------------------
+
+
+def _concurrent_cover(source, N, n_workers=8):
+    hits = np.zeros(N, dtype=np.int64)
+    lock = threading.Lock()
+
+    def worker(wid):
+        while True:
+            c = source.claim(wid)
+            if c is None:
+                return
+            with lock:
+                hits[c.lo:c.hi] += 1
+            source.report(c, 1e-6 * c.size)
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(n_workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return hits
+
+
+@pytest.mark.parametrize("tech", ["gss", "fac", "ss", "rnd"])
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_source_concurrent_coverage(tech, mode):
+    N = 5000
+    src = source_for(tech, DLSParams(N=N, P=8), mode)
+    hits = _concurrent_cover(src, N)
+    assert (hits == 1).all(), f"{tech}/{mode}: min={hits.min()} max={hits.max()}"
+    assert src.drained()
+
+
+# ---------------------------------------------------------------------------
+# 3. adaptive techniques under DCA semantics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", ADAPTIVE)
+def test_adaptive_source_concurrent_coverage(tech):
+    N = 5000
+    src = AdaptiveSource(tech, DLSParams(N=N, P=8))
+    hits = _concurrent_cover(src, N)
+    assert (hits == 1).all(), f"{tech}: min={hits.min()} max={hits.max()}"
+    assert src.drained()
+    assert src.epochs_published > 0
+
+
+@pytest.mark.parametrize("tech", ADAPTIVE)
+def test_adaptive_source_bounded_divergence(tech):
+    """Full single-thread drain: non-overlapping cover of [0, N) with a chunk
+    count within a constant factor of the CCA form (no SS-degeneration)."""
+    N, P = 20_000, 8
+    params = DLSParams(N=N, P=P)
+    src = AdaptiveSource(tech, params)
+    chunks = _drain(src, worker_fn=lambda i: i % P)
+    lo = 0
+    for c in chunks:
+        assert c.lo == lo, "chunks must tile [0, N) in claim order"
+        assert c.size >= 1
+        lo = c.hi
+    assert lo == N
+    n_cca = build_schedule_cca(tech, params).num_steps
+    assert len(chunks) <= 4 * n_cca + 4 * P, (len(chunks), n_cca)
+
+
+@pytest.mark.parametrize("tech", ADAPTIVE)
+def test_adaptive_slowdown_load_balance_no_worse_than_cca(tech):
+    """The acceptance criterion: in the simulator's slowdown scenario
+    (100 us injected calculation delay, heterogeneous PE speeds) the
+    adaptive-under-DCA form balances load at least as well as the CCA form
+    — because the calculation no longer serializes."""
+    N, P = 8192, 32
+    costs = mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+    rng = np.random.default_rng(0)
+    speeds = rng.uniform(0.3, 1.0, P)
+    params = DLSParams(N=N, P=P)
+
+    r_ad = simulate(
+        SimConfig(technique=tech, params=params, approach="adaptive",
+                  delay_calc_s=1e-4, pe_speeds=speeds),
+        costs,
+    )
+    r_cca = simulate(
+        SimConfig(technique=tech, params=params, approach="cca",
+                  delay_calc_s=1e-4, pe_speeds=speeds),
+        costs,
+    )
+    assert int(r_ad.chunk_sizes.sum()) == N  # full coverage
+    assert r_ad.load_imbalance <= r_cca.load_imbalance * 1.05, (
+        tech, r_ad.load_imbalance, r_cca.load_imbalance
+    )
+    assert r_ad.t_parallel <= r_cca.t_parallel * 1.02, (
+        tech, r_ad.t_parallel, r_cca.t_parallel
+    )
+
+
+# ---------------------------------------------------------------------------
+# 4. retargeted executors == pre-refactor chunk logs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", ["gss", "fac", "tss", "rnd"])
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_executor_single_worker_matches_builder_log(tech, mode):
+    """With one worker the pre-refactor executor's chunk log was exactly the
+    builder's sequence (DCA: closed-form table; CCA: the recursion).  The
+    retargeted executor must reproduce it step for step."""
+    params = DLSParams(N=4000, P=4)
+    ex = SelfSchedulingExecutor(tech, params, mode=mode)
+    ex.run(lambda lo, hi: None, n_workers=1)
+    got = [(r.step, r.lo, r.hi) for r in sorted(ex.records, key=lambda r: r.step)]
+    ref = (build_schedule_dca if mode == "dca" else build_schedule_cca)(tech, params)
+    expect = [(i, lo, hi) for i, (lo, hi) in enumerate(ref.as_ranges())]
+    assert got == expect
+
+
+def test_hierarchical_single_worker_matches_two_level_composition():
+    """One group, one worker: the hierarchical executor's ranges must equal
+    the global schedule with each global chunk locally re-scheduled — the
+    pre-refactor semantics of the bespoke claim loop."""
+    N = 3000
+    ex = HierarchicalExecutor(N, n_groups=1, workers_per_group=1,
+                              global_technique="gss", local_technique="fac")
+    ex.run(lambda lo, hi: None)
+    got = [(lo, hi) for _, _, lo, hi in ex.records]
+
+    expect = []
+    for glo, ghi in build_schedule_dca("gss", DLSParams(N=N, P=1)).as_ranges():
+        local = build_schedule_dca("fac", DLSParams(N=ghi - glo, P=1))
+        expect += [(glo + lo, glo + hi) for lo, hi in local.as_ranges()]
+    assert got == expect
+
+
+def test_hierarchical_source_contention_equals_global_steps():
+    ex = HierarchicalExecutor(50_000, n_groups=8, workers_per_group=8,
+                              global_technique="gss", local_technique="ss")
+    ex.run(lambda lo, hi: None)
+    assert ex.global_contention_events == ex.global_schedule.num_steps
+    assert isinstance(ex.source, HierarchicalSource)
+
+
+def test_hierarchical_cca_mode_metrics_work():
+    """mode='cca' puts a CriticalSectionSource at the global level; the
+    schedule/contention accessors must still work (materialized plan +
+    claimed count)."""
+    ex = HierarchicalExecutor(2000, n_groups=2, workers_per_group=2,
+                              global_technique="gss", local_technique="fac",
+                              mode="cca")
+    assert ex.global_schedule.N == 2000  # materialized CCA plan
+    ex.run(lambda lo, hi: None)
+    hits = np.zeros(2000, np.int64)
+    for _, _, lo, hi in ex.records:
+        hits[lo:hi] += 1
+    assert (hits == 1).all()
+    assert ex.global_contention_events > 0
+
+
+def test_make_source_hierarchy_spec():
+    spec = ScheduleSpec("gss", N=4000, P=4, levels=(("gss", 4), ("fac", 2)))
+    src = make_source(spec)
+    assert isinstance(src, HierarchicalSource)
+    hits = _concurrent_cover(src, 4000, n_workers=8)
+    assert (hits == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# 5. mode resolution + the LB4MPI facade satellites
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_mode_matrix():
+    assert resolve_mode("gss", "auto") == ("dca", None)
+    assert resolve_mode("af", "auto") == ("adaptive", None)
+    assert resolve_mode("gss", "cca") == ("cca", None)
+    assert resolve_mode("awf_b", "cca") == ("cca", None)
+    eff, msg = resolve_mode("awf_c", "dca")
+    assert eff == "adaptive" and "adaptive" in msg
+    eff, msg = resolve_mode("gss", "adaptive")
+    assert eff == "dca" and msg is not None
+    assert resolve_mode("af", "dca_sync") == ("dca_sync", None)
+    with pytest.raises(ValueError):
+        resolve_mode("gss", "nonsense")
+
+
+def test_api_calls_before_startloop_raise():
+    info = api.DLS_Parameters_Setup(n_workers=4, N=100, technique="gss")
+    with pytest.raises(RuntimeError, match="loop not started"):
+        api.DLS_Terminated(info)
+    with pytest.raises(RuntimeError, match="loop not started"):
+        api.DLS_StartChunk(info)
+    with pytest.raises(RuntimeError, match="loop not started"):
+        api.DLS_EndChunk(info)
+
+
+def test_api_configure_warns_and_records_effective_mode():
+    info = api.DLS_Parameters_Setup(n_workers=4, N=256, technique="awf_b")
+    with pytest.warns(ModeDowngradeWarning, match="closed form"):
+        api.Configure_Chunk_Calculation_Mode(info, "dca")
+    assert info.mode == "dca"
+    assert info.effective_mode == "adaptive"
+    # no warning when the request can run as asked
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        api.Configure_Chunk_Calculation_Mode(info, "cca")
+    assert info.effective_mode == "cca"
+
+
+@pytest.mark.parametrize("tech", ["gss", "awf_b", "af"])
+def test_api_full_loop_covers_all_modes(tech):
+    """Listing 1 drives every backend — including adaptive — to completion."""
+    info = api.DLS_Parameters_Setup(n_workers=4, N=1000, technique=tech)
+    covered = np.zeros(1000, dtype=np.int64)
+    api.DLS_StartLoop(info)
+    while not api.DLS_Terminated(info):
+        chunk = api.DLS_StartChunk(info)
+        if chunk is None:
+            break
+        lo, hi = chunk
+        covered[lo:hi] += 1
+        api.DLS_EndChunk(info)
+    api.DLS_EndLoop(info)
+    assert (covered == 1).all()
+
+
+def test_api_current_chunk_cleared_under_lock():
+    info = api.DLS_Parameters_Setup(n_workers=2, N=64, technique="ss")
+    api.DLS_StartLoop(info)
+    lo, hi = api.DLS_StartChunk(info)
+    with info.lock:
+        assert info.current_chunk == (lo, hi)
+    api.DLS_EndChunk(info)
+    with info.lock:
+        assert info.current_chunk is None
+
+
+# ---------------------------------------------------------------------------
+# 6. simulators accept sources
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tech", ["gss", "fac", "ss"])
+def test_simulator_static_source_identical_to_legacy_dca(tech):
+    """Driving the event loop through a StaticSource reproduces the legacy
+    inlined DCA loop bit-for-bit (same chunks, same placement, same times)."""
+    N, P = 4096, 16
+    costs = mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+    params = DLSParams(N=N, P=P)
+    cfg = SimConfig(technique=tech, params=params, approach="dca",
+                    delay_calc_s=1e-5)
+    ref = simulate(cfg, costs)
+    got = simulate(cfg, costs, source=StaticSource.build(tech, params))
+    np.testing.assert_array_equal(ref.chunk_sizes, got.chunk_sizes)
+    np.testing.assert_array_equal(ref.chunk_pes, got.chunk_pes)
+    assert ref.t_parallel == got.t_parallel
+    np.testing.assert_array_equal(ref.pe_finish, got.pe_finish)
+
+
+def test_simulator_critical_section_source_identical_to_legacy_cca():
+    N, P = 4096, 16
+    costs = mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+    params = DLSParams(N=N, P=P)
+    cfg = SimConfig(technique="gss", params=params, approach="cca",
+                    delay_calc_s=1e-4)
+    ref = simulate(cfg, costs)
+    got = simulate(cfg, costs, source=CriticalSectionSource("gss", params))
+    np.testing.assert_array_equal(ref.chunk_sizes, got.chunk_sizes)
+    np.testing.assert_array_equal(ref.chunk_pes, got.chunk_pes)
+    assert ref.t_parallel == got.t_parallel
+
+
+def test_fastsim_accepts_sources():
+    from repro.core.fastsim import simulate_fast
+
+    N, P = 4096, 16
+    costs = mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+    params = DLSParams(N=N, P=P)
+    cfg = SimConfig(technique="gss", params=params, approach="dca")
+    ref = simulate(cfg, costs)
+    got = simulate_fast(cfg, costs, source=StaticSource.build("gss", params))
+    np.testing.assert_array_equal(ref.chunk_sizes, got.chunk_sizes)
+    np.testing.assert_array_equal(ref.chunk_pes, got.chunk_pes)
+    assert ref.t_parallel == got.t_parallel
+    # adaptive sources fall back to the event engine and still cover N
+    cfg_ad = SimConfig(technique="awf_b", params=params, approach="adaptive")
+    res = simulate_fast(cfg_ad, costs)
+    assert int(res.chunk_sizes.sum()) == N
+
+
+def test_sweep_adaptive_approach():
+    from repro.core.fastsim import simulate_sweep
+
+    N, P = 2048, 8
+    costs = mandelbrot_costs(N, conversion_threshold=32, mean_s=0.002)
+    rows = simulate_sweep(
+        DLSParams(N=N, P=P), costs, ["gss", "awf_b"],
+        approaches=("cca", "adaptive"), delays_s=(0.0, 1e-4),
+    )
+    assert len(rows) == 2 * 2 * 2
+    by = {(r["technique"], r["approach"], r["delay_s"]): r for r in rows}
+    assert by[("awf_b", "adaptive", 1e-4)]["engine"] == "event"
+    assert by[("gss", "adaptive", 1e-4)]["engine"] == "analytic"
+
+
+def test_adaptive_source_worker_ids_beyond_p():
+    """Worker ids are PE slots mod P — claims and reports from more workers
+    than params.P must not crash the feedback arrays."""
+    src = AdaptiveSource("awf_b", DLSParams(N=500, P=4))
+    hits = _concurrent_cover(src, 500, n_workers=9)  # 9 workers, P=4
+    assert (hits == 1).all()
+
+
+def test_hierarchical_report_routes_to_local_adaptive_source():
+    """Feedback reaches the local source that issued the chunk (in local
+    coordinates) — an adaptive local queue under a static global schedule
+    actually adapts."""
+    src = make_source(
+        ScheduleSpec("gss", N=2000, P=4, levels=(("gss", 2), ("awf_b", 2)))
+    )
+    chunk = src.claim(worker=0)
+    local = src._group[0][1]
+    assert isinstance(local, AdaptiveSource)
+    before = int(local.feedback._count.sum()) + float(local.feedback._bat_iters.sum())
+    src.report(chunk, elapsed=0.01)
+    after = int(local.feedback._count.sum()) + float(local.feedback._bat_iters.sum())
+    assert after > before  # the local feedback accumulator saw the report
+
+
+def test_fastsim_feedback_critical_section_source_falls_back_to_event():
+    from repro.core.fastsim import simulate_fast
+
+    N, P = 1024, 8
+    costs = mandelbrot_costs(N, conversion_threshold=32, mean_s=0.002)
+    params = DLSParams(N=N, P=P)
+    cfg = SimConfig(technique="af", params=params, approach="cca")
+    res = simulate_fast(cfg, costs, source=CriticalSectionSource("af", params))
+    assert int(res.chunk_sizes.sum()) == N
+
+
+def test_simulate_adaptive_degenerates_to_dca_for_closed_forms():
+    N, P = 1024, 8
+    costs = mandelbrot_costs(N, conversion_threshold=32, mean_s=0.002)
+    params = DLSParams(N=N, P=P)
+    ref = simulate(SimConfig(technique="gss", params=params, approach="dca"), costs)
+    got = simulate(SimConfig(technique="gss", params=params, approach="adaptive"), costs)
+    np.testing.assert_array_equal(ref.chunk_sizes, got.chunk_sizes)
+    assert ref.t_parallel == got.t_parallel
+
+
+def test_adaptive_admission_drains_queue():
+    from repro.serve.engine import DLSAdmission
+
+    adm = DLSAdmission(n_requests=100, n_slots=4, technique="af", mode="adaptive")
+    admitted = 0
+    while admitted < 100:
+        n = adm.admit(free_slots=4, remaining=100 - admitted)
+        assert n >= 1
+        admitted += n
+        adm.note_service(0.01 * n)
+    assert admitted == 100
+
+
+# ---------------------------------------------------------------------------
+# 7. sspmd spec adapter (the device-level face of the API)
+# ---------------------------------------------------------------------------
+
+
+def test_sspmd_spec_adapter_rejects_adaptive():
+    from repro.core.sspmd import dca_schedule_for_spec
+
+    with pytest.raises(ValueError, match="adaptive"):
+        dca_schedule_for_spec(ScheduleSpec("af", N=100, P=4), "x")

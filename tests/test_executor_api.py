@@ -26,8 +26,19 @@ def test_executor_exact_coverage(mode, tech):
     assert (hits == 1).all(), f"{mode}/{tech}: min={hits.min()} max={hits.max()}"
 
 
-def test_executor_af_falls_back_to_synchronized():
-    ex = SelfSchedulingExecutor("af", DLSParams(N=100, P=4), mode="dca")
+def test_executor_af_dca_promotes_to_adaptive():
+    """AF under 'dca' now runs through AdaptiveSource (epoch snapshots) with
+    a warning — the old silent synchronized fallback is an explicit mode."""
+    with pytest.warns(Warning, match="adaptive"):
+        ex = SelfSchedulingExecutor("af", DLSParams(N=100, P=4), mode="dca")
+    assert ex.mode == "adaptive"
+    done = np.zeros(100, dtype=np.int64)
+    ex.run(lambda lo, hi: done.__setitem__(slice(lo, hi), done[lo:hi] + 1), 4)
+    assert (done == 1).all()
+
+
+def test_executor_af_explicit_dca_sync():
+    ex = SelfSchedulingExecutor("af", DLSParams(N=100, P=4), mode="dca_sync")
     assert ex.mode == "dca_sync"  # the paper's AF-under-DCA extra sync
     done = np.zeros(100, dtype=np.int64)
     ex.run(lambda lo, hi: done.__setitem__(slice(lo, hi), done[lo:hi] + 1), 4)
@@ -67,7 +78,9 @@ def test_lb4mpi_api_protocol(mode):
     assert t >= 0.0
 
 
-def test_api_af_dca_falls_back():
+def test_api_af_dca_promotes_with_warning():
     info = api.DLS_Parameters_Setup(n_workers=2, N=64, technique="af")
-    api.Configure_Chunk_Calculation_Mode(info, "dca")
-    assert info.mode == "cca"  # documented fallback
+    with pytest.warns(Warning, match="adaptive"):
+        api.Configure_Chunk_Calculation_Mode(info, "dca")
+    assert info.mode == "dca"  # the request is recorded...
+    assert info.effective_mode == "adaptive"  # ...and what runs is explicit
