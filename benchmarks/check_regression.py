@@ -1,0 +1,97 @@
+"""Benchmark regression gate: fresh JSON vs committed BENCH_*.json snapshot.
+
+Compares numeric leaves by flattened path (list entries are keyed by their
+``name``/``scenario`` field where present, by index otherwise) and fails when
+a fresh value exceeds the committed one by more than ``--tolerance`` x, or
+when a committed entry disappeared (coverage shrank).  Timings below
+``--min-value`` are skipped — sub-threshold numbers are scheduler noise, not
+signal.  Metadata strings (platform, python) are ignored; ``derived``
+strings are compared exactly under ``--derived-exact`` (they encode
+deterministic outputs like chunk counts).
+
+Exit status 0 == no regression.  Used by the CI bench-gate job.
+
+Run:  python benchmarks/check_regression.py fresh.json BENCH_committed.json \
+          [--tolerance 3.0] [--min-value 5.0] [--derived-exact]
+"""
+
+import argparse
+import json
+import sys
+
+
+def flatten(doc, prefix=""):
+    """Yield (path, leaf) pairs; list items keyed by name/scenario fields."""
+    if isinstance(doc, dict):
+        for k, v in doc.items():
+            yield from flatten(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(doc, list):
+        for i, v in enumerate(doc):
+            key = v.get("name", v.get("scenario", i)) if isinstance(v, dict) else i
+            yield from flatten(v, f"{prefix}[{key}]")
+    else:
+        yield prefix, doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh")
+    ap.add_argument("committed")
+    ap.add_argument("--tolerance", type=float, default=3.0,
+                    help="fail when fresh > committed * tolerance")
+    ap.add_argument("--min-value", type=float, default=5.0,
+                    help="skip numeric comparisons below this (noise floor)")
+    ap.add_argument("--derived-exact", action="store_true",
+                    help="require 'derived' strings to match exactly")
+    ap.add_argument("--skip", action="append", default=[], metavar="KEY",
+                    help="leaf key names to exclude (e.g. machine wall times)")
+    args = ap.parse_args()
+
+    with open(args.fresh) as f:
+        fresh = dict(flatten(json.load(f)))
+    with open(args.committed) as f:
+        committed = dict(flatten(json.load(f)))
+
+    failures = []
+    compared = 0
+    for path, want in committed.items():
+        leaf = path.rsplit(".", 1)[-1]
+        if leaf in args.skip:
+            continue
+        have = fresh.get(path)
+        if isinstance(want, bool) or not isinstance(want, (int, float)):
+            if (
+                args.derived_exact
+                and path.endswith(".derived")
+                and have != want
+            ):
+                failures.append(f"{path}: derived changed: {have!r} != {want!r}")
+            continue
+        if have is None:
+            failures.append(f"{path}: missing from fresh run (coverage shrank)")
+            continue
+        if not isinstance(have, (int, float)) or isinstance(have, bool):
+            failures.append(f"{path}: expected a number, got {have!r}")
+            continue
+        if max(abs(want), abs(have)) < args.min_value:
+            continue  # both under the noise floor
+        compared += 1
+        if want > 0 and have > want * args.tolerance:
+            failures.append(
+                f"{path}: {have:.2f} vs committed {want:.2f} "
+                f"(>{args.tolerance:.1f}x regression)"
+            )
+
+    print(f"# compared {compared} numeric leaves "
+          f"({len(committed)} committed, {len(fresh)} fresh)")
+    for line in failures:
+        print(f"REGRESSION {line}")
+    if failures:
+        print(f"# {len(failures)} regression(s) beyond {args.tolerance}x")
+        return 1
+    print("# no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,8 +14,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from repro.core.fastsim import simulate_sweep
 from repro.core.schedule import build_schedule_dca
 from repro.core.simulator import SimConfig, mandelbrot_costs, psia_costs, simulate

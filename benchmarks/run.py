@@ -4,14 +4,24 @@ Prints ``name,us_per_call,derived`` CSV (the harness contract); ``--json``
 additionally writes the rows as a structured JSON document (used for the
 committed BENCH_*.json perf snapshots).  ``--full`` runs the paper-exact
 scales (N=262,144 / P=256); default is the 4x-reduced regime used in CI.
+
+Runnable from anywhere with just ``PYTHONPATH=src`` (or nothing at all):
+the bootstrap below puts the repo root (for ``benchmarks.*``) and ``src``
+on sys.path explicitly, replacing the old ``PYTHONPATH=src:.`` cwd hack.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
 import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:

@@ -1,0 +1,76 @@
+"""SimAS selection quality across the mixed-perturbation suite.
+
+For every scenario in ``select.scenarios.mixed_suite``: T_loop^par of all
+twelve techniques x {cca, dca} as fixed baselines, next to the online
+``SelectingSource`` (scenario estimated purely from claim/report feedback).
+The quality numbers (``t_selector``, ``vs_best``, ``vs_worst``) are
+deterministic simulation outputs, so the committed snapshot
+(BENCH_simas_selection.json) doubles as a CI regression gate input.
+
+Run:  PYTHONPATH=src python benchmarks/simas_selection.py [--full] [--json out.json]
+"""
+
+import argparse
+import json
+import os
+import platform
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.simulator import mandelbrot_costs
+from repro.core.techniques import DLSParams
+from repro.select import evaluate_selector, mixed_suite
+
+
+def bench(full: bool = False) -> dict:
+    n, p = (16_384, 64) if full else (4_096, 32)
+    costs = mandelbrot_costs(n, conversion_threshold=64, mean_s=0.002)
+    suite = mixed_suite(p, float(costs.sum()) / p)
+    t0 = time.perf_counter()
+    rows = evaluate_selector(DLSParams(N=n, P=p), costs, suite)
+    wall = time.perf_counter() - t0
+    return {
+        "scale": "full" if full else "ci",
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "N": n,
+        "P": p,
+        "wall_s": round(wall, 3),
+        "scenarios": [
+            {k: (round(v, 6) if isinstance(v, float) else v) for k, v in r.items()}
+            for r in rows
+        ],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="larger N/P regime")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    doc = bench(full=args.full)
+    hdr = (f"{'scenario':12s} {'selector':>9s} {'best fixed':>16s} "
+           f"{'worst fixed':>16s} {'vs_best':>8s} {'vs_worst':>9s}  final")
+    print(hdr)
+    for r in doc["scenarios"]:
+        print(
+            f"{r['scenario']:12s} {r['t_selector']:9.4f} "
+            f"{r['t_best_fixed']:9.4f} ({r['best_fixed'].split('/')[0]:>5s}) "
+            f"{r['t_worst_fixed']:9.4f} ({r['worst_fixed'].split('/')[0]:>5s}) "
+            f"{r['vs_best']:8.3f} {r['vs_worst']:9.3f}  {r['final_technique']}"
+        )
+    print(f"# {len(doc['scenarios'])} scenarios in {doc['wall_s']}s", file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -6,15 +6,22 @@ The ChunkSource redesign replaced the executor's inlined DCA claim path
 pins that the protocol indirection costs nothing: ns/claim for both paths,
 single-threaded and contended, plus the ratio.
 
-Run:  JAX_PLATFORMS=cpu PYTHONPATH=src:. python benchmarks/source_overhead.py [--json out.json]
+Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/source_overhead.py [--json out.json]
 
 The committed snapshot is BENCH_source_overhead.json.
 """
 
 import argparse
 import json
+import os
+import sys
 import threading
 import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 from repro.core.schedule import build_schedule_dca
 from repro.core.source import StaticSource

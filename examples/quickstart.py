@@ -3,8 +3,6 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import numpy as np
-
 from repro.core import (
     DLSParams,
     build_schedule_cca,

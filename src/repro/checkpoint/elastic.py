@@ -11,10 +11,8 @@ full chunk history.
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
-from repro.core.schedule import build_schedule_dca
-from repro.core.techniques import DLSParams
 from repro.data.scheduler import DLSBatchScheduler
 
 from .store import restore_checkpoint

@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Callable, Dict
-
 from repro.models.config import ModelConfig
 
 from . import (

@@ -22,7 +22,13 @@ from .techniques import (
     get_technique,
     technique_names,
 )
-from .schedule import Schedule, build_schedule_cca, build_schedule_dca, chunk_of_step, verify_coverage
+from .schedule import (
+    Schedule,
+    build_schedule_cca,
+    build_schedule_dca,
+    chunk_of_step,
+    verify_coverage,
+)
 from .source import (
     AdaptiveSource,
     Chunk,

@@ -15,6 +15,9 @@ logic at all** — it drives whatever ``ChunkSource`` backend the mode selects
   promotes here (with a warning) instead of silently synchronizing.
 * ``dca_sync`` -> the paper's explicit AF-under-DCA fallback (calculation
   pulled back under the lock).
+* ``technique="auto"`` -> ``SelectingSource`` (select/simas.py): the SimAS
+  selector picks the technique online and re-picks it at chunk boundaries
+  as claim/report feedback accumulates.
 
 ``calc_delay_s`` injects the paper's chunk-calculation slowdown: serialized
 inside the lock for CCA-style sources, concurrent on the claiming worker for
@@ -60,7 +63,7 @@ class SelfSchedulingExecutor:
         calc_delay_s: float = 0.0,
         source: Optional[ChunkSource] = None,
     ):
-        self.technique = get_technique(technique)
+        self.technique = "auto" if technique == "auto" else get_technique(technique)
         self.params = params
         self.calc_delay_s = calc_delay_s
         if source is not None:

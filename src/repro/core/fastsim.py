@@ -125,10 +125,14 @@ def _seq_sum(start: float, step: float, count: int) -> float:
     return float(np.add.accumulate(buf)[-1])
 
 
-def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds):
+def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds,
+                scenario=None):
     """Blocked event loop for one config; bit-identical to the heapq loop.
 
     exec_chunks: [S] per-chunk execution time at unit speed.
+    ``scenario``: a time-varying PerturbationScenario (static scenarios are
+    folded into ``speeds`` by the caller) — each chunk's speed is sampled at
+    its assignment-done time, the same float64 lookup the event loop does.
     Returns (pe_finish [P], pe_busy [P], pes [S]).
     """
     p = len(speeds)
@@ -138,7 +142,9 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds):
     coord = 0.0
     extra = 0.0
     svc = service if is_cca else h
-    unit_speed = bool(np.all(speeds == 1.0))  # x/1.0 == x: skip the division
+    # x/1.0 == x: skip the division (time-varying speeds divide per round)
+    unit_speed = scenario is None and bool(np.all(speeds == 1.0))
+    exec_done = np.empty(s_total) if scenario is not None else None
     track_extra = is_cca and nonded
     s = 0
     while s < s_total:
@@ -152,7 +158,9 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds):
         ready = t_req if is_cca else (t_req + delay) + calc
         done = _coord_recurrence(ready, svc, coord)
         exec_t = exec_chunks[s:s + k]
-        if not unit_speed:
+        if scenario is not None:
+            exec_t = exec_t / scenario.speeds_at(cand[:k], done)
+        elif not unit_speed:
             exec_t = exec_t / speeds[cand[:k]]
         fin = done + exec_t
         acc = None
@@ -179,6 +187,8 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds):
         fins = fin[:commit]
         t_free[idx] = fins
         pes[s:s + commit] = idx
+        if exec_done is not None:
+            exec_done[s:s + commit] = exec_t[:commit]
         coord = float(done[commit - 1])
         if track_extra:
             k0 = np.flatnonzero(idx == 0)
@@ -190,7 +200,12 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds):
     # busy times rebuilt from the trace: np.add.at accumulates in assignment
     # order, matching the event loop's ``pe_busy[pe] += exec_t`` exactly
     pe_busy = np.zeros(p)
-    all_exec = exec_chunks if unit_speed else exec_chunks / speeds[pes]
+    if exec_done is not None:
+        all_exec = exec_done
+    elif unit_speed:
+        all_exec = exec_chunks
+    else:
+        all_exec = exec_chunks / speeds[pes]
     np.add.at(pe_busy, pes, all_exec)
     return t_free, pe_busy, pes
 
@@ -226,14 +241,29 @@ def _exec_base(sizes, offsets, costs, n):
 
 
 def _cfg_engine_args(cfg: SimConfig):
-    speeds = (np.asarray(cfg.pe_speeds, np.float64)
-              if cfg.pe_speeds is not None else np.ones(cfg.params.P))
+    scenario = cfg.scenario
+    if scenario is not None:
+        if cfg.pe_speeds is not None:
+            raise ValueError("pass either pe_speeds or scenario, not both")
+        if scenario.P != cfg.params.P:
+            raise ValueError(
+                f"scenario has {scenario.P} PE profiles, params.P={cfg.params.P}"
+            )
+        delay = float(scenario.delay_calc_s)
+        speeds = scenario.base_speeds()
+        if scenario.static:
+            scenario = None  # constant profiles: the plain pe_speeds path
+    else:
+        delay = cfg.delay_calc_s
+        speeds = (np.asarray(cfg.pe_speeds, np.float64)
+                  if cfg.pe_speeds is not None else np.ones(cfg.params.P))
     is_cca = cfg.approach == "cca"
-    service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+    service = delay + cfg.calc_cost_s + cfg.h_assign_s
     return dict(
-        is_cca=is_cca, service=service, delay=cfg.delay_calc_s,
+        is_cca=is_cca, service=service, delay=delay,
         calc=cfg.calc_cost_s, h=cfg.h_assign_s,
         nonded=is_cca and not cfg.dedicated_master, speeds=speeds,
+        scenario=scenario,
     )
 
 
@@ -297,6 +327,35 @@ def simulate_fast(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
 # ---------------------------------------------------------------------------
 
 
+def _technique_tables(technique: str, params: DLSParams, costs, approaches):
+    """Per-approach (sizes, offsets) tables and exec-time vectors, shared
+    across a technique's whole grid ("adaptive" degenerates to dca for
+    non-feedback techniques, aliasing the same table rather than rebuilding)."""
+    table_key = {a: ("dca" if a == "adaptive" else a) for a in approaches}
+    built = {
+        k: _chunk_table(technique, params, k) for k in set(table_key.values())
+    }
+    built_exec = {
+        k: _exec_base(sizes, offsets, costs, params.N)
+        for k, (sizes, offsets) in built.items()
+    }
+    return (
+        {a: built[k] for a, k in table_key.items()},
+        {a: built_exec[k] for a, k in table_key.items()},
+    )
+
+
+def _analytic_result(sizes, t_free, busy, pes) -> SimResult:
+    return SimResult(
+        t_parallel=float(t_free.max()),
+        num_chunks=len(sizes),
+        pe_finish=t_free,
+        pe_busy=busy,
+        chunk_sizes=sizes.astype(np.int64),
+        chunk_pes=pes,
+    )
+
+
 def sweep_configs(
     techniques: Sequence[str],
     approaches: Sequence[str] = ("cca", "dca"),
@@ -324,6 +383,7 @@ def simulate_sweep(
     h_assign_s: float = 1e-6,
     calc_cost_s: float = 2e-7,
     dedicated_master: bool = False,
+    perturbations: Optional[Sequence[object]] = None,
 ) -> List[dict]:
     """Run a whole (technique x approach x delay x speed) grid, batched.
 
@@ -332,8 +392,13 @@ def simulate_sweep(
     round-based engine.  Feedback techniques (AF) transparently fall back to
     the event engine.  Returns a structured row list; each row carries the
     engine that produced it.
+
+    ``perturbations``: a sequence of ``PerturbationScenario`` objects
+    (select/scenarios.py) replaces the (delays_s x speed_scenarios) cross
+    product — the grid becomes technique x approach x scenario, each
+    scenario bringing its own calculation delay and per-PE speed profiles.
+    This is the SimAS selector's entry point (select/simas.py).
     """
-    speed_scenarios = speed_scenarios or {"homog": None}
     rows: List[dict] = []
 
     def _row(technique, approach, delay, sname, engine, res):
@@ -350,6 +415,30 @@ def simulate_sweep(
             load_imbalance=float(res.load_imbalance),
         )
 
+    if perturbations is not None:
+        grid = [(a, scen) for a in approaches for scen in perturbations]
+        for technique in techniques:
+            tech = get_technique(technique)
+            if not tech.requires_feedback:
+                tables, execs = _technique_tables(technique, params, costs, approaches)
+            for a, scen in grid:
+                cfg = SimConfig(
+                    technique=technique, params=params, approach=a,
+                    h_assign_s=h_assign_s, calc_cost_s=calc_cost_s,
+                    dedicated_master=dedicated_master, scenario=scen,
+                )
+                delay = float(scen.delay_calc_s)
+                if tech.requires_feedback:
+                    rows.append(_row(technique, a, delay, scen.name, "event",
+                                     simulate(cfg, costs)))
+                    continue
+                sizes = tables[a][0]
+                t_free, busy, pes = _run_config(execs[a], **_cfg_engine_args(cfg))
+                res = _analytic_result(sizes, t_free, busy, pes)
+                rows.append(_row(technique, a, delay, scen.name, "analytic", res))
+        return rows
+
+    speed_scenarios = speed_scenarios or {"homog": None}
     grid = [
         (a, d, sname, sp)
         for a in approaches
@@ -359,20 +448,7 @@ def simulate_sweep(
     for technique in techniques:
         tech = get_technique(technique)
         if not tech.requires_feedback:
-            # tables + exec times shared across the technique's whole grid
-            # ("adaptive" degenerates to dca for non-feedback techniques,
-            # aliasing the same table rather than rebuilding it)
-            table_key = {a: ("dca" if a == "adaptive" else a) for a in approaches}
-            built = {
-                k: _chunk_table(technique, params, k)
-                for k in set(table_key.values())
-            }
-            built_exec = {
-                k: _exec_base(sizes, offsets, costs, params.N)
-                for k, (sizes, offsets) in built.items()
-            }
-            tables = {a: built[k] for a, k in table_key.items()}
-            execs = {a: built_exec[k] for a, k in table_key.items()}
+            tables, execs = _technique_tables(technique, params, costs, approaches)
         for a, d, sname, sp in grid:
             cfg = SimConfig(
                 technique=technique, params=params, approach=a,
@@ -388,15 +464,8 @@ def simulate_sweep(
                 rows.append(_row(technique, a, d, sname, "event",
                                  simulate(cfg, costs)))
                 continue
-            sizes, offsets = tables[a]
+            sizes = tables[a][0]
             t_free, busy, pes = _run_config(execs[a], **_cfg_engine_args(cfg))
-            res = SimResult(
-                t_parallel=float(t_free.max()),
-                num_chunks=len(sizes),
-                pe_finish=t_free,
-                pe_busy=busy,
-                chunk_sizes=sizes.astype(np.int64),
-                chunk_pes=pes,
-            )
+            res = _analytic_result(sizes, t_free, busy, pes)
             rows.append(_row(technique, a, d, sname, "analytic", res))
     return rows

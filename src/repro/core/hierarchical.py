@@ -17,6 +17,10 @@ The claim loop lives in ``core.source.HierarchicalSource`` — this executor
 only supplies threads and bookkeeping.  Any ``ChunkSource`` composition works
 as the levels (e.g. an ``AdaptiveSource`` local queue under a static global
 schedule); the default composes two ``StaticSource`` closed-form levels.
+``local_technique="auto"`` drops a SimAS ``SelectingSource`` into each group
+queue (re-selected per group from that group's own feedback; the *global*
+level receives no per-chunk feedback, so an auto global keeps its warm-up
+technique).
 """
 
 from __future__ import annotations
@@ -27,7 +31,6 @@ from typing import Callable, List, Tuple
 import numpy as np
 
 from .source import HierarchicalSource, make_source, ScheduleSpec
-from .techniques import DLSParams
 
 __all__ = ["HierarchicalExecutor"]
 

@@ -21,8 +21,15 @@ Timing model (see DESIGN.md Sec. 2 for the mapping from the MPI runtime):
   AWF-B/C/D/E or AF under DCA semantics.  The source's ``serialized`` flag
   selects the CCA or DCA timing model; per-chunk execution times feed
   ``report()`` so the technique reacts to the simulated speeds.
+* scenario (``cfg.scenario``, see select/scenarios.py): generalizes the
+  (delay_calc_s, pe_speeds) pair into per-PE piecewise-constant speed
+  profiles over simulated time — a chunk assigned to PE p at time ``done``
+  executes at ``scenario.speed_at(p, done)``.  Perturbation is
+  chunk-granular: the speed is sampled at chunk start and held.  The
+  scenario object is duck-typed (delay_calc_s / base_speeds / speed_at /
+  speeds_at / static / P) so ``core`` does not import ``select``.
 
-The simulator is deterministic given the cost vector and PE speeds.
+The simulator is deterministic given the cost vector and PE speeds/scenario.
 """
 
 from __future__ import annotations
@@ -117,6 +124,8 @@ class SimConfig:
     calc_cost_s: float = 2e-7  # intrinsic formula evaluation cost
     pe_speeds: Optional[np.ndarray] = None  # relative speeds, default ones
     dedicated_master: bool = False  # CCA only; paper's LB4MPI is non-dedicated
+    scenario: Optional[object] = None  # PerturbationScenario; supersedes
+    #                                    delay_calc_s + pe_speeds when set
 
 
 @dataclasses.dataclass
@@ -159,6 +168,20 @@ class AFFeedback:
         self._count[pe] += 1
 
 
+def _apply_scenario(cfg: SimConfig) -> SimConfig:
+    """Fold a PerturbationScenario into the config: its calculation delay
+    replaces ``delay_calc_s``; its speed profiles drive per-chunk execution
+    (sampled at chunk start — see module docstring)."""
+    scen = cfg.scenario
+    if scen is None:
+        return cfg
+    if cfg.pe_speeds is not None:
+        raise ValueError("pass either pe_speeds or scenario, not both")
+    if scen.P != cfg.params.P:
+        raise ValueError(f"scenario has {scen.P} PE profiles, params.P={cfg.params.P}")
+    return dataclasses.replace(cfg, delay_calc_s=float(scen.delay_calc_s))
+
+
 def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
     """Run one CCA/DCA/adaptive execution; returns T_loop^par and diagnostics.
 
@@ -168,6 +191,7 @@ def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
     source must be supplied per call (sources are stateful).
     ``approach="adaptive"`` builds an ``AdaptiveSource`` internally.
     """
+    cfg = _apply_scenario(cfg)
     p = cfg.params
     assert len(costs) >= p.N, f"need >= {p.N} iteration costs, got {len(costs)}"
     if source is None and cfg.approach == "adaptive":
@@ -182,6 +206,7 @@ def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
     if source is not None:
         return _simulate_with_source(cfg, costs, source)
     tech = get_technique(cfg.technique)
+    scen = cfg.scenario
     speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
     assert len(speeds) == p.P
 
@@ -271,7 +296,8 @@ def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
         remaining -= k
         step += 1
 
-        exec_t = chunk_exec(lo, hi) / speeds[pe]
+        speed = scen.speed_at(pe, done) if scen is not None else speeds[pe]
+        exec_t = chunk_exec(lo, hi) / speed
         t_free = done + exec_t
         if cfg.approach == "cca" and not cfg.dedicated_master and pe == 0:
             # master's own compute is displaced by the time it spent serving
@@ -309,7 +335,9 @@ def _simulate_with_source(cfg: SimConfig, costs: np.ndarray, source) -> SimResul
     Per-chunk execution time (and the scheduling overhead, for AWF-D/E) is
     fed back through ``report()`` at assignment, matching the legacy AF loop.
     """
+    cfg = _apply_scenario(cfg)
     p = cfg.params
+    scen = cfg.scenario
     speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
     assert len(speeds) == p.P
     csum = np.concatenate([[0.0], np.cumsum(costs[: p.N])])
@@ -344,7 +372,8 @@ def _simulate_with_source(cfg: SimConfig, costs: np.ndarray, source) -> SimResul
             coord_free = done
             overhead = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
 
-        exec_t = float(csum[chunk.hi] - csum[chunk.lo]) / speeds[pe]
+        speed = scen.speed_at(pe, done) if scen is not None else speeds[pe]
+        exec_t = float(csum[chunk.hi] - csum[chunk.lo]) / speed
         t_free = done + exec_t
         if serialized and not cfg.dedicated_master and pe == 0:
             t_free += master_extra

@@ -33,6 +33,11 @@ Four backends cover the paper's design space:
   from an inner source, workers drain per-group local sources built over each
   global chunk (replaces ``HierarchicalExecutor``'s bespoke loop).
 
+A fifth backend lives in ``select/simas.py``: ``SelectingSource``
+(``technique="auto"``) wraps a StaticSource behind the SimAS online
+selector, re-picking the technique at chunk boundaries from claim/report
+feedback.
+
 ``ScheduleSpec`` is the declarative config (technique, N, P, mode, min_chunk,
 hierarchy levels); ``make_source``/``source_for`` build backends from it.
 See DESIGN.md Sec. 8.
@@ -52,7 +57,6 @@ import numpy as np
 
 from .schedule import Schedule, build_schedule_cca, build_schedule_dca
 from .techniques import (
-    ADAPTIVE_TECHNIQUES,
     AWFFeedback,
     DLSParams,
     awf_variant,
@@ -153,9 +157,15 @@ def resolve_mode(technique: str, mode: str = "auto") -> Tuple[str, Optional[str]
     behaviour of silently downgrading to a synchronized/CCA path is gone.
     ``dca_sync`` is the paper's explicit AF-under-DCA fallback: the recursion
     runs under the lock (CCA calculation, DCA-style accounting).
+
+    ``technique="auto"`` resolves to the ``select`` mode regardless of the
+    requested mode: the SimAS selector (select/simas.py) picks — and keeps
+    re-picking — the technique online, always under DCA claim semantics.
     """
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if technique == "auto":
+        return "select", None
     tech = get_technique(technique)
     if mode == "auto":
         return ("dca" if tech.dca_supported else "adaptive"), None
@@ -598,8 +608,12 @@ class HierarchicalSource(ChunkSource):
                         out = Chunk(
                             next(self._steps), base + c.lo, base + c.hi, worker
                         )
-                        if getattr(local, "feedback", None) is not None:
-                            # track only feedback-consuming locals: static
+                        if (
+                            getattr(local, "feedback", None) is not None
+                            or getattr(local, "estimator", None) is not None
+                        ):
+                            # track only feedback-consuming locals (adaptive
+                            # feedback or a SelectingSource estimator): static
                             # locals ignore reports, and an unreported chunk
                             # would otherwise pin a dict entry forever
                             self._issued[out.step] = (local, c)
@@ -641,7 +655,15 @@ def source_for(
     warn: bool = True,
 ) -> ChunkSource:
     """Build the backend for (technique, mode); warns when the effective mode
-    differs from the requested one (the old silent fallback)."""
+    differs from the requested one (the old silent fallback).
+
+    ``technique="auto"`` builds a ``SelectingSource`` (select/simas.py): the
+    SimAS selector picks the technique online from claim/report feedback.
+    """
+    if technique == "auto":
+        from repro.select.simas import SelectingSource  # deferred: select imports core
+
+        return SelectingSource(params)
     effective, message = resolve_mode(technique, mode)
     if message and warn:
         warnings.warn(message, ModeDowngradeWarning, stacklevel=2)

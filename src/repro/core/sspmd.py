@@ -23,12 +23,8 @@ runtime/straggler.py (microbatch self-scheduling) and data/scheduler.py.
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from .jax_compat import axis_size
 from .techniques_jnp import (

@@ -37,7 +37,6 @@ Numerical notes
 from __future__ import annotations
 
 import dataclasses
-import hashlib
 import math
 from typing import Callable, Dict, Optional
 

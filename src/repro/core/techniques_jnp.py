@@ -129,7 +129,8 @@ def _tfss(i, pv):
 def _fiss(i, pv):
     b = pv[_FISS_B]
     k0 = jnp.floor(pv[_N] / ((2.0 + b) * pv[_P]))
-    cc = jnp.floor((2.0 * pv[_N] * (1.0 - b / (2.0 + b))) / (pv[_P] * b * jnp.maximum(b - 1.0, 1.0)))
+    cc = jnp.floor((2.0 * pv[_N] * (1.0 - b / (2.0 + b)))
+                   / (pv[_P] * b * jnp.maximum(b - 1.0, 1.0)))
     return k0 + jnp.floor(i / pv[_P]) * cc
 
 
@@ -277,7 +278,8 @@ def _tss_pfx(i, pv, head_cap):
 def _fiss_pfx(i, pv, head_cap):
     b_ = pv[_FISS_B]
     k0 = jnp.floor(pv[_N] / ((2.0 + b_) * pv[_P]))
-    cc = jnp.floor((2.0 * pv[_N] * (1.0 - b_ / (2.0 + b_))) / (pv[_P] * b_ * jnp.maximum(b_ - 1.0, 1.0)))
+    cc = jnp.floor((2.0 * pv[_N] * (1.0 - b_ / (2.0 + b_)))
+                   / (pv[_P] * b_ * jnp.maximum(b_ - 1.0, 1.0)))
     mce = _mce(pv)
     p_ = pv[_P]
     B = jnp.floor(i / p_)

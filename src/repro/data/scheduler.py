@@ -18,7 +18,6 @@ the paper's loop iterations, balancing the per-group token counts.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, Optional
 
 import numpy as np

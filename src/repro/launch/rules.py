@@ -9,7 +9,6 @@ replicated), and model size decides FSDP / microbatching / state dtypes.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 from jax.sharding import Mesh

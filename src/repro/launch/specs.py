@@ -8,7 +8,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding
 
 from repro.configs.shapes import ShapeSpec
 from repro.models import abstract_params, init_decode_caches, model_defs

@@ -11,10 +11,7 @@ by the fault-tolerance tests (failure injection + restart).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
-from functools import partial
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -50,10 +50,12 @@ def gqa_defs(cfg: ModelConfig, stack: int = 0) -> dict:
         "wq": ParamDef(pre + (d, hkv, g, hd), lpre + ("embed", "kv_heads", "heads_group", None)),
         "wk": ParamDef(pre + (d, hkv, hd), lpre + ("embed", "kv_heads", None)),
         "wv": ParamDef(pre + (d, hkv, hd), lpre + ("embed", "kv_heads", None)),
-        "wo": ParamDef(pre + (hkv, g, hd, d), lpre + ("kv_heads", "heads_group", None, "embed"), scale=scale),
+        "wo": ParamDef(pre + (hkv, g, hd, d), lpre + ("kv_heads", "heads_group", None, "embed"),
+                       scale=scale),
     }
     if cfg.qkv_bias:
-        p["bq"] = ParamDef(pre + (hkv, g, hd), lpre + ("kv_heads", "heads_group", None), init="zeros")
+        p["bq"] = ParamDef(pre + (hkv, g, hd), lpre + ("kv_heads", "heads_group", None),
+                           init="zeros")
         p["bk"] = ParamDef(pre + (hkv, hd), lpre + ("kv_heads", None), init="zeros")
         p["bv"] = ParamDef(pre + (hkv, hd), lpre + ("kv_heads", None), init="zeros")
     return p
@@ -334,7 +336,8 @@ def mla_forward(
     k_nope, v = kv[..., :nope], kv[..., nope:]
 
     q_all = jnp.concatenate([q_nope, q_rope], axis=-1)  # [B,S,H,nope+rope]
-    k_all = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (rope,))], axis=-1)
+    k_all = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:3] + (rope,))], axis=-1)
     q_all = constrain(q_all, rules, "batch", "seq", "act_heads", None)
     k_all = constrain(k_all, rules, "batch", None, "act_heads", None)
     v = constrain(v, rules, "batch", None, "act_heads", None)

@@ -7,7 +7,7 @@ period-position with a leading n_periods axis and scanned (model.py).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Union
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -33,7 +33,8 @@ def block_defs(cfg: ModelConfig, mixer: str, ffn: str, stack: int = 0) -> dict:
         raise ValueError(f"unknown mixer {mixer!r}")
     if ffn != "none":
         d["ffn_norm"] = ParamDef(pre + (cfg.d_model,), lpre + ("embed_unsharded",), init="ones")
-        d["ffn"] = moe_mod.moe_defs(cfg, stack) if ffn == "moe" else moe_mod.dense_ffn_defs(cfg, stack)
+        d["ffn"] = (moe_mod.moe_defs(cfg, stack) if ffn == "moe"
+                    else moe_mod.dense_ffn_defs(cfg, stack))
     return d
 
 

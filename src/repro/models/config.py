@@ -136,9 +136,11 @@ class ModelConfig:
             if mixer == "attn":
                 if self.attention == "mla":
                     per_period += d * self.q_lora_rank + self.q_lora_rank
-                    per_period += self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                    per_period += (self.q_lora_rank * self.n_heads
+                           * (self.qk_nope_dim + self.qk_rope_dim))
                     per_period += d * (self.kv_lora_rank + self.qk_rope_dim) + self.kv_lora_rank
-                    per_period += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                    per_period += (self.kv_lora_rank * self.n_heads
+                           * (self.qk_nope_dim + self.v_head_dim))
                     per_period += self.n_heads * self.v_head_dim * d
                 else:
                     per_period += d * self.n_heads * hd

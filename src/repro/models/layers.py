@@ -9,7 +9,6 @@ one source of truth for shapes, init and distribution.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 import jax
@@ -108,7 +107,8 @@ def layer_norm(x, scale, bias, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, axis=-1, keepdims=True)
     var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
-    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+           + bias.astype(jnp.float32))
     return out.astype(x.dtype)
 
 

@@ -36,7 +36,8 @@ def mamba_defs(cfg: ModelConfig, stack: int = 0) -> dict:
         "x_proj": ParamDef(pre + (di, dtr + 2 * n), lpre + ("ssm_inner", None)),
         "dt_proj": ParamDef(pre + (dtr, di), lpre + (None, "ssm_inner"), scale=dtr**-0.5),
         "dt_bias": ParamDef(pre + (di,), lpre + ("ssm_inner",), init="zeros"),
-        "a_log": ParamDef(pre + (di, n), lpre + ("ssm_inner", "ssm_state"), init="mamba_a", dtype="float32"),
+        "a_log": ParamDef(pre + (di, n), lpre + ("ssm_inner", "ssm_state"), init="mamba_a",
+                          dtype="float32"),
         "d_skip": ParamDef(pre + (di,), lpre + ("ssm_inner",), init="ones", dtype="float32"),
         "out_proj": ParamDef(pre + (di, d), lpre + ("ssm_inner", "embed"), scale=scale_out),
     }

@@ -12,8 +12,7 @@ prepended to the token embeddings.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -74,7 +74,8 @@ def moe_defs(cfg: ModelConfig, stack: int = 0) -> dict:
         "w2": ParamDef(pre + (e, f, d), lpre + ("experts", "expert_ffn", "embed"), scale=scale_out),
     }
     if cfg.n_shared_experts:
-        p["shared"] = dense_ffn_defs(cfg, stack, d_ff=cfg.n_shared_experts * (cfg.d_ff_expert or cfg.d_ff))
+        p["shared"] = dense_ffn_defs(
+            cfg, stack, d_ff=cfg.n_shared_experts * (cfg.d_ff_expert or cfg.d_ff))
     return p
 
 

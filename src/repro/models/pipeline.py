@@ -13,7 +13,6 @@ exercised by tests/test_pipeline.py on a placeholder-device mesh.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

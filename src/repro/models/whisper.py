@@ -12,7 +12,6 @@ and memory profiles are unchanged.
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple, Optional
 
 import jax
@@ -123,7 +122,8 @@ def whisper_forward(
         a = rms_norm(x, lp["self_norm"])
         x = x + attn_mod.gqa_forward(cfg, lp["self_attn"], a, rules, positions=positions)
         c = rms_norm(x, lp["cross_norm"])
-        x = x + _cross_attention(cfg, lp["cross_attn"], c, _cross_kv(lp["cross_attn"], enc_h), rules)
+        x = x + _cross_attention(cfg, lp["cross_attn"], c,
+                                 _cross_kv(lp["cross_attn"], enc_h), rules)
         f = rms_norm(x, lp["ffn_norm"])
         return x + dense_ffn_forward(lp["ffn"], f, rules), None
 

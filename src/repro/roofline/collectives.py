@@ -19,7 +19,6 @@ from __future__ import annotations
 import re
 from typing import Dict, List
 
-import numpy as np
 
 __all__ = ["parse_collectives", "SCOPE_NAMES"]
 
@@ -36,7 +35,9 @@ _COLL_RE = re.compile(
     re.M,
 )
 
-_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(
+    r"(f64|f32|bf16|f16|f8\w*|s64|s32|u32|s16|u16|s8|u8|pred|c64|c128)\[([\d,]*)\]"
+)
 
 _DTYPE_BYTES = {
     "f64": 8, "c64": 8, "c128": 16, "f32": 4, "s64": 8, "s32": 4, "u32": 4,

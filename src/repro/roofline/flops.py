@@ -15,7 +15,6 @@ so the ratio exposes remat/dispatch/masking waste.
 
 from __future__ import annotations
 
-import math
 from typing import Dict
 
 from repro.configs.shapes import ShapeSpec
@@ -141,7 +140,8 @@ def analytic_flops_bytes(cfg: ModelConfig, shape: ShapeSpec, plan: RuntimePlan,
     # per-device traffic: weights touched per microbatch (model-sharded slice),
     # optimizer (read m,v,p + write m,v,p), activations ~12 touches/layer/token
     weights = 3.0 * plan.n_microbatches * param_bytes_total / model_shards
-    optimizer = 3.0 * state_bytes / n_devices * 2 + 2.0 * param_bytes_total / n_devices + grad_bytes / n_devices * 3
+    optimizer = (3.0 * state_bytes / n_devices * 2
+                 + 2.0 * param_bytes_total / n_devices + grad_bytes / n_devices * 3)
     acts = 12.0 * tokens / n_devices * d * 2 * cfg.n_layers
     mf = model_flops(cfg, tokens, train=True)
     return {
@@ -168,5 +168,6 @@ def _cache_bytes_total(cfg: ModelConfig, shape: ShapeSpec) -> float:
             total += b * (di * n * 4 + (k - 1) * di * 2)
     total = total / len(cfg.period_pattern) * cfg.n_layers
     if cfg.family == "audio":
-        total += 2 * shape.global_batch * cfg.encoder_ctx * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * cfg.n_layers
+        total += (2 * shape.global_batch * cfg.encoder_ctx * cfg.n_kv_heads
+                  * cfg.resolved_head_dim * 2 * cfg.n_layers)
     return total

@@ -21,13 +21,33 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional
 
-import numpy as np
-
 from repro.core.executor import SelfSchedulingExecutor
 from repro.core.source import ChunkSource, ScheduleSpec, materialize
 from repro.core.techniques import DLSParams
 
-__all__ = ["dls_microbatch_assignment", "StragglerMitigator"]
+__all__ = [
+    "dls_microbatch_assignment",
+    "scenario_from_records",
+    "StragglerMitigator",
+]
+
+
+def scenario_from_records(records, n_groups: int, window: int = 16):
+    """Estimate the live ``PerturbationScenario`` from executor chunk records.
+
+    Each ``ChunkRecord`` contributes (worker, size, elapsed, t_claim) to a
+    ``ScenarioEstimator`` (select/scenarios.py); the result is the per-group
+    relative-speed scenario the SimAS selector would re-select against —
+    persistently throttled DP groups show up as slow PEs."""
+    from repro.select.scenarios import ScenarioEstimator  # select imports core
+
+    if not records:
+        raise ValueError("no chunk records yet — run the executor first")
+    est = ScenarioEstimator(n_groups, window=window)
+    t0 = min(r.t_claim for r in records)
+    for r in sorted(records, key=lambda r: r.t_done):
+        est.observe(r.worker, r.hi - r.lo, r.t_done - r.t_claim, t=r.t_claim - t0)
+    return est.estimate(name="straggler_estimate")
 
 
 def dls_microbatch_assignment(n_micro: int, n_groups: int, technique: str = "fac",
@@ -57,7 +77,9 @@ class StragglerMitigator:
     Any ``ChunkSource`` can drive the claims (``source=``) — adaptive
     techniques (``awf_*``/``af``) get one automatically under ``mode='dca'``,
     so persistently slow DP groups receive proportionally smaller microbatch
-    chunks as measurements accumulate."""
+    chunks as measurements accumulate.  ``technique='auto'`` self-schedules
+    through the SimAS ``SelectingSource``; ``estimate_scenario()`` exposes
+    the measured perturbation scenario either way."""
 
     def __init__(self, n_micro: int, n_groups: int, technique: str = "fac",
                  mode: str = "dca", source: Optional[ChunkSource] = None):
@@ -76,3 +98,14 @@ class StragglerMitigator:
         for r in self.executor.records:
             out[r.worker] = out.get(r.worker, 0) + (r.hi - r.lo)
         return out
+
+    def estimate_scenario(self):
+        """The measured perturbation scenario (per-group relative speeds).
+
+        Prefers the live estimator of a ``SelectingSource`` (its windowed
+        view is what re-selection actually used); otherwise rebuilds one
+        from the executor's chunk records."""
+        est = getattr(self.executor.source, "estimator", None)
+        if est is not None and est.ready:
+            return est.estimate(name="straggler_estimate")
+        return scenario_from_records(self.executor.records, self.n_groups)

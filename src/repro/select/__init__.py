@@ -1,0 +1,38 @@
+"""Online DLS technique selection over a unified perturbation-scenario model.
+
+``scenarios``  — composable per-PE perturbation profiles (constant/variable
+slowdown, bursty degradation, correlated multi-PE slowdown, trace replay)
+accepted by both simulation engines, plus the live-feedback estimator.
+
+``simas``      — the SimAS-style selector (Mohammed & Ciorba,
+arXiv:1912.02050): sweep all twelve DCA-capable techniques x {cca, dca}
+through ``fastsim.simulate_sweep`` under a scenario estimate, rank by
+T_loop^par, and (via ``SelectingSource``) re-select online at chunk
+boundaries as the live scenario drifts.
+"""
+
+from .scenarios import (
+    PerturbationScenario,
+    ScenarioEstimator,
+    SpeedProfile,
+    mixed_suite,
+)
+from .simas import (
+    SELECTABLE,
+    SelectingSource,
+    evaluate_selector,
+    rank_techniques,
+    select_technique,
+)
+
+__all__ = [
+    "PerturbationScenario",
+    "ScenarioEstimator",
+    "SpeedProfile",
+    "mixed_suite",
+    "SELECTABLE",
+    "SelectingSource",
+    "evaluate_selector",
+    "rank_techniques",
+    "select_technique",
+]

@@ -1,0 +1,433 @@
+"""Perturbation scenarios: the simulator's slowdown knobs as one composable model.
+
+The paper evaluates CCA vs DCA under a single scalar perturbation — the
+injected chunk-*calculation* delay (0/10/100 us) — plus an optional static
+``pe_speeds`` vector.  SimAS-style technique selection (arXiv:1912.02050)
+needs a richer vocabulary: PEs that are *sometimes* slow, groups of PEs that
+degrade *together*, and replay of perturbations measured from a live run.
+
+A ``PerturbationScenario`` bundles
+
+* ``delay_calc_s``  — the paper's calculation delay (scalar; injected into
+  the CCA master's service time or the DCA requesting-PE calculation,
+  exactly as before), and
+* one ``SpeedProfile`` per PE — a piecewise-constant relative speed over
+  *simulated time*.
+
+Both engines accept a scenario through ``SimConfig.scenario``
+(``core/simulator.py`` and ``core/fastsim.py``): a chunk assigned to PE ``p``
+at time ``done`` executes in ``work / speed_p(done)`` seconds.  Perturbation
+is therefore **chunk-granular**: the speed is sampled once, when the PE
+starts the chunk, and held for the chunk's duration.  That is the resolution
+at which self-scheduling can react anyway, and it keeps the vectorized
+engine's bit-identity with the event engine intact (the same float64 lookup
+and a single IEEE division on both sides —
+tests/test_scenarios.py pins event == fast under every profile type).
+
+``ScenarioEstimator`` closes the loop: it turns ``report()`` feedback
+(chunk size, elapsed, scheduling overhead) into a scenario estimate —
+per-PE relative speeds from windowed per-iteration times, a calculation-delay
+estimate from the observed overheads, and optionally a trace-replay scenario
+(piecewise-constant speeds over time bins) for post-hoc analysis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "SpeedProfile",
+    "PerturbationScenario",
+    "ScenarioEstimator",
+    "mixed_suite",
+]
+
+
+class SpeedProfile:
+    """Piecewise-constant relative speed of one PE over simulated time.
+
+    ``speeds[k]`` applies on ``[times[k-1], times[k])`` (with ``times[-1]``
+    taken as -inf and ``times[K]`` as +inf); window starts are inclusive.
+    """
+
+    __slots__ = ("times", "speeds")
+
+    def __init__(self, speeds: Sequence[float], times: Sequence[float] = ()):
+        self.times = np.asarray(times, dtype=np.float64)
+        self.speeds = np.asarray(speeds, dtype=np.float64)
+        if self.speeds.ndim != 1 or self.times.ndim != 1:
+            raise ValueError("speeds/times must be 1-D")
+        if len(self.speeds) != len(self.times) + 1:
+            raise ValueError(
+                f"need len(speeds) == len(times) + 1, got "
+                f"{len(self.speeds)} speeds for {len(self.times)} breakpoints"
+            )
+        if not np.all(self.speeds > 0):
+            raise ValueError("speeds must be positive")
+        if len(self.times) and not np.all(np.diff(self.times) > 0):
+            raise ValueError("breakpoints must be strictly increasing")
+
+    @classmethod
+    def constant(cls, speed: float = 1.0) -> "SpeedProfile":
+        return cls([speed])
+
+    @classmethod
+    def windows(
+        cls,
+        windows: Iterable[Tuple[float, float]],
+        factor: float,
+        base: float = 1.0,
+    ) -> "SpeedProfile":
+        """Speed ``base`` everywhere except ``factor * base`` inside each
+        (t_start, t_end) window; windows must be disjoint and ascending."""
+        times: List[float] = []
+        speeds: List[float] = [base]
+        for t0, t1 in windows:
+            if not t0 < t1:
+                raise ValueError(f"empty perturbation window ({t0}, {t1})")
+            if times and t0 <= times[-1]:
+                raise ValueError("perturbation windows must be disjoint and ascending")
+            times += [float(t0), float(t1)]
+            speeds += [base * factor, base]
+        return cls(speeds, times)
+
+    @property
+    def is_constant(self) -> bool:
+        return len(self.times) == 0
+
+    def at(self, t: float) -> float:
+        """Speed at time ``t`` (window starts inclusive)."""
+        return float(self.speeds[int(np.searchsorted(self.times, t, side="right"))])
+
+
+class PerturbationScenario:
+    """Per-PE perturbation profiles + the paper's calculation delay.
+
+    The two lookup faces are bit-identical by construction — both read the
+    same padded float64 tables:
+
+    * ``speed_at(pe, t)``    — scalar, used by the heapq event engine;
+    * ``speeds_at(pes, ts)`` — vectorized, used by the round-based engine.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        profiles: Sequence[SpeedProfile],
+        delay_calc_s: float = 0.0,
+    ):
+        if not profiles:
+            raise ValueError("need at least one PE profile")
+        if delay_calc_s < 0:
+            raise ValueError("delay_calc_s must be >= 0")
+        self.name = name
+        self.profiles = tuple(profiles)
+        self.delay_calc_s = float(delay_calc_s)
+        P = len(self.profiles)
+        kmax = max(len(p.times) for p in self.profiles)
+        # +inf padding: padded breakpoints never count as <= t, and the speed
+        # columns past a profile's own length repeat its final value, so a
+        # single fancy-indexed gather serves every PE regardless of how many
+        # breakpoints it has.
+        self._times = np.full((P, kmax), np.inf)
+        self._speeds = np.empty((P, kmax + 1))
+        for i, prof in enumerate(self.profiles):
+            k = len(prof.times)
+            self._times[i, :k] = prof.times
+            self._speeds[i, : k + 1] = prof.speeds
+            self._speeds[i, k + 1 :] = prof.speeds[-1]
+
+    def __repr__(self):
+        kind = "static" if self.static else "time-varying"
+        return (
+            f"PerturbationScenario({self.name!r}, P={self.P}, {kind}, "
+            f"delay={self.delay_calc_s * 1e6:.0f}us)"
+        )
+
+    @property
+    def P(self) -> int:
+        return len(self.profiles)
+
+    @property
+    def static(self) -> bool:
+        """True when no profile varies over time (plain ``pe_speeds``)."""
+        return all(p.is_constant for p in self.profiles)
+
+    def base_speeds(self) -> np.ndarray:
+        """Per-PE speeds at t=0 (the full vector for static scenarios)."""
+        return self._speeds[np.arange(self.P), (self._times <= 0.0).sum(axis=1)]
+
+    def speed_at(self, pe: int, t: float) -> float:
+        return float(self._speeds[pe, int((self._times[pe] <= t).sum())])
+
+    def speeds_at(self, pes: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Vectorized ``speed_at``: speeds of ``pes[k]`` at ``ts[k]``."""
+        idx = (self._times[pes] <= np.asarray(ts)[:, None]).sum(axis=1)
+        return self._speeds[pes, idx]
+
+    # -- constructors ---------------------------------------------------------
+
+    @classmethod
+    def constant(
+        cls,
+        P: int,
+        delay_calc_s: float = 0.0,
+        speeds: Optional[Sequence[float]] = None,
+        name: str = "constant",
+    ) -> "PerturbationScenario":
+        """The paper's scenarios: a calculation delay, homogeneous speeds
+        (or a supplied static speed vector)."""
+        sp = np.ones(P) if speeds is None else np.asarray(speeds, dtype=np.float64)
+        if len(sp) != P:
+            raise ValueError(f"need {P} speeds, got {len(sp)}")
+        return cls(name, [SpeedProfile.constant(s) for s in sp], delay_calc_s)
+
+    @classmethod
+    def variable(
+        cls,
+        P: int,
+        slow_pes: Sequence[int],
+        factor: float = 0.5,
+        delay_calc_s: float = 0.0,
+        name: str = "variable",
+    ) -> "PerturbationScenario":
+        """Static heterogeneity: ``slow_pes`` run at ``factor``, the rest at 1."""
+        sp = np.ones(P)
+        sp[np.asarray(slow_pes, dtype=np.int64)] = factor
+        return cls.constant(P, delay_calc_s, sp, name=name)
+
+    @classmethod
+    def bursty(
+        cls,
+        P: int,
+        pe: int,
+        windows: Sequence[Tuple[float, float]],
+        factor: float = 0.25,
+        delay_calc_s: float = 0.0,
+        name: str = "bursty",
+    ) -> "PerturbationScenario":
+        """One PE degrades to ``factor`` inside each time window."""
+        return cls.correlated(P, [pe], windows, factor, delay_calc_s, name=name)
+
+    @classmethod
+    def correlated(
+        cls,
+        P: int,
+        pes: Sequence[int],
+        windows: Sequence[Tuple[float, float]],
+        factor: float = 0.25,
+        delay_calc_s: float = 0.0,
+        name: str = "correlated",
+    ) -> "PerturbationScenario":
+        """A group of PEs degrades *together* (same windows, same factor) —
+        the co-located-noisy-neighbor / shared-rack scenario."""
+        burst = SpeedProfile.windows(windows, factor)
+        flat = SpeedProfile.constant(1.0)
+        members = set(int(q) for q in pes)
+        return cls(
+            name,
+            [burst if q in members else flat for q in range(P)],
+            delay_calc_s,
+        )
+
+    @classmethod
+    def from_trace(
+        cls,
+        times: Sequence[float],
+        speeds: np.ndarray,
+        delay_calc_s: float = 0.0,
+        name: str = "trace",
+    ) -> "PerturbationScenario":
+        """Trace replay: shared breakpoints ``times`` [K], per-PE speeds
+        ``speeds`` [K+1, P] (e.g. from ``ScenarioEstimator.trace_scenario``)."""
+        speeds = np.asarray(speeds, dtype=np.float64)
+        if speeds.ndim != 2 or speeds.shape[0] != len(times) + 1:
+            raise ValueError(
+                f"speeds must be [K+1, P] for K={len(times)} breakpoints, "
+                f"got {speeds.shape}"
+            )
+        return cls(
+            name,
+            [SpeedProfile(speeds[:, q], times) for q in range(speeds.shape[1])],
+            delay_calc_s,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Live estimation from claim/report feedback
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Obs:
+    t: float
+    pe: int
+    per_iter: float
+    overhead: float
+
+
+class ScenarioEstimator:
+    """Estimate the live scenario from ``report()`` feedback.
+
+    ``observe(pe, size, elapsed, overhead)`` records one finished chunk;
+    ``estimate()`` returns a static ``PerturbationScenario``: per-PE relative
+    speeds from the windowed mean per-iteration time (fastest PE := speed 1)
+    plus a calculation-delay estimate (median observed scheduling overhead
+    minus ``overhead_floor_s``, the h_assign + calc_cost the runtime pays
+    even unperturbed).  ``trace_scenario()`` bins the full observation
+    history into a piecewise-constant replay scenario.
+
+    Observations carry a timestamp; when the caller has none (a live source
+    sees only durations), each PE's cumulative elapsed time serves as its
+    clock — sufficient for windowing and binning.  Thread-safe.
+    """
+
+    def __init__(self, P: int, window: int = 16, overhead_floor_s: float = 0.0):
+        if P <= 0:
+            raise ValueError("P must be positive")
+        self.P = P
+        self.window = max(int(window), 1)
+        self.overhead_floor_s = float(overhead_floor_s)
+        self.observations = 0
+        self._lock = threading.Lock()
+        self._recent: List[List[float]] = [[] for _ in range(P)]  # per-iter times
+        self._overheads: List[float] = []
+        self._trace: List[_Obs] = []
+        self._clock = np.zeros(P)
+
+    def observe(
+        self,
+        pe: int,
+        size: int,
+        elapsed: float,
+        overhead: float = 0.0,
+        t: Optional[float] = None,
+    ) -> None:
+        pe = int(pe) % self.P
+        per_iter = float(elapsed) / max(int(size), 1)
+        with self._lock:
+            stamp = float(t) if t is not None else float(self._clock[pe])
+            self._clock[pe] += float(elapsed)
+            rec = self._recent[pe]
+            rec.append(per_iter)
+            if len(rec) > self.window:
+                del rec[0]
+            self._overheads.append(float(overhead))
+            if len(self._overheads) > self.window * self.P:
+                del self._overheads[0]
+            self._trace.append(_Obs(stamp, pe, per_iter, float(overhead)))
+            self.observations += 1
+
+    @property
+    def ready(self) -> bool:
+        """Every PE has reported at least once (speeds are comparable)."""
+        return all(self._recent)
+
+    def _mean_per_iter(self) -> np.ndarray:
+        m = np.full(self.P, np.nan)
+        for pe, rec in enumerate(self._recent):
+            if rec:
+                m[pe] = float(np.mean(rec))
+        return m
+
+    def iter_time_mean(self) -> float:
+        """Mean per-iteration time of the fastest PE — the cost-model unit
+        matching ``speeds()``'s fastest-PE := 1 normalization."""
+        m = self._mean_per_iter()
+        if np.isnan(m).all():
+            raise RuntimeError("no observations yet")
+        return float(np.nanmin(m))
+
+    def speeds(self) -> np.ndarray:
+        """Per-PE relative speeds from the recent window (fastest == 1;
+        unobserved PEs assume full speed)."""
+        m = self._mean_per_iter()
+        if np.isnan(m).all():
+            return np.ones(self.P)
+        fastest = np.nanmin(m)
+        m = np.where(np.isnan(m), fastest, m)
+        return fastest / np.maximum(m, 1e-30)
+
+    def delay_estimate(self) -> float:
+        """Estimated injected calculation delay: median recent overhead minus
+        the unperturbed floor, clamped at 0."""
+        if not self._overheads:
+            return 0.0
+        return max(float(np.median(self._overheads)) - self.overhead_floor_s, 0.0)
+
+    def estimate(self, name: str = "estimated") -> PerturbationScenario:
+        """Current best static scenario (speeds + delay) for the selector."""
+        return PerturbationScenario.constant(
+            self.P, self.delay_estimate(), self.speeds(), name=name
+        )
+
+    def trace_scenario(
+        self, n_bins: int = 8, name: str = "trace"
+    ) -> PerturbationScenario:
+        """Piecewise-constant replay of the observed history: time is split
+        into ``n_bins`` equal bins; each PE's speed per bin comes from its
+        mean per-iteration time there (empty bins inherit the PE's overall
+        mean).  Feed the result back as a scenario to re-simulate what the
+        run actually experienced."""
+        with self._lock:
+            trace = list(self._trace)
+        if not trace:
+            raise RuntimeError("no observations yet")
+        t_end = max(o.t for o in trace)
+        n_bins = max(int(n_bins), 1)
+        edges = np.linspace(0.0, max(t_end, 1e-12), n_bins + 1)[1:-1]
+        sums = np.zeros((n_bins, self.P))
+        counts = np.zeros((n_bins, self.P))
+        for o in trace:
+            b = int(np.searchsorted(edges, o.t, side="right"))
+            sums[b, o.pe] += o.per_iter
+            counts[b, o.pe] += 1
+        with np.errstate(invalid="ignore"):
+            mean_bins = sums / counts
+        overall = np.where(
+            counts.sum(axis=0) > 0,
+            sums.sum(axis=0) / np.maximum(counts.sum(axis=0), 1),
+            np.nan,
+        )
+        mean_bins = np.where(counts > 0, mean_bins, overall[None, :])
+        fastest = np.nanmin(mean_bins)
+        mean_bins = np.where(np.isnan(mean_bins), fastest, mean_bins)
+        speeds = fastest / np.maximum(mean_bins, 1e-30)
+        return PerturbationScenario.from_trace(
+            edges, speeds, self.delay_estimate(), name=name
+        )
+
+
+# ---------------------------------------------------------------------------
+# The mixed-perturbation suite (benchmarks, example, acceptance tests)
+# ---------------------------------------------------------------------------
+
+
+def mixed_suite(P: int, horizon_s: float) -> List[PerturbationScenario]:
+    """The scenario suite the selector is judged on: one scenario per
+    perturbation family, scaled to a run of roughly ``horizon_s`` seconds
+    per PE (window edges must fall inside the run to matter)."""
+    h = float(horizon_s)
+    quarter = max(P // 4, 1)
+    return [
+        PerturbationScenario.constant(P, name="baseline"),
+        PerturbationScenario.constant(P, delay_calc_s=5e-4, name="calc_delay"),
+        PerturbationScenario.variable(
+            P, slow_pes=range(P - quarter, P), factor=0.25, name="hetero"
+        ),
+        PerturbationScenario.bursty(
+            P, pe=1, windows=[(0.25 * h, 0.75 * h)], factor=0.1, name="bursty"
+        ),
+        PerturbationScenario.correlated(
+            P,
+            pes=range(quarter),
+            windows=[(0.1 * h, 0.6 * h)],
+            factor=0.3,
+            delay_calc_s=1e-5,
+            name="correlated",
+        ),
+    ]

@@ -1,0 +1,312 @@
+"""SimAS-style online DLS technique selection (Mohammed & Ciorba, arXiv:1912.02050).
+
+The paper this repo reproduces evaluates twelve DLS techniques under fixed
+slowdown scenarios but leaves *choosing* one to the user.  SimAS's insight:
+when the simulator is orders of magnitude faster than the loop it models
+(exactly what ``fastsim.simulate_sweep`` was built for — its docstring names
+this use case), the best technique can be selected *online*, re-evaluated as
+the perturbation evolves.
+
+Three layers:
+
+* ``rank_techniques`` / ``select_technique`` — the offline selector: sweep
+  a candidate pool (default: all twelve DCA-capable techniques) x
+  {cca, dca} under one ``PerturbationScenario`` through the analytic engine
+  and rank by T_loop^par.
+* ``SelectingSource`` — a ``ChunkSource`` backend wiring the selector into
+  a live loop: chunks start under a fine-grained warm-up technique while a
+  ``ScenarioEstimator`` learns per-PE speeds and the calculation delay from
+  ``claim``/``report`` timings; at geometrically spaced chunk boundaries the
+  selector re-ranks the pool over the *remaining* iteration space and the
+  source switches its schedule in place.  ``technique="auto"`` anywhere a
+  ``ScheduleSpec``/``source_for`` is accepted (executor, hierarchical
+  executor, ``serve.DLSAdmission``, ``StragglerMitigator``) builds one.
+* ``evaluate_selector`` — the reproduction harness: for a scenario suite,
+  T_loop^par of every fixed (technique, approach) pair next to the online
+  selector's achieved time (the SimAS "selector beats every fixed technique
+  across mixed perturbations" table; snapshot in BENCH_simas_selection.json).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.fastsim import simulate_sweep
+from repro.core.simulator import SimConfig, constant_costs, simulate
+from repro.core.source import Chunk, ChunkSource, StaticSource
+from repro.core.techniques import DLSParams, get_technique, technique_names
+
+from .scenarios import PerturbationScenario, ScenarioEstimator
+
+__all__ = [
+    "SELECTABLE",
+    "rank_techniques",
+    "select_technique",
+    "SelectingSource",
+    "evaluate_selector",
+]
+
+
+# The paper's twelve: every technique with a closed (DCA) form.  Feedback
+# techniques are excluded from the pool — their simulation needs the event
+# engine (too slow to re-run online) and their adaptation overlaps with the
+# selector's own.
+SELECTABLE = tuple(technique_names(dca_only=True))
+
+
+def rank_techniques(
+    params: DLSParams,
+    costs: np.ndarray,
+    scenario: PerturbationScenario,
+    techniques: Sequence[str] = SELECTABLE,
+    approaches: Sequence[str] = ("cca", "dca"),
+    h_assign_s: float = 1e-6,
+    calc_cost_s: float = 2e-7,
+) -> List[Dict]:
+    """The ranked portfolio: simulate_sweep rows sorted by T_loop^par
+    (ties broken by name so the ranking is deterministic)."""
+    rows = simulate_sweep(
+        params,
+        costs,
+        techniques,
+        approaches=approaches,
+        perturbations=[scenario],
+        h_assign_s=h_assign_s,
+        calc_cost_s=calc_cost_s,
+    )
+    return sorted(rows, key=lambda r: (r["t_parallel"], r["technique"], r["approach"]))
+
+
+def select_technique(
+    params: DLSParams,
+    costs: np.ndarray,
+    scenario: PerturbationScenario,
+    techniques: Sequence[str] = SELECTABLE,
+    approaches: Sequence[str] = ("cca", "dca"),
+    **kw,
+) -> Dict:
+    """Best row of the portfolio (see ``rank_techniques``)."""
+    return rank_techniques(params, costs, scenario, techniques, approaches, **kw)[0]
+
+
+class SelectingSource(ChunkSource):
+    """Online technique selection behind the ChunkSource protocol.
+
+    The iteration space starts under ``initial_technique`` (default SS:
+    single-iteration warm-up chunks, the same probe AF uses — cheap to
+    abandon and every PE reports quickly).  Each ``report()`` feeds the
+    ``ScenarioEstimator``; once every PE has reported and a re-selection
+    boundary passes, the selector sweeps the pool over the *remaining*
+    iterations under the estimated scenario and, if the winner differs from
+    the current technique, rebuilds the inner ``StaticSource`` over exactly
+    the un-assigned remainder — chunks keep tiling [0, N) structurally.
+
+    Re-selection boundaries are geometrically spaced (``reselect_every``
+    claims, interval x ``backoff`` each time): the scenario estimate is
+    noisiest early, so early boundaries are dense, and total selection cost
+    is O(log) sweeps no matter how long the loop runs.  Selection runs off
+    the claim path (SimAS runs the simulator beside the application): a
+    boundary only *flags* re-selection; the sweep itself happens in the next
+    ``report()`` — the reporting worker is between chunks, and other
+    workers keep claiming meanwhile.  The ranking is computed against a
+    snapshot of the consumed count and applied under the claim lock to the
+    then-current remainder (an advisory read, in the same spirit as the
+    paper's racy R) — the claim lock serializes only the table lookup and,
+    when the winner changes, the schedule swap.
+
+    ``costs``: optional per-iteration cost vector (length >= N) — SimAS
+    assumes the workload profile is known from prior runs.  Without it the
+    selector uses a constant cost model calibrated to the measured mean
+    iteration time, which preserves ranking for low-variance workloads.
+    """
+
+    serialized = False
+
+    def __init__(
+        self,
+        params: DLSParams,
+        costs: Optional[np.ndarray] = None,
+        techniques: Sequence[str] = SELECTABLE,
+        initial_technique: str = "ss",
+        scenario: Optional[PerturbationScenario] = None,
+        reselect_every: Optional[int] = None,
+        backoff: float = 2.0,
+        h_assign_s: float = 1e-6,
+        calc_cost_s: float = 2e-7,
+        window: int = 16,
+    ):
+        for t in techniques:
+            if not get_technique(t).dca_supported:
+                raise ValueError(
+                    f"{t} needs execution feedback; the selector pool must be "
+                    "closed-form techniques (its sweep uses the analytic engine)"
+                )
+        self.params = params
+        self.costs = None if costs is None else np.asarray(costs, dtype=np.float64)
+        if self.costs is not None and len(self.costs) < params.N:
+            raise ValueError(f"need >= {params.N} iteration costs, got {len(self.costs)}")
+        self.techniques = tuple(techniques)
+        self.h_assign_s = float(h_assign_s)
+        self.calc_cost_s = float(calc_cost_s)
+        self.backoff = float(backoff)
+        self.estimator = ScenarioEstimator(
+            params.P, window=window, overhead_floor_s=h_assign_s + calc_cost_s
+        )
+        self.technique = initial_technique
+        if scenario is not None:
+            # an assumed scenario is known up front: select before claim one
+            model = self.costs if self.costs is not None else constant_costs(params.N)
+            self.technique = select_technique(
+                params, model, scenario, self.techniques, approaches=("dca",),
+                h_assign_s=h_assign_s, calc_cost_s=calc_cost_s,
+            )["technique"]
+        self.reselections = 0
+        self.selections: List[Dict] = []  # (step, consumed, technique, t_pred)
+        self._lock = threading.Lock()
+        self._select_lock = threading.Lock()
+        self._reselect_pending = False
+        self._interval = int(reselect_every) if reselect_every else 2 * params.P
+        self._next_reselect = self._interval
+        self._step = 0
+        self._consumed = 0
+        self._base = 0
+        self._inner = StaticSource.build(self.technique, params)
+
+    # -- selection ----------------------------------------------------------
+
+    def _reselect(self) -> None:
+        """Re-rank the pool over the remaining iterations.
+
+        Runs on the reporting worker with NO claim lock held: the sweep uses
+        an advisory snapshot of the consumed count; only applying a changed
+        winner re-enters the claim lock (against the then-current remainder).
+        """
+        consumed = self._consumed  # advisory snapshot (racy, like the paper's R)
+        remaining = self.params.N - consumed
+        if remaining <= self.params.P or not self.estimator.ready:
+            return
+        scen = self.estimator.estimate()
+        sub = dataclasses.replace(self.params, N=remaining)
+        if self.costs is not None:
+            model = self.costs[consumed:]
+        else:
+            model = constant_costs(remaining, self.estimator.iter_time_mean())
+        best = select_technique(
+            sub, model, scen, self.techniques, approaches=("dca",),
+            h_assign_s=self.h_assign_s, calc_cost_s=self.calc_cost_s,
+        )
+        self.reselections += 1
+        self.selections.append(
+            dict(
+                step=self._step,
+                consumed=consumed,
+                technique=best["technique"],
+                t_predicted=best["t_parallel"],
+                delay_estimate=scen.delay_calc_s,
+            )
+        )
+        if best["technique"] == self.technique:
+            return
+        with self._lock:  # the swap: rebuild over the *current* remainder
+            remaining = self.params.N - self._consumed
+            if remaining <= 0:
+                return
+            self.technique = best["technique"]
+            self._base = self._consumed
+            self._inner = StaticSource.build(
+                self.technique, dataclasses.replace(self.params, N=remaining)
+            )
+
+    # -- protocol -----------------------------------------------------------
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        with self._lock:
+            c = self._inner.claim(worker)
+            if c is None:
+                return None
+            step = self._step
+            self._step += 1
+            lo, hi = self._base + c.lo, self._base + c.hi
+            self._consumed = hi  # StaticSource hands chunks in step order
+            if self._step >= self._next_reselect and hi < self.params.N:
+                self._next_reselect = self._step + self._interval
+                self._interval = max(int(self._interval * self.backoff), 1)
+                self._reselect_pending = True  # sweep happens in report()
+            return Chunk(step, lo, hi, worker)
+
+    def report(self, chunk: Chunk, elapsed: float, overhead: float = 0.0) -> None:
+        self.estimator.observe(chunk.worker, chunk.size, elapsed, overhead)
+        if self._reselect_pending:
+            with self._select_lock:  # one sweep per boundary
+                if not self._reselect_pending:
+                    return
+                self._reselect_pending = False
+                self._reselect()
+
+    def drained(self) -> bool:
+        return self._consumed >= self.params.N
+
+    @property
+    def claimed(self) -> int:
+        """Successful claims so far."""
+        return self._step
+
+
+def evaluate_selector(
+    params: DLSParams,
+    costs: np.ndarray,
+    scenarios: Sequence[PerturbationScenario],
+    techniques: Sequence[str] = SELECTABLE,
+    fixed_approaches: Sequence[str] = ("cca", "dca"),
+    h_assign_s: float = 1e-6,
+    calc_cost_s: float = 2e-7,
+    selector_kwargs: Optional[Dict] = None,
+) -> List[Dict]:
+    """Selector vs every fixed (technique, approach) across a scenario suite.
+
+    Per scenario: all fixed pairs run through ``simulate_sweep`` (analytic
+    engine), then a fresh online ``SelectingSource`` — estimating the
+    scenario purely from claim/report feedback, knowing only the workload
+    cost profile — runs through the event engine under DCA timing.  Rows
+    report the selector's achieved T_loop^par against the best/worst fixed.
+    """
+    fixed = simulate_sweep(
+        params, costs, techniques, approaches=fixed_approaches,
+        perturbations=list(scenarios),
+        h_assign_s=h_assign_s, calc_cost_s=calc_cost_s,
+    )
+    out: List[Dict] = []
+    for scen in scenarios:
+        rows = [r for r in fixed if r["scenario"] == scen.name]
+        best = min(rows, key=lambda r: r["t_parallel"])
+        worst = max(rows, key=lambda r: r["t_parallel"])
+        src = SelectingSource(
+            params, costs=costs, techniques=techniques,
+            h_assign_s=h_assign_s, calc_cost_s=calc_cost_s,
+            **(selector_kwargs or {}),
+        )
+        cfg = SimConfig(
+            technique="auto", params=params, approach="dca",
+            h_assign_s=h_assign_s, calc_cost_s=calc_cost_s, scenario=scen,
+        )
+        res = simulate(cfg, costs, source=src)
+        out.append(
+            dict(
+                scenario=scen.name,
+                t_selector=float(res.t_parallel),
+                t_best_fixed=float(best["t_parallel"]),
+                t_worst_fixed=float(worst["t_parallel"]),
+                best_fixed=f"{best['technique']}/{best['approach']}",
+                worst_fixed=f"{worst['technique']}/{worst['approach']}",
+                vs_best=float(res.t_parallel / best["t_parallel"]),
+                vs_worst=float(res.t_parallel / worst["t_parallel"]),
+                final_technique=src.technique,
+                reselections=int(src.reselections),
+                num_chunks=int(res.num_chunks),
+            )
+        )
+    return out

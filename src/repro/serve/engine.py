@@ -51,7 +51,10 @@ class DLSAdmission:
     counter alone); pass ``mode='adaptive'`` with ``technique='af'`` — or an
     explicit ``source=`` — and ``note_service`` feedback adapts admission
     chunk sizes to the measured engine service times (AF sizes chunks from
-    the service-time mean/variance).  Claims rotate through the source's P
+    the service-time mean/variance).  ``technique='auto'`` goes further:
+    the SimAS ``SelectingSource`` (select/simas.py) *re-selects the
+    admission technique itself* at chunk boundaries from the same
+    ``note_service`` feedback.  Claims rotate through the source's P
     virtual PEs so every feedback slot accumulates measurements (there is
     one engine, not P workers; for ``awf_*`` the rotation makes the weights
     track *recent* service rounds rather than collapsing to all-ones)."""

@@ -45,7 +45,9 @@ def test_analytic_matches_xla_on_scan_free_forward():
     shape = ShapeSpec("xval", "prefill", s, b)
     ana = analytic_flops_bytes(cfg, shape, RuntimePlan(), n_devices=1, model_shards=1)
     ratio = ana["flops_global"] / xla_flops
-    assert 0.8 < ratio < 1.2, f"analytic/xla = {ratio:.3f} ({ana['flops_global']:.3e} vs {xla_flops:.3e})"
+    assert 0.8 < ratio < 1.2, (
+        f"analytic/xla = {ratio:.3f} ({ana['flops_global']:.3e} vs {xla_flops:.3e})"
+    )
 
 
 def test_model_flops_matches_6nd():
@@ -64,10 +66,12 @@ def test_roofline_terms_dominance():
 
 HLO_SNIPPET = """
 ENTRY %main {
-  %ag = f32[64,256]{1,0} all-gather(%x), replica_groups=..., metadata={op_name="jit(f)/layers_scan/while/body/gather"}
+  %ag = f32[64,256]{1,0} all-gather(%x), replica_groups=...,\
+    metadata={op_name="jit(f)/layers_scan/while/body/gather"}
   %ar-start = bf16[1024]{0} all-reduce-start(%y), metadata={op_name="jit(f)/top"}
   %ar-done = bf16[1024]{0} all-reduce-done(%ar-start), metadata={op_name="jit(f)/top"}
-  %rs = f32[32]{0} reduce-scatter(%z), metadata={op_name="jit(f)/microbatches_scan/while/layers_scan/while/x"}
+  %rs = f32[32]{0} reduce-scatter(%z),\
+    metadata={op_name="jit(f)/microbatches_scan/while/layers_scan/while/x"}
 }
 """
 

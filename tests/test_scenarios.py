@@ -1,0 +1,262 @@
+"""Perturbation-scenario model: profile semantics, engine bit-identity, and
+the feedback estimator.
+
+The load-bearing suite is the round-trip: under every scenario family
+(constant / variable / bursty / correlated / trace) both simulation engines
+must emit **identical chunk sequences, placements, and times** for the
+non-feedback techniques — the new scenario axis must not cost the analytic
+engine its exactness contract (DESIGN.md Sec. 3).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.fastsim import simulate_fast, simulate_sweep
+from repro.core.simulator import SimConfig, mandelbrot_costs, simulate
+from repro.core.techniques import DLSParams
+from repro.select.scenarios import (
+    PerturbationScenario,
+    ScenarioEstimator,
+    SpeedProfile,
+    mixed_suite,
+)
+
+N, P = 2048, 16
+
+
+@pytest.fixture(scope="module")
+def costs():
+    return mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+
+
+@pytest.fixture(scope="module")
+def horizon(costs):
+    return float(costs.sum()) / P
+
+
+# ---------------------------------------------------------------------------
+# Profile semantics
+# ---------------------------------------------------------------------------
+
+
+def test_profile_window_lookup():
+    prof = SpeedProfile.windows([(1.0, 2.0), (3.0, 4.0)], factor=0.25)
+    assert prof.at(0.0) == 1.0
+    assert prof.at(1.0) == 0.25  # window start inclusive
+    assert prof.at(1.999) == 0.25
+    assert prof.at(2.0) == 1.0
+    assert prof.at(3.5) == 0.25
+    assert prof.at(100.0) == 1.0
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError):
+        SpeedProfile([1.0, 0.5])  # breakpoint count mismatch
+    with pytest.raises(ValueError):
+        SpeedProfile([1.0, -0.5], [1.0])  # non-positive speed
+    with pytest.raises(ValueError):
+        SpeedProfile.windows([(2.0, 1.0)], 0.5)  # empty window
+    with pytest.raises(ValueError):
+        SpeedProfile.windows([(1.0, 3.0), (2.0, 4.0)], 0.5)  # overlap
+
+
+def test_scalar_and_vector_lookup_identical():
+    scen = PerturbationScenario.correlated(
+        4, pes=[1, 3], windows=[(0.5, 1.5)], factor=0.3
+    )
+    ts = np.array([0.0, 0.4999, 0.5, 1.0, 1.5, 9.9])
+    for pe in range(4):
+        pes = np.full(len(ts), pe)
+        vec = scen.speeds_at(pes, ts)
+        for t, v in zip(ts, vec):
+            assert scen.speed_at(pe, t) == v
+
+
+def test_static_and_base_speeds():
+    scen = PerturbationScenario.variable(8, slow_pes=[6, 7], factor=0.5)
+    assert scen.static
+    np.testing.assert_array_equal(
+        scen.base_speeds(), [1, 1, 1, 1, 1, 1, 0.5, 0.5]
+    )
+    burst = PerturbationScenario.bursty(8, pe=0, windows=[(1.0, 2.0)], factor=0.1)
+    assert not burst.static
+    np.testing.assert_array_equal(burst.base_speeds(), np.ones(8))
+
+
+def test_from_trace_shape_validation():
+    with pytest.raises(ValueError):
+        PerturbationScenario.from_trace([1.0], np.ones((3, 4)))
+    scen = PerturbationScenario.from_trace([1.0], np.array([[1.0, 1.0], [0.5, 1.0]]))
+    assert scen.P == 2
+    assert scen.speed_at(0, 2.0) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Engine round-trip: event == analytic, bit-identical, under every family
+# ---------------------------------------------------------------------------
+
+
+def _assert_identical(a, b, ctx):
+    assert np.array_equal(a.chunk_sizes, b.chunk_sizes), ctx
+    assert np.array_equal(a.chunk_pes, b.chunk_pes), ctx
+    assert a.t_parallel == b.t_parallel, (ctx, a.t_parallel, b.t_parallel)
+    assert np.array_equal(a.pe_finish, b.pe_finish), ctx
+    assert np.array_equal(a.pe_busy, b.pe_busy), ctx
+
+
+@pytest.mark.parametrize("tech", ["ss", "static", "fac", "gss", "tss", "rnd"])
+@pytest.mark.parametrize("approach", ["cca", "dca"])
+def test_engines_identical_under_mixed_suite(tech, approach, costs, horizon):
+    params = DLSParams(N=N, P=P)
+    for scen in mixed_suite(P, horizon):
+        cfg = SimConfig(
+            technique=tech, params=params, approach=approach, scenario=scen
+        )
+        _assert_identical(
+            simulate(cfg, costs), simulate_fast(cfg, costs), (tech, approach, scen.name)
+        )
+
+
+def test_engines_identical_under_trace_replay(costs, horizon):
+    rng = np.random.default_rng(7)
+    times = np.sort(rng.uniform(0, horizon, 5))
+    speeds = rng.uniform(0.25, 1.0, (6, P))
+    scen = PerturbationScenario.from_trace(times, speeds, delay_calc_s=1e-5)
+    params = DLSParams(N=N, P=P)
+    for tech in ("fac", "gss"):
+        cfg = SimConfig(technique=tech, params=params, approach="dca", scenario=scen)
+        _assert_identical(simulate(cfg, costs), simulate_fast(cfg, costs), tech)
+
+
+def test_static_scenario_equals_legacy_knobs(costs):
+    """A constant scenario must reproduce the (delay_calc_s, pe_speeds) path
+    exactly — the scenario model strictly generalizes the old knobs."""
+    sp = np.ones(P)
+    sp[-4:] = 0.25
+    params = DLSParams(N=N, P=P)
+    for approach in ("cca", "dca"):
+        legacy = SimConfig(
+            technique="fac", params=params, approach=approach,
+            delay_calc_s=1e-5, pe_speeds=sp,
+        )
+        scen = SimConfig(
+            technique="fac", params=params, approach=approach,
+            scenario=PerturbationScenario.constant(P, 1e-5, sp),
+        )
+        for engine in (simulate, simulate_fast):
+            _assert_identical(engine(legacy, costs), engine(scen, costs), approach)
+
+
+def test_scenario_rejects_conflicts_and_wrong_p(costs):
+    params = DLSParams(N=N, P=P)
+    scen = PerturbationScenario.constant(P)
+    cfg = SimConfig(
+        technique="fac", params=params, approach="dca",
+        pe_speeds=np.ones(P), scenario=scen,
+    )
+    with pytest.raises(ValueError):
+        simulate(cfg, costs)
+    with pytest.raises(ValueError):
+        simulate_fast(cfg, costs)
+    bad = SimConfig(
+        technique="fac", params=params, approach="dca",
+        scenario=PerturbationScenario.constant(P + 1),
+    )
+    with pytest.raises(ValueError):
+        simulate(bad, costs)
+
+
+def test_scenario_with_source_and_adaptive(costs):
+    """Scenarios compose with ChunkSource-driven and adaptive simulation."""
+    from repro.core.source import AdaptiveSource, StaticSource
+
+    params = DLSParams(N=N, P=P)
+    scen = PerturbationScenario.variable(P, slow_pes=[0], factor=0.5)
+    cfg = SimConfig(technique="fac", params=params, approach="dca", scenario=scen)
+    via_source = simulate(cfg, costs, source=StaticSource.build("fac", params))
+    direct = simulate(cfg, costs)
+    _assert_identical(direct, via_source, "static source + scenario")
+
+    acfg = SimConfig(
+        technique="awf_c", params=params, approach="adaptive", scenario=scen
+    )
+    res = simulate(acfg, costs, source=AdaptiveSource("awf_c", params))
+    assert res.chunk_sizes.sum() == N
+
+
+def test_sweep_perturbations_matches_per_config(costs, horizon):
+    suite = mixed_suite(P, horizon)
+    params = DLSParams(N=N, P=P)
+    rows = simulate_sweep(
+        params, costs, ["gss", "ss", "af"], approaches=("cca", "dca"),
+        perturbations=suite,
+    )
+    assert len(rows) == 3 * 2 * len(suite)
+    by_name = {s.name: s for s in suite}
+    for row in rows:
+        cfg = SimConfig(
+            technique=row["technique"], params=params, approach=row["approach"],
+            scenario=by_name[row["scenario"]],
+        )
+        ref = simulate(cfg, costs)
+        assert row["engine"] == ("event" if row["technique"] == "af" else "analytic")
+        assert row["t_parallel"] == ref.t_parallel, row
+        assert row["num_chunks"] == ref.num_chunks, row
+        assert row["delay_s"] == by_name[row["scenario"]].delay_calc_s
+
+
+# ---------------------------------------------------------------------------
+# Estimator
+# ---------------------------------------------------------------------------
+
+
+def test_estimator_recovers_speeds_and_delay():
+    est = ScenarioEstimator(4, window=8, overhead_floor_s=1e-6)
+    true_speeds = np.array([1.0, 1.0, 0.5, 0.25])
+    per_iter = 1e-3
+    for _ in range(8):
+        for pe in range(4):
+            est.observe(pe, 10, 10 * per_iter / true_speeds[pe], overhead=5e-5 + 1e-6)
+    assert est.ready
+    scen = est.estimate()
+    np.testing.assert_allclose(scen.base_speeds(), true_speeds, rtol=1e-12)
+    np.testing.assert_allclose(scen.delay_calc_s, 5e-5, rtol=1e-9)
+    np.testing.assert_allclose(est.iter_time_mean(), per_iter, rtol=1e-12)
+
+
+def test_estimator_not_ready_until_every_pe_reports():
+    est = ScenarioEstimator(3)
+    est.observe(0, 4, 1e-3)
+    est.observe(1, 4, 1e-3)
+    assert not est.ready
+    np.testing.assert_array_equal(est.speeds(), np.ones(3))  # unobserved: full speed
+    est.observe(2, 4, 2e-3)
+    assert est.ready
+
+
+def test_estimator_windowing_tracks_drift():
+    est = ScenarioEstimator(2, window=4)
+    for _ in range(8):
+        est.observe(0, 1, 1e-3)
+        est.observe(1, 1, 1e-3)
+    for _ in range(4):  # PE1 degrades 4x; window must forget the fast past
+        est.observe(1, 1, 4e-3)
+    np.testing.assert_allclose(est.speeds(), [1.0, 0.25], rtol=1e-12)
+
+
+def test_estimator_trace_scenario_round_trips():
+    est = ScenarioEstimator(2, window=32)
+    # PE1 slow in the first half of its timeline, fast in the second
+    for i in range(16):
+        est.observe(0, 1, 1e-3, t=float(i))
+        est.observe(1, 1, 4e-3 if i < 8 else 1e-3, t=float(i))
+    scen = est.trace_scenario(n_bins=2)
+    assert not scen.static
+    assert scen.speed_at(1, 0.0) == pytest.approx(0.25)
+    assert scen.speed_at(1, 14.0) == pytest.approx(1.0)
+    assert scen.speed_at(0, 3.0) == pytest.approx(1.0)
+    # replayable through both engines
+    params = DLSParams(N=256, P=2)
+    cc = np.full(256, 1e-3)
+    cfg = SimConfig(technique="fac", params=params, approach="dca", scenario=scen)
+    _assert_identical(simulate(cfg, cc), simulate_fast(cfg, cc), "trace replay")

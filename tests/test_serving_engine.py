@@ -9,7 +9,6 @@ import dataclasses
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_smoke_config
 from repro.launch.specs import model_param_defs

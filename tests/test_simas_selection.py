@@ -1,0 +1,240 @@
+"""SimAS selector: offline ranking, the online SelectingSource, and the
+``technique="auto"`` integrations (executor, hierarchical, serve admission,
+straggler mitigation).
+
+The acceptance suite is the reproduction of SimAS's headline table: across a
+mixed-perturbation scenario suite the online selector's achieved T_loop^par
+is within 5% of the *best* fixed (technique, approach) pair in every
+scenario and beats the *worst* by >= 20% in at least one (it does, by far —
+the committed snapshot is BENCH_simas_selection.json).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.executor import SelfSchedulingExecutor
+from repro.core.hierarchical import HierarchicalExecutor
+from repro.core.simulator import SimConfig, mandelbrot_costs, simulate
+from repro.core.source import ScheduleSpec, make_source, resolve_mode, source_for
+from repro.core.techniques import DLSParams
+from repro.select import (
+    PerturbationScenario,
+    SELECTABLE,
+    SelectingSource,
+    evaluate_selector,
+    mixed_suite,
+    rank_techniques,
+    select_technique,
+)
+
+N, P = 4096, 32
+
+
+@pytest.fixture(scope="module")
+def costs():
+    return mandelbrot_costs(N, conversion_threshold=64, mean_s=0.002)
+
+
+@pytest.fixture(scope="module")
+def suite(costs):
+    return mixed_suite(P, float(costs.sum()) / P)
+
+
+# ---------------------------------------------------------------------------
+# Offline selector
+# ---------------------------------------------------------------------------
+
+
+def test_selectable_is_the_papers_twelve():
+    assert len(SELECTABLE) == 12
+    assert "af" not in SELECTABLE and "awf_b" not in SELECTABLE
+
+
+def test_rank_techniques_full_portfolio(costs):
+    params = DLSParams(N=N, P=P)
+    scen = PerturbationScenario.constant(P, delay_calc_s=1e-4)
+    rows = rank_techniques(params, costs, scen)
+    assert len(rows) == 12 * 2
+    t = [r["t_parallel"] for r in rows]
+    assert t == sorted(t)
+    # every row came from the analytic engine (the affordability claim)
+    assert {r["engine"] for r in rows} == {"analytic"}
+    best = select_technique(params, costs, scen)
+    assert best == rows[0]
+    # at 100us the serialized master collapses: best must be a dca row
+    assert best["approach"] == "dca"
+
+
+def test_selector_pool_rejects_feedback_techniques():
+    with pytest.raises(ValueError):
+        SelectingSource(DLSParams(N=256, P=4), techniques=("gss", "af"))
+
+
+# ---------------------------------------------------------------------------
+# Online SelectingSource mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_selecting_source_exact_coverage(costs):
+    params = DLSParams(N=N, P=P)
+    src = SelectingSource(params, costs=costs)
+    seen = []
+    w = 0
+    while True:
+        c = src.claim(w % P)
+        if c is None:
+            break
+        seen.append((c.lo, c.hi))
+        src.report(c, float(costs[c.lo : c.hi].sum()), overhead=1.2e-6)
+        w += 1
+    assert src.drained()
+    seen.sort()
+    assert seen[0][0] == 0 and seen[-1][1] == N
+    assert all(a[1] == b[0] for a, b in zip(seen, seen[1:]))
+    assert src.claimed == len(seen)
+    assert src.reselections >= 1  # feedback arrived; boundaries passed
+
+
+def test_selecting_source_switches_on_technique_change(costs):
+    """With an up-front scenario the first schedule is already the selected
+    winner; without one, warm-up SS must hand over once feedback arrives."""
+    params = DLSParams(N=N, P=P)
+    scen = PerturbationScenario.constant(P, delay_calc_s=5e-4)
+    informed = SelectingSource(params, costs=costs, scenario=scen)
+    assert informed.technique != "ss"  # 0.5ms per claim makes SS terrible
+    blind = SelectingSource(params, costs=costs)
+    assert blind.technique == "ss"
+
+
+def test_selections_history_records_boundaries(costs):
+    params = DLSParams(N=1024, P=8)
+    src = SelectingSource(params, costs=costs, reselect_every=16)
+    w = 0
+    while (c := src.claim(w % 8)) is not None:
+        src.report(c, 1e-4 * c.size)
+        w += 1
+    assert src.reselections == len(src.selections) >= 1
+    for sel in src.selections:
+        assert 0 < sel["consumed"] < 1024
+        assert sel["technique"] in SELECTABLE
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: selector vs fixed techniques across the mixed suite
+# ---------------------------------------------------------------------------
+
+
+def test_selector_matches_best_and_beats_worst_fixed(costs, suite):
+    params = DLSParams(N=N, P=P)
+    rows = evaluate_selector(params, costs, suite)
+    assert {r["scenario"] for r in rows} == {s.name for s in suite}
+    for r in rows:
+        # within 5% of the best fixed (technique, approach) in EVERY scenario
+        assert r["t_selector"] <= 1.05 * r["t_best_fixed"], r
+    # ...and decisively better than the worst in at least one (>= 20%)
+    assert any(r["t_selector"] <= 0.8 * r["t_worst_fixed"] for r in rows), rows
+    # the online loop actually re-selected somewhere in the suite
+    assert any(r["reselections"] > 0 for r in rows)
+
+
+def test_selector_simulated_end_to_end_is_deterministic(costs, suite):
+    params = DLSParams(N=N, P=P)
+    scen = suite[1]  # calc_delay
+
+    def run():
+        src = SelectingSource(params, costs=costs)
+        cfg = SimConfig(technique="auto", params=params, approach="dca", scenario=scen)
+        return simulate(cfg, costs, source=src)
+
+    a, b = run(), run()
+    assert a.t_parallel == b.t_parallel
+    np.testing.assert_array_equal(a.chunk_sizes, b.chunk_sizes)
+
+
+# ---------------------------------------------------------------------------
+# technique="auto" integrations
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_mode_and_source_for_auto():
+    assert resolve_mode("auto", "auto") == ("select", None)
+    assert resolve_mode("auto", "dca") == ("select", None)
+    with pytest.raises(ValueError):
+        resolve_mode("auto", "bogus")
+    src = source_for("auto", DLSParams(N=128, P=4))
+    assert isinstance(src, SelectingSource)
+    spec = ScheduleSpec("auto", N=128, P=4)
+    assert spec.effective_mode == "select"
+    assert isinstance(make_source(spec), SelectingSource)
+
+
+def test_executor_auto_covers_iteration_space():
+    ex = SelfSchedulingExecutor("auto", DLSParams(N=2000, P=4), mode="auto")
+    assert isinstance(ex.source, SelectingSource)
+    assert ex.mode == "select"
+    ex.run(lambda lo, hi: time.sleep((hi - lo) * 2e-6), n_workers=4)
+    r = ex.executed_ranges()
+    assert r[0][0] == 0 and r[-1][1] == 2000
+    assert (r[1:, 0] == r[:-1, 1]).all()
+
+
+def test_hierarchical_local_auto_covers_iteration_space():
+    hx = HierarchicalExecutor(
+        4000, n_groups=2, workers_per_group=2,
+        global_technique="gss", local_technique="auto",
+    )
+    hx.run(lambda lo, hi: None)
+    r = hx.executed_ranges()
+    assert r[0][0] == 0 and r[-1][1] == 4000
+    assert (r[1:, 0] == r[:-1, 1]).all()
+
+
+def test_straggler_mitigator_exposes_scenario():
+    from repro.runtime.straggler import StragglerMitigator
+
+    sm = StragglerMitigator(n_micro=256, n_groups=4, technique="auto", mode="auto")
+
+    def work(_i):
+        time.sleep(1e-4)
+
+    # thread-emulated heterogeneity is noisy; we only assert the estimator
+    # plumbing (a scenario of the right shape comes back)
+    sm.run(work)
+    scen = sm.estimate_scenario()
+    assert scen.P == 4
+    assert scen.static
+    assert (scen.base_speeds() > 0).all()
+
+
+# ---------------------------------------------------------------------------
+# serve.DLSAdmission: note_service -> re-selection
+# ---------------------------------------------------------------------------
+
+
+def test_admission_auto_reselects_from_note_service():
+    from repro.serve.engine import DLSAdmission
+
+    adm = DLSAdmission(n_requests=600, n_slots=4, technique="auto")
+    assert isinstance(adm.source, SelectingSource)
+    remaining = 600
+    admitted = 0
+    while remaining > 0:
+        n = adm.admit(4, remaining)
+        assert 1 <= n <= 4  # slots are free and requests remain
+        remaining -= n
+        admitted += n
+        adm.note_service(2e-4 * n)
+    assert admitted == 600
+    assert adm.source.estimator.observations > 0
+    assert adm.source.reselections >= 1  # note_service drove re-selection
+
+
+def test_admission_fixed_technique_ignores_note_service():
+    from repro.serve.engine import DLSAdmission
+
+    adm = DLSAdmission(n_requests=64, n_slots=4, technique="gss")
+    n = adm.admit(4, 64)
+    assert n > 0
+    adm.note_service(1e-3)  # StaticSource.report is a no-op: must not raise

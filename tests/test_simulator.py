@@ -14,7 +14,6 @@ import pytest
 
 from repro.core.simulator import (
     SimConfig,
-    constant_costs,
     mandelbrot_costs,
     psia_costs,
     simulate,

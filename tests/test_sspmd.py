@@ -7,7 +7,6 @@ per-device computation over the axis via shard_map on a 1..n-device mesh.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
@@ -17,7 +16,6 @@ from repro.core.jax_compat import shard_map
 from repro.core.schedule import build_schedule_dca
 from repro.core.sspmd import dca_schedule_scan, num_rounds_upper_bound
 from repro.core.techniques import DLSParams
-from repro.core.techniques_jnp import TECH_IDS
 
 
 def _device_mesh():
