@@ -1,14 +1,22 @@
-"""StaticSource claim overhead vs the pre-refactor inlined executor loop.
+"""StaticSource claim overhead vs the pre-refactor inlined executor loop,
+plus the cross-process claim costs (shared-static DCA vs foreman CCA).
 
-The ChunkSource redesign replaced the executor's inlined DCA claim path
-(lock-guarded step fetch-and-add + schedule table lookup) with
+Thread section: the ChunkSource redesign replaced the executor's inlined DCA
+claim path (lock-guarded step fetch-and-add + schedule table lookup) with
 ``StaticSource.claim`` (itertools.count fetch-and-add, no lock).  This bench
 pins that the protocol indirection costs nothing: ns/claim for both paths,
 single-threaded and contended, plus the ratio.
 
+Process section: the paper's actual claim (Sec. 5) — a shared-memory
+fetch-and-add + table read (``SharedStaticSource``, the DCA placement)
+against a coordinator round-trip per chunk (``ForemanSource``, the CCA
+placement), measured from inside real worker processes so startup is
+excluded.  The DCA-vs-CCA gap here is the per-claim cost the slowdown
+experiments amplify.
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/source_overhead.py [--json out.json]
 
-The committed snapshot is BENCH_source_overhead.json.
+The committed snapshot is BENCH_source_overhead.json (bench-gate job).
 """
 
 import argparse
@@ -26,6 +34,8 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 from repro.core.schedule import build_schedule_dca
 from repro.core.source import StaticSource
 from repro.core.techniques import DLSParams
+from repro.dist import SharedStaticSource, process_source_for
+from repro.dist.shm import default_context
 
 
 class _InlinedLoop:
@@ -86,12 +96,69 @@ def bench(n_claims: int = 200_000, n_threads: int = 4, repeats: int = 5) -> dict
     return out
 
 
+def _timed_drain_worker(source, q):
+    """Runs inside a worker process: drain, report (count, claim seconds)."""
+    n = 0
+    t0 = time.perf_counter()
+    while source.claim(0) is not None:
+        n += 1
+    q.put((n, time.perf_counter() - t0))
+
+
+def _process_ns_per_claim(source, n_procs: int, ctx) -> float:
+    """Mean per-claim latency observed by the workers (startup excluded)."""
+    q = ctx.Queue()
+    procs = [
+        ctx.Process(target=_timed_drain_worker, args=(source, q))
+        for _ in range(n_procs)
+    ]
+    for p in procs:
+        p.start()
+    totals = [q.get(timeout=300) for _ in procs]
+    for p in procs:
+        p.join(timeout=60)
+    claims = sum(n for n, _ in totals)
+    elapsed = sum(t for _, t in totals)
+    return elapsed / max(claims, 1) * 1e9
+
+
+def bench_process(n_claims: int = 20_000, n_procs: int = 4, repeats: int = 3) -> dict:
+    """Cross-process rows: shared-static DCA claim vs foreman CCA round-trip.
+
+    SS again (one chunk per iteration == one claim event per iteration), so
+    the numbers are per-claim costs of the two placements, nothing else.
+    """
+    params = DLSParams(N=n_claims, P=n_procs)
+    ctx = default_context()
+    out = {"process_n_claims": n_claims, "process_workers": n_procs}
+    shared, foreman = [], []
+    for _ in range(repeats):
+        src = SharedStaticSource.build("ss", params, ctx=ctx)
+        shared.append(_process_ns_per_claim(src, n_procs, ctx))
+        src.close()
+        src = process_source_for("ss", params, "cca", ctx=ctx)
+        foreman.append(_process_ns_per_claim(src, n_procs, ctx))
+        src.close()
+    out[f"shared_static_ns_per_claim_{n_procs}procs"] = min(shared)
+    out[f"foreman_ns_per_claim_{n_procs}procs"] = min(foreman)
+    # the DCA-vs-CCA claim-cost gap at the process level (expected >> 1).
+    # NOT regression-gated (ci passes --skip for it): a *faster* shared-static
+    # claim raises the ratio, which must never read as a regression
+    out["foreman_over_shared_static"] = min(foreman) / min(shared)
+    return out
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None)
     ap.add_argument("--claims", type=int, default=200_000)
+    ap.add_argument("--process-claims", type=int, default=20_000)
+    ap.add_argument("--skip-process", action="store_true",
+                    help="thread rows only (e.g. on platforms without fork)")
     args = ap.parse_args()
     res = bench(n_claims=args.claims)
+    if not args.skip_process:
+        res.update(bench_process(n_claims=args.process_claims))
     print(json.dumps(res, indent=2))
     if args.json:
         with open(args.json, "w") as f:

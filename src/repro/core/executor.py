@@ -36,7 +36,7 @@ from typing import Callable, List, Optional, Tuple
 import numpy as np
 
 from .source import ChunkSource, resolve_mode, source_for
-from .techniques import DLSParams, get_technique
+from .techniques import DLSParams, auto_technique, get_technique
 
 __all__ = ["SelfSchedulingExecutor", "ChunkRecord"]
 
@@ -63,7 +63,9 @@ class SelfSchedulingExecutor:
         calc_delay_s: float = 0.0,
         source: Optional[ChunkSource] = None,
     ):
-        self.technique = "auto" if technique == "auto" else get_technique(technique)
+        # always a Technique object — selector mode gets the "auto" sentinel,
+        # so callers reading .name / .requires_feedback never see a bare str
+        self.technique = auto_technique() if technique == "auto" else get_technique(technique)
         self.params = params
         self.calc_delay_s = calc_delay_s
         if source is not None:

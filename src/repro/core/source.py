@@ -36,7 +36,10 @@ Four backends cover the paper's design space:
 A fifth backend lives in ``select/simas.py``: ``SelectingSource``
 (``technique="auto"``) wraps a StaticSource behind the SimAS online
 selector, re-picking the technique at chunk boundaries from claim/report
-feedback.
+feedback.  Cross-process analogues live in ``repro.dist``
+(``placement="process"``): ``SharedStaticSource`` claims the same precomputed
+tables through ``multiprocessing.shared_memory``, and ``ForemanSource`` puts
+the CCA master in a real coordinator process (DESIGN.md Sec. 10).
 
 ``ScheduleSpec`` is the declarative config (technique, N, P, mode, min_chunk,
 hierarchy levels); ``make_source``/``source_for`` build backends from it.
@@ -200,6 +203,11 @@ class ScheduleSpec:
     self-schedule the local queue under tech_b (then ``technique``/``P`` are
     ignored for source construction).  ``params`` optionally carries a full
     DLSParams (σ, μ, h, ...); otherwise one is derived from N/P/min_chunk/seed.
+
+    ``placement`` picks the claim substrate: ``"thread"`` (default) builds the
+    in-process backends; ``"process"`` builds their cross-process analogues
+    from repro.dist — shared-memory tables + shared counter for DCA, a
+    foreman coordinator process for CCA/adaptive/select (DESIGN.md Sec. 10).
     """
 
     technique: str
@@ -210,6 +218,13 @@ class ScheduleSpec:
     seed: int = 0
     levels: Tuple[Tuple[str, int], ...] = ()
     params: Optional[DLSParams] = None
+    placement: str = "thread"
+
+    def __post_init__(self):
+        if self.placement not in ("thread", "process"):
+            raise ValueError(
+                f"placement must be 'thread' or 'process', got {self.placement!r}"
+            )
 
     def to_params(self, N: Optional[int] = None, P: Optional[int] = None) -> DLSParams:
         if self.params is not None and N is None and P is None:
@@ -261,7 +276,12 @@ class StaticSource(ChunkSource):
         self._lo = schedule.offsets.tolist()
         self._hi = (schedule.offsets + schedule.sizes).tolist()
         self._num_steps = schedule.num_steps
-        self._watermark = 0  # advisory high-water mark (exact single-threaded)
+        # completed-claim counter: next() on an itertools.count is an atomic
+        # increment, and __reduce__ reads the current value without consuming
+        # it — both single C calls under the GIL, so ``claimed`` is strictly
+        # monotone with no check-then-store race anywhere
+        self._done = itertools.count()
+        self._done_next = self._done.__next__
         self._exhausted = False
 
     @classmethod
@@ -273,17 +293,25 @@ class StaticSource(ChunkSource):
         if step >= self._num_steps:
             self._exhausted = True
             return None
-        self._watermark = step + 1
+        # count the completed claim (atomic increment — the old high-water
+        # store let a claimer that slept between its fetch-and-add and the
+        # store drag ``claimed``/``drained()`` backwards under concurrency;
+        # a pure counter cannot regress)
+        self._done_next()
         # closed form / table lookup — outside any lock
         return Chunk(step, self._lo[step], self._hi[step], worker)
 
     def drained(self) -> bool:
-        return self._exhausted or self._watermark >= self.schedule.num_steps
+        return self._exhausted or self.claimed >= self.schedule.num_steps
 
     @property
     def claimed(self) -> int:
-        """Successful claims so far (exact once drained; advisory before)."""
-        return self.schedule.num_steps if self._exhausted else self._watermark
+        """Completed successful claims so far — strictly monotone (a pure
+        counter), exact once drained, and never ahead of the chunks actually
+        handed out."""
+        if self._exhausted:
+            return self.schedule.num_steps
+        return self._done.__reduce__()[1][0]  # read without consuming
 
     def materialize(self) -> Schedule:
         return self.schedule
@@ -681,7 +709,17 @@ def source_for(
 
 def make_source(spec: ScheduleSpec, **kw) -> ChunkSource:
     """Build a ChunkSource from a declarative spec (hierarchical if
-    ``spec.levels`` names more than one level)."""
+    ``spec.levels`` names more than one level; cross-process if
+    ``spec.placement == "process"``)."""
+    if spec.placement == "process":
+        from repro.dist.sources import process_source_for  # deferred: dist imports core
+
+        if spec.levels:
+            raise NotImplementedError(
+                "hierarchical + placement='process' is not supported yet; "
+                "compose a ForemanSource-backed global level explicitly"
+            )
+        return process_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
     if spec.levels:
         if len(spec.levels) < 2:
             raise ValueError("hierarchy needs >= 2 levels: ((tech, P), ...)")

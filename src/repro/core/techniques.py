@@ -726,6 +726,30 @@ def get_technique(name: str) -> Technique:
     return TECHNIQUES[key]
 
 
+def _auto_rec(i, R, prev, p: DLSParams, fb=None):  # pragma: no cover - sentinel
+    raise RuntimeError(
+        "'auto' is not a chunk formula; the SimAS selector (select/simas.py) "
+        "picks a concrete technique at claim time"
+    )
+
+
+_AUTO_TECHNIQUE = Technique(
+    "auto", "irregular", None, _auto_rec, requires_feedback=True
+)
+
+
+def auto_technique() -> Technique:
+    """Sentinel ``Technique`` for selector mode (``technique="auto"``).
+
+    Executors expose whatever runs as a ``Technique`` object; in selector
+    mode there is no fixed formula, but callers that read ``.name`` /
+    ``.requires_feedback`` still get a uniform answer.  Deliberately *not*
+    in the ``TECHNIQUES`` registry — ``get_technique("auto")`` stays an
+    error, because "auto" is a policy, not a technique.
+    """
+    return _AUTO_TECHNIQUE
+
+
 def closed_form_sizes(name: str, i, params: DLSParams) -> np.ndarray:
     """Vectorized DCA chunk sizes (pre-clamp, float64) for step indices ``i``."""
     tech = get_technique(name)

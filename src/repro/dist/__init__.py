@@ -1,0 +1,28 @@
+"""repro.dist — the ChunkSource protocol across real OS processes.
+
+The paper's setting is distributed memory: PEs that share no address space
+claim chunks through one shared step counter (DCA) or one central master
+(CCA).  This package reproduces both with genuine processes:
+
+  shm        shared-memory primitives (RMA-style fetch-and-add, attach rules)
+  sources    SharedStaticSource (DCA: shared counter + published tables),
+             ForemanSource (CCA: coordinator process serving a claim pipe)
+  executor   DistributedExecutor (process pool, lease table, dead-worker
+             chunk reclamation)
+
+See DESIGN.md Sec. 10.
+"""
+
+from .executor import DistributedExecutor
+from .shm import attach_block, create_block, default_context
+from .sources import ForemanSource, SharedStaticSource, process_source_for
+
+__all__ = [
+    "DistributedExecutor",
+    "ForemanSource",
+    "SharedStaticSource",
+    "process_source_for",
+    "attach_block",
+    "create_block",
+    "default_context",
+]

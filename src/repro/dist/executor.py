@@ -1,0 +1,298 @@
+"""DistributedExecutor: self-scheduling across real OS processes.
+
+The process-pool analogue of ``core.executor.SelfSchedulingExecutor`` with
+the same coverage contract (``records`` / ``executed_ranges()`` tile [0, N)
+exactly), plus the two things threads never needed:
+
+* **Lease table** — one shared-memory slot per worker holding its in-flight
+  chunk ``(state, step, lo, hi)``.  A worker publishes the lease *before*
+  executing and clears it *after* committing the chunk's record, so the
+  parent can always tell how far a dead worker got.
+* **Reclamation** — after the join barrier, any worker that exited abnormally
+  (killed, crashed, or terminated by the watchdog) has its leased chunk
+  re-executed by the parent, and the parent then drains whatever the source
+  still holds.  Same philosophy as ``runtime/failure.py``: treat loss as
+  routine, replay the smallest recoverable unit (there: a step from the last
+  checkpoint; here: one leased chunk), and account for it explicitly
+  (``reclaimed``).  Recovery is at-least-once — a worker killed between
+  finishing ``fn`` and committing its record gets its chunk re-executed —
+  while the records themselves stay exactly-once.
+
+Records live in per-worker shared-memory rings (count header committed last),
+not a queue: a SIGKILL mid-put can wedge a queue's lock forever, while a ring
+just loses at most the uncommitted row — which the lease table recovers.
+
+Workers claim from any cross-process ``ChunkSource`` (shared-static DCA,
+foreman CCA — dist/sources.py); ``calc_delay_s`` injects the paper's
+chunk-calculation slowdown concurrently for DCA sources (the foreman applies
+it inside its own serve loop for CCA).  See DESIGN.md Sec. 10.
+"""
+
+from __future__ import annotations
+
+import logging
+import math
+import os
+import signal
+import time
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.executor import ChunkRecord
+from repro.core.source import ChunkSource
+from repro.core.techniques import DLSParams, auto_technique, get_technique
+
+from .shm import attach_block, create_block, default_context, int64_field
+from .sources import process_source_for
+
+__all__ = ["DistributedExecutor"]
+
+log = logging.getLogger(__name__)
+
+_LEASE_FIELDS = 4  # state, step, lo, hi
+_REC_FIELDS = 5  # step, lo, hi, t_claim_ns, t_done_ns
+
+_LEASE_FREE, _LEASE_HELD = 0, 1
+
+
+def _lease_view(shm, wid: int) -> np.ndarray:
+    return int64_field(shm, 8 * _LEASE_FIELDS * wid, _LEASE_FIELDS)
+
+
+def _ring_views(shm, n_workers: int, capacity: int, wid: int):
+    """(count header, rows) of worker ``wid``'s record ring."""
+    base = 8 * _LEASE_FIELDS * n_workers + 8 * wid * (1 + _REC_FIELDS * capacity)
+    head = int64_field(shm, base, 1)
+    rows = int64_field(shm, base + 8, _REC_FIELDS * capacity).reshape(capacity, _REC_FIELDS)
+    return head, rows
+
+
+def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s):
+    """Worker loop: claim -> lease -> execute -> report -> commit -> release."""
+    shm = attach_block(shm_name)
+    try:
+        lease = _lease_view(shm, wid)
+        head, rows = _ring_views(shm, n_workers, capacity, wid)
+        delay = calc_delay_s if not source.serialized else 0.0
+        while True:
+            t_req = time.perf_counter()
+            chunk = source.claim(wid)
+            if chunk is None:
+                return
+            # publish the lease before touching user code: fields first,
+            # state last (the state store is the commit)
+            lease[1], lease[2], lease[3] = chunk.step, chunk.lo, chunk.hi
+            lease[0] = _LEASE_HELD
+            if delay:
+                time.sleep(delay)  # DCA calculation slowdown, concurrent
+            t_claim = time.perf_counter()
+            fn(chunk.lo, chunk.hi)
+            t_done = time.perf_counter()
+            source.report(chunk, t_done - t_claim, overhead=t_claim - t_req)
+            n = int(head[0])
+            if n >= capacity:  # pragma: no cover - capacity is a strict bound
+                raise RuntimeError(f"record ring overflow (worker {wid})")
+            rows[n] = (chunk.step, chunk.lo, chunk.hi, int(t_claim * 1e9), int(t_done * 1e9))
+            head[0] = n + 1  # commit the record...
+            lease[0] = _LEASE_FREE  # ...then release the lease
+    finally:
+        lease = head = rows = None
+        shm.close()
+
+
+class DistributedExecutor:
+    """Self-schedule ``fn(lo, hi)`` over [0, N) across ``n_workers`` processes.
+
+    ``mode`` follows ``resolve_mode``: effective ``dca`` claims from shared
+    memory (SharedStaticSource), everything else round-trips a foreman
+    process.  ``fn`` must be picklable under the chosen start method (any
+    callable under fork; a module-level callable/partial under spawn).
+    """
+
+    def __init__(
+        self,
+        technique: str,
+        params: DLSParams,
+        mode: str = "dca",
+        calc_delay_s: float = 0.0,
+        source: Optional[ChunkSource] = None,
+        start_method: Optional[str] = None,
+        record_capacity: Optional[int] = None,
+    ):
+        self.technique = auto_technique() if technique == "auto" else get_technique(technique)
+        self.params = params
+        self.calc_delay_s = calc_delay_s
+        self._ctx = default_context(start_method)
+        if source is not None:
+            self.source = source
+            self.mode = "custom"
+            self._owns_source = False
+        else:
+            from repro.core.source import resolve_mode
+
+            self.mode = "select" if technique == "auto" else resolve_mode(technique, mode)[0]
+            self.source = process_source_for(
+                technique, params, mode, calc_delay_s=calc_delay_s, ctx=self._ctx
+            )
+            self._owns_source = True
+        if record_capacity is None:
+            # chunks are >= min_chunk except the final remainder, and in the
+            # worst case every step lands on one worker
+            record_capacity = math.ceil(params.N / max(params.min_chunk, 1)) + 2
+        self._capacity = int(record_capacity)
+        self.records: List[ChunkRecord] = []
+        self.reclaimed: List[Tuple[int, int, int, int]] = []  # (worker, step, lo, hi)
+        self.recoveries = 0
+
+    # -- execution -----------------------------------------------------------
+
+    def run(
+        self,
+        fn: Callable[[int, int], None],
+        n_workers: int,
+        join_timeout: Optional[float] = None,
+    ) -> float:
+        """Execute; returns wall-clock parallel time (the paper's T_loop^par).
+
+        ``join_timeout`` is the watchdog: a worker still alive that long after
+        the loop should have drained is terminated and treated as failed (its
+        lease is reclaimed) instead of hanging the caller.
+        """
+        self.records = []
+        self.reclaimed = []
+        shm = create_block(
+            8 * _LEASE_FIELDS * n_workers
+            + 8 * n_workers * (1 + _REC_FIELDS * self._capacity)
+        )
+        procs = []
+        t0 = time.perf_counter()
+        try:
+            for wid in range(n_workers):
+                p = self._ctx.Process(
+                    target=_worker_main,
+                    args=(
+                        self.source,
+                        fn,
+                        wid,
+                        shm.name,
+                        n_workers,
+                        self._capacity,
+                        self.calc_delay_s,
+                    ),
+                )
+                p.start()
+                procs.append(p)
+            deadline = None if join_timeout is None else time.perf_counter() + join_timeout
+            dead = []
+            for wid, p in enumerate(procs):
+                p.join(None if deadline is None else max(deadline - time.perf_counter(), 0.1))
+                if p.is_alive():
+                    log.warning("worker %d hung past join_timeout; terminating", wid)
+                    p.terminate()
+                    p.join(timeout=5)
+                    if p.is_alive():  # pragma: no cover - SIGTERM ignored
+                        os.kill(p.pid, signal.SIGKILL)
+                        p.join(timeout=5)
+                    dead.append(wid)
+                elif p.exitcode != 0:
+                    log.warning("worker %d died (exitcode %s)", wid, p.exitcode)
+                    dead.append(wid)
+            t_wall = time.perf_counter() - t0
+            self._collect_records(shm, n_workers)
+            self._reclaim(shm, n_workers, dead, fn)
+            return t_wall
+        finally:
+            for p in procs:  # defensive: never leak worker processes
+                if p.is_alive():  # pragma: no cover
+                    p.terminate()
+            shm.close()
+            shm.unlink()
+
+    def close(self):
+        """Release the source (shared memory / foreman) if this executor
+        built it."""
+        if self._owns_source and hasattr(self.source, "close"):
+            self.source.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- recovery ------------------------------------------------------------
+
+    def _collect_records(self, shm, n_workers: int):
+        for wid in range(n_workers):
+            head, rows = _ring_views(shm, n_workers, self._capacity, wid)
+            for step, lo, hi, t_c, t_d in rows[: int(head[0])]:
+                self.records.append(
+                    ChunkRecord(int(step), int(lo), int(hi), wid, t_c / 1e9, t_d / 1e9)
+                )
+
+    def _reclaim(self, shm, n_workers: int, dead: List[int], fn):
+        """Re-execute chunks leased to dead workers, then drain the source.
+
+        The committed-record check makes reclamation exactly-once for chunks
+        whose record landed (death between commit and lease release); a death
+        between ``fn`` and commit re-executes — at-least-once, like replaying
+        a step from the last checkpoint in runtime/failure.py.
+        """
+        for wid in dead:
+            lease = _lease_view(shm, wid)
+            if int(lease[0]) != _LEASE_HELD:
+                continue
+            step, lo, hi = int(lease[1]), int(lease[2]), int(lease[3])
+            committed = any(r.worker == wid and r.step == step for r in self.records)
+            if committed:
+                continue
+            log.warning("reclaiming chunk step=%d [%d,%d) from dead worker %d",
+                        step, lo, hi, wid)
+            t_claim = time.perf_counter()
+            fn(lo, hi)
+            t_done = time.perf_counter()
+            self.records.append(ChunkRecord(step, lo, hi, wid, t_claim, t_done))
+            self.reclaimed.append((wid, step, lo, hi))
+            self.recoveries += 1
+        if dead:
+            # dead workers may leave the source un-drained (e.g. a lone
+            # worker): the parent finishes the loop itself
+            while True:
+                chunk = self.source.claim(0)
+                if chunk is None:
+                    break
+                t_claim = time.perf_counter()
+                fn(chunk.lo, chunk.hi)
+                t_done = time.perf_counter()
+                self.source.report(chunk, t_done - t_claim)
+                self.records.append(
+                    ChunkRecord(chunk.step, chunk.lo, chunk.hi, -1, t_claim, t_done)
+                )
+            # final safety net: a death *between* source.claim() and the lease
+            # publish loses the chunk with no lease to reclaim (the counter
+            # advanced, so nobody will be handed that range again) — repair
+            # any residual coverage gap directly from the records
+            self._repair_gaps(fn)
+
+    def _repair_gaps(self, fn):
+        N = self.params.N
+        cursor = 0
+        for lo, hi in sorted((r.lo, r.hi) for r in self.records) + [(N, N)]:
+            if lo > cursor:
+                log.warning("repairing coverage gap [%d,%d) lost with a dead worker",
+                            cursor, lo)
+                t_claim = time.perf_counter()
+                fn(cursor, lo)
+                t_done = time.perf_counter()
+                self.records.append(ChunkRecord(-1, cursor, lo, -1, t_claim, t_done))
+                self.reclaimed.append((-1, -1, cursor, lo))
+                self.recoveries += 1
+            cursor = max(cursor, hi)
+
+    # -- verification ---------------------------------------------------------
+
+    def executed_ranges(self) -> np.ndarray:
+        """Sorted (lo, hi) pairs; tests assert exact [0, N) coverage."""
+        pairs = sorted((r.lo, r.hi) for r in self.records)
+        return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)

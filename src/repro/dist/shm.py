@@ -1,0 +1,85 @@
+"""Shared-memory primitives for cross-process DCA.
+
+The paper's distributed claim primitive is an RMA fetch-and-add on a shared
+step counter (``MPI_Fetch_and_op`` under a passive-target epoch, see
+arXiv:1901.02773).  On one node the same primitive is a
+``multiprocessing.shared_memory`` int64 bumped under a ``multiprocessing.Lock``
+— the lock guards only the two integer ops (load, store), mirroring the
+exclusive lock window of the RMA op, and everything else (the chunk table
+read, the chunk-size calculation) happens outside it.
+
+This module owns the fiddly parts:
+
+* ``attach_block`` — attach to an existing segment *without* letting the
+  child's ``resource_tracker`` adopt it: CPython registers every attached
+  segment for leak-tracking and unlinks it when the child exits, which would
+  tear the table down under the remaining workers (bpo-38119).  Attachers
+  only ever ``close()``; the creating process is the sole ``unlink()``-er.
+* ``int64_field`` — an int64 numpy view into a byte range of a segment, the
+  only accessor the claim hot path needs.
+
+Layouts themselves (counter + chunk tables, lease slots, record rings) live
+with their owners in ``dist/sources.py`` and ``dist/executor.py``.
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+from multiprocessing import resource_tracker, shared_memory
+
+import numpy as np
+
+__all__ = [
+    "create_block",
+    "attach_block",
+    "int64_field",
+    "default_context",
+]
+
+
+def create_block(n_bytes: int) -> shared_memory.SharedMemory:
+    """Create a zero-initialized shared-memory segment (creator unlinks it).
+
+    Fresh shm pages arrive zero-filled from the OS (POSIX shm_open +
+    ftruncate, and mmap-backed equivalents elsewhere) — layouts whose
+    "empty" encoding is all-zeros (lease state, record counts) rely on
+    that, so no explicit (and memory-doubling) zeroing pass is done here.
+    """
+    return shared_memory.SharedMemory(create=True, size=n_bytes)
+
+
+def attach_block(name: str) -> shared_memory.SharedMemory:
+    """Attach to an existing segment as a non-owning reader/writer.
+
+    CPython < 3.13 registers *attached* segments with the resource tracker
+    exactly like created ones, so a worker exit would unlink a segment other
+    processes still use (bpo-38119) — and with fork the tracker is shared, so
+    an unregister-after-attach would strip the creator's own registration.
+    Suppressing registration for the duration of the attach keeps ownership
+    where it belongs: attachers only ``close()``, the creator ``unlink()``s.
+    """
+    register = resource_tracker.register
+    resource_tracker.register = lambda *a, **k: None  # attach is single-threaded
+    try:
+        return shared_memory.SharedMemory(name=name)
+    finally:
+        resource_tracker.register = register
+
+
+def int64_field(shm: shared_memory.SharedMemory, offset: int, count: int) -> np.ndarray:
+    """An int64 view of ``count`` values starting at byte ``offset``."""
+    return np.frombuffer(shm.buf, dtype=np.int64, offset=offset, count=count)
+
+
+def default_context(start_method: str | None = None):
+    """The multiprocessing context dist components share.
+
+    ``fork`` where the platform offers it (workers inherit the parent's
+    imports — claims start immediately instead of re-paying the jax import),
+    ``spawn`` otherwise.  Everything pickles cleanly, so either works; tests
+    exercise both.
+    """
+    if start_method is None:
+        methods = multiprocessing.get_all_start_methods()
+        start_method = "fork" if "fork" in methods else "spawn"
+    return multiprocessing.get_context(start_method)

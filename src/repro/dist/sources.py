@@ -1,0 +1,415 @@
+"""Cross-process ChunkSource backends: shared-memory DCA vs foreman CCA.
+
+Two placements of the same ``ChunkSource`` protocol over real OS processes:
+
+* ``SharedStaticSource`` — the DCA path.  The precomputed offset/size tables
+  of a ``Schedule`` are published **once** into ``multiprocessing.shared_memory``
+  and the step counter is an atomic fetch-and-add on a shared int64 (a
+  ``multiprocessing.Lock`` guards only the two integer ops, mirroring RMA
+  ``MPI_Fetch_and_op`` — arXiv:1901.02773).  A claim in *any* process is a
+  counter bump plus a table read: no IPC round-trip, no coordinator.
+* ``ForemanSource`` — the CCA baseline, for real.  A coordinator process
+  hosts the recursion (any thread-level backend: ``CriticalSectionSource``,
+  ``AdaptiveSource``, even the SimAS ``SelectingSource``) and serves claims
+  over a ``multiprocessing.connection`` pipe.  Every chunk costs a full
+  request/reply round-trip through the foreman — the centralized bottleneck
+  the paper measures, reproduced at the process level.  ``report`` is a
+  one-way message, so AF/AWF feedback still flows without doubling traffic.
+
+``process_source_for`` is the placement="process" analogue of
+``core.source.source_for``: DCA-capable (effective mode ``dca``) techniques
+get the shared-memory path, everything that needs a live recursion or
+feedback (``cca``, ``dca_sync``, ``adaptive``, ``select``) goes through the
+foreman.  See DESIGN.md Sec. 10.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import tempfile
+import threading
+import uuid
+import warnings
+from multiprocessing.connection import Client, Listener
+from typing import Optional
+
+from repro.core.schedule import Schedule, build_schedule_dca
+from repro.core.source import (
+    Chunk,
+    ChunkSource,
+    ModeDowngradeWarning,
+    resolve_mode,
+    source_for,
+)
+from repro.core.techniques import DLSParams
+
+from .shm import attach_block, create_block, default_context, int64_field
+
+__all__ = ["SharedStaticSource", "ForemanSource", "process_source_for"]
+
+
+# ---------------------------------------------------------------------------
+# SharedStaticSource — DCA over shared memory
+# ---------------------------------------------------------------------------
+
+
+class SharedStaticSource(ChunkSource):
+    """Precomputed DCA schedule in shared memory; claims from any process.
+
+    Segment layout (all int64): ``[counter | lo[0..S) | hi[0..S)]``.  The
+    counter bump is the only synchronized operation; the table read happens
+    outside the lock, exactly like ``StaticSource`` within one process.  The
+    counter never advances past ``num_steps``, so ``claimed`` is exact from
+    every process at every moment (the thread-level watermark problem cannot
+    exist here).
+
+    Pickling carries (segment name, lock, metadata) — pass the source object
+    straight to ``Process(args=...)`` and the child re-attaches; only the
+    creating process may ``unlink``.
+    """
+
+    serialized = False
+
+    def __init__(self, schedule: Schedule, *, ctx=None):
+        ctx = ctx if ctx is not None else default_context()
+        self.technique = schedule.technique
+        self.N = schedule.N
+        self.P = schedule.P
+        self._num_steps = schedule.num_steps
+        self._schedule: Optional[Schedule] = schedule  # owner-only (materialize)
+        self._owner = True
+        self._lock = ctx.Lock()
+        self._shm = create_block(8 * (1 + 2 * self._num_steps))
+        self._map_views()
+        self._lo_view[:] = schedule.offsets
+        self._hi_view[:] = schedule.offsets + schedule.sizes
+
+    @classmethod
+    def build(cls, technique: str, params: DLSParams, *, ctx=None) -> "SharedStaticSource":
+        return cls(build_schedule_dca(technique, params), ctx=ctx)
+
+    def _map_views(self):
+        s = self._num_steps
+        self._ctr = int64_field(self._shm, 0, 1)
+        self._lo_view = int64_field(self._shm, 8, s)
+        self._hi_view = int64_field(self._shm, 8 * (1 + s), s)
+
+    # -- protocol ------------------------------------------------------------
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        with self._lock:  # two integer ops — the MPI_Fetch_and_op window
+            step = int(self._ctr[0])
+            if step >= self._num_steps:
+                return None
+            self._ctr[0] = step + 1
+        # table read — outside any critical section (the DCA property)
+        return Chunk(step, int(self._lo_view[step]), int(self._hi_view[step]), worker)
+
+    def drained(self) -> bool:
+        return int(self._ctr[0]) >= self._num_steps
+
+    @property
+    def claimed(self) -> int:
+        """Successful claims so far — exact across processes (the counter is
+        bounded at num_steps, never merely advisory)."""
+        return int(self._ctr[0])
+
+    @property
+    def num_steps(self) -> int:
+        return self._num_steps
+
+    def materialize(self) -> Schedule:
+        if self._schedule is None:
+            raise ValueError("materialize() is owner-only (attached copy)")
+        return self._schedule
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self):
+        """Drop this process's mapping; the creator also unlinks the segment."""
+        if self._shm is None:
+            return
+        self._ctr = self._lo_view = self._hi_view = None  # release buffer views
+        self._shm.close()
+        if self._owner:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:  # pragma: no cover - already unlinked
+                pass
+        self._shm = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):  # best-effort; tests/executors call close() explicitly
+        try:
+            self.close()
+        except Exception:  # pragma: no cover
+            pass
+
+    # -- pickling (Process args) ----------------------------------------------
+
+    def __getstate__(self):
+        if self._shm is None:
+            raise ValueError("cannot pickle a closed SharedStaticSource")
+        return {
+            "name": self._shm.name,
+            "lock": self._lock,
+            "technique": self.technique,
+            "N": self.N,
+            "P": self.P,
+            "num_steps": self._num_steps,
+        }
+
+    def __setstate__(self, state):
+        self.technique = state["technique"]
+        self.N = state["N"]
+        self.P = state["P"]
+        self._num_steps = state["num_steps"]
+        self._schedule = None
+        self._owner = False
+        self._lock = state["lock"]
+        self._shm = attach_block(state["name"])
+        self._map_views()
+
+
+# ---------------------------------------------------------------------------
+# ForemanSource — CCA over a coordinator process
+# ---------------------------------------------------------------------------
+
+
+def _foreman_serve(address: str, ready, inner_factory, calc_delay_s: float):
+    """Coordinator main: host the inner source, serve claims over the pipe.
+
+    One handler thread per connected worker (the inner sources are already
+    thread-safe — the foreman's serialization is the *inner* source's lock
+    plus the per-claim round-trip, which is the point).  Runs until a
+    ``("shutdown",)`` message arrives; daemonized, so an owner crash cannot
+    strand it.
+    """
+    inner = inner_factory()
+    if calc_delay_s and hasattr(inner, "calc_delay_s"):
+        inner.calc_delay_s = calc_delay_s
+    stop = threading.Event()
+    listener = Listener(address, family="AF_UNIX")
+    ready.set()
+
+    def handle(conn):
+        while not stop.is_set():
+            try:
+                msg = conn.recv()
+            except (EOFError, OSError):
+                break
+            op = msg[0]
+            if op == "claim":
+                c = inner.claim(msg[1])
+                conn.send(None if c is None else (c.step, c.lo, c.hi))
+            elif op == "report":  # one-way: feedback must not cost a round-trip
+                _, step, lo, hi, worker, elapsed, overhead = msg
+                inner.report(Chunk(step, lo, hi, worker), elapsed, overhead)
+            elif op == "stat":
+                conn.send(
+                    {"claimed": getattr(inner, "claimed", 0), "drained": inner.drained()}
+                )
+            elif op == "shutdown":
+                stop.set()
+                conn.send(("bye", getattr(inner, "claimed", 0)))
+                # a close() does not interrupt the main thread's blocking
+                # accept(); the coordinator's state is all in-memory, so the
+                # clean exit IS the immediate exit
+                os._exit(0)
+        try:
+            conn.close()
+        except OSError:  # pragma: no cover
+            pass
+
+    while not stop.is_set():
+        try:
+            conn = listener.accept()
+        except OSError:  # listener closed by the shutdown handler
+            break
+        threading.Thread(target=handle, args=(conn,), daemon=True).start()
+
+
+class ForemanSource(ChunkSource):
+    """Claims served by a coordinator process over a connection round-trip.
+
+    ``inner_factory`` (picklable, zero-arg) builds the chunk source the
+    foreman walks — ``CriticalSectionSource`` for the paper's CCA baseline,
+    ``AdaptiveSource``/``SelectingSource`` for centralized feedback variants.
+    Workers connect lazily (one connection per process, established on first
+    claim after a fork/spawn) and serialize their own requests on a thread
+    lock; the cross-process serialization is the foreman itself.
+
+    ``serialized`` reflects the *inner* source's timing semantics: True for
+    cca/dca_sync (the calculation happens in the foreman's critical path).
+    """
+
+    def __init__(
+        self,
+        inner_factory,
+        *,
+        serialized: bool = True,
+        calc_delay_s: float = 0.0,
+        ctx=None,
+        technique: str = "?",
+    ):
+        ctx = ctx if ctx is not None else default_context()
+        self.serialized = serialized
+        self.technique = technique
+        self._address = os.path.join(
+            tempfile.gettempdir(), f"repro-foreman-{os.getpid()}-{uuid.uuid4().hex[:8]}.sock"
+        )
+        self._owner = True
+        self._conn = None
+        self._conn_pid = None
+        self._lock = threading.Lock()
+        ready = ctx.Event()
+        self._proc = ctx.Process(
+            target=_foreman_serve,
+            args=(self._address, ready, inner_factory, calc_delay_s),
+            daemon=True,
+        )
+        self._proc.start()
+        if not ready.wait(timeout=30):  # pragma: no cover - startup hang
+            self._proc.terminate()
+            raise RuntimeError("foreman process failed to start")
+
+    # -- per-process connection ------------------------------------------------
+
+    def _connection(self):
+        if self._conn is None or self._conn_pid != os.getpid():
+            self._conn = Client(self._address, family="AF_UNIX")
+            self._conn_pid = os.getpid()
+        return self._conn
+
+    def _request(self, msg, reply: bool):
+        with self._lock:
+            conn = self._connection()
+            conn.send(msg)
+            return conn.recv() if reply else None
+
+    # -- protocol ----------------------------------------------------------------
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        r = self._request(("claim", worker), reply=True)  # full round-trip
+        return None if r is None else Chunk(r[0], r[1], r[2], worker)
+
+    def report(self, chunk: Chunk, elapsed: float, overhead: float = 0.0) -> None:
+        self._request(
+            ("report", chunk.step, chunk.lo, chunk.hi, chunk.worker, elapsed, overhead),
+            reply=False,
+        )
+
+    def drained(self) -> bool:
+        return bool(self._request(("stat",), reply=True)["drained"])
+
+    @property
+    def claimed(self) -> int:
+        return int(self._request(("stat",), reply=True)["claimed"])
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self):
+        """Owner: stop the coordinator and remove the socket.  Non-owners just
+        drop their connection."""
+        if self._conn is not None and self._conn_pid == os.getpid():
+            try:
+                self._conn.close()
+            except OSError:  # pragma: no cover
+                pass
+        self._conn = None
+        if not self._owner or self._proc is None:
+            return
+        try:
+            ctl = Client(self._address, family="AF_UNIX")
+            ctl.send(("shutdown",))
+            ctl.recv()
+            ctl.close()
+        except OSError:  # pragma: no cover - foreman already gone
+            pass
+        self._proc.join(timeout=10)
+        if self._proc.is_alive():  # pragma: no cover - hung coordinator
+            self._proc.terminate()
+            self._proc.join(timeout=5)
+        self._proc = None
+        try:
+            os.unlink(self._address)
+        except FileNotFoundError:  # pragma: no cover
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- pickling (Process args) ----------------------------------------------
+
+    def __getstate__(self):
+        return {
+            "address": self._address,
+            "serialized": self.serialized,
+            "technique": self.technique,
+        }
+
+    def __setstate__(self, state):
+        self._address = state["address"]
+        self.serialized = state["serialized"]
+        self.technique = state["technique"]
+        self._owner = False
+        self._proc = None
+        self._conn = None
+        self._conn_pid = None
+        self._lock = threading.Lock()
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+def process_source_for(
+    technique: str,
+    params: DLSParams,
+    mode: str = "auto",
+    calc_delay_s: float = 0.0,
+    ctx=None,
+    warn: bool = True,
+    feedback=None,
+) -> ChunkSource:
+    """placement="process" analogue of ``source_for``.
+
+    Effective mode ``dca`` -> shared-memory tables + shared counter (no
+    coordinator at all); every other effective mode (``cca``, ``dca_sync``,
+    ``adaptive``, ``select``) needs a live recursion or feedback state and is
+    hosted by a foreman process — CCA's centralized chunk server, for real.
+    """
+    if feedback is not None:
+        raise NotImplementedError(
+            "custom feedback objects cannot cross the process boundary; the "
+            "foreman builds its own (placement='thread' honors feedback=)"
+        )
+    if technique == "auto":
+        effective, message = "select", None
+    else:
+        effective, message = resolve_mode(technique, mode)
+    if message and warn:
+        warnings.warn(message, ModeDowngradeWarning, stacklevel=2)
+    if effective == "dca":
+        # DCA calc delay is concurrent (per-claimer), applied by the executor
+        return SharedStaticSource.build(technique, params, ctx=ctx)
+    inner_factory = functools.partial(
+        source_for, technique, params, mode, calc_delay_s=calc_delay_s, warn=False
+    )
+    return ForemanSource(
+        inner_factory,
+        serialized=effective in ("cca", "dca_sync"),
+        calc_delay_s=calc_delay_s,
+        ctx=ctx,
+        technique=technique,
+    )

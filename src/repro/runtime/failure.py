@@ -95,5 +95,9 @@ class FaultTolerantRunner:
                 time.sleep(0.01 * retries)  # backoff (placeholder for real re-slice)
                 self.store.wait()
                 step, state = self._restore()
+                # rewind the metric history with the state: replayed steps
+                # re-append their rows, so anything at/after the restored step
+                # would otherwise appear twice (with different values)
+                metrics_hist[:] = [m for m in metrics_hist if m["step"] < step]
         self.store.wait()
         return state, metrics_hist

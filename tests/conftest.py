@@ -1,0 +1,28 @@
+"""Shared fixtures.  The ``dist`` marker (pytest.ini) gets a hard SIGALRM
+deadline so a wedged coordinator/worker process fails the test fast instead
+of eating the CI job budget (pytest-timeout, where installed, sits above
+this as the per-test ceiling for everything else)."""
+
+import signal
+
+import pytest
+
+_DIST_DEADLINE_S = 120
+
+
+@pytest.fixture(autouse=True)
+def _dist_hard_deadline(request):
+    if request.node.get_closest_marker("dist") is None or not hasattr(
+        signal, "SIGALRM"
+    ):
+        yield
+        return
+
+    def boom(signum, frame):
+        raise TimeoutError("cross-process test exceeded its hard deadline")
+
+    old = signal.signal(signal.SIGALRM, boom)
+    signal.alarm(_DIST_DEADLINE_S)
+    yield
+    signal.alarm(0)
+    signal.signal(signal.SIGALRM, old)

@@ -472,3 +472,118 @@ def test_sspmd_spec_adapter_rejects_adaptive():
 
     with pytest.raises(ValueError, match="adaptive"):
         dca_schedule_for_spec(ScheduleSpec("af", N=100, P=4), "x")
+
+
+# ---------------------------------------------------------------------------
+# Watermark monotonicity (claim-accounting bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_static_watermark_monotone_under_concurrency():
+    """A slow thread must never drag claimed/drained backwards: after a
+    thread's k-th successful claim, ``claimed`` is at least k, and the values
+    it observes never decrease.  (The old unconditional ``_watermark = step+1``
+    write let a preempted thread rewind the watermark below already-claimed
+    steps.)"""
+    params = DLSParams(N=40_000, P=8)
+    src = StaticSource.build("ss", params)
+    violations = []
+
+    def worker():
+        mine = 0
+        best_seen = 0
+        while True:
+            c = src.claim(0)
+            if c is None:
+                break
+            mine += 1
+            seen = src.claimed
+            if seen < mine or seen < best_seen:
+                violations.append((mine, best_seen, seen))
+            best_seen = max(best_seen, seen)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not violations, f"claimed regressed: {violations[:5]}"
+    assert src.drained()
+    assert src.claimed == src.schedule.num_steps
+
+
+def test_static_watermark_slow_claimer_cannot_rewind():
+    """Deterministic pin of the bug: pause one claimer between its
+    fetch-and-add and its watermark write (exactly where the OS could preempt
+    it), let 100 other claims race ahead, then resume it — ``claimed`` must
+    not drop below the raced-ahead value when the slow claim completes."""
+    src = StaticSource.build("ss", DLSParams(N=1000, P=4))
+    in_gap = threading.Event()
+    release = threading.Event()
+    orig_next = src._next
+
+    def paused_next():
+        step = orig_next()
+        if step == 0:  # the slow thread: stall inside the claim's gap
+            in_gap.set()
+            assert release.wait(timeout=10)
+        return step
+
+    src._next = paused_next
+    slow = threading.Thread(target=lambda: src.claim(0))
+    slow.start()
+    assert in_gap.wait(timeout=10)
+    for _ in range(100):  # fast claimers advance the watermark far past 1
+        assert src.claim(1) is not None
+    high = src.claimed
+    assert high >= 100
+    release.set()
+    slow.join(timeout=10)
+    assert src.claimed >= high, "slow claimer rewound claimed/watermark"
+    assert not src.drained()
+
+
+def test_static_watermark_exact_after_sequential_drain():
+    src = StaticSource.build("gss", DLSParams(N=1000, P=4))
+    n = 0
+    while src.claim(0) is not None:
+        n += 1
+        assert src.claimed == n
+    assert src.claimed == src.schedule.num_steps == n
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical concurrent drain with an adaptive local source
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_concurrent_adaptive_local_exact_tiling_no_leak():
+    """Concurrent drain across groups with AWF-B locals: chunks tile [0, N)
+    exactly, and once every issued chunk has been reported the feedback
+    routing table is empty (no per-chunk entry leak)."""
+    N = 4000
+    spec = ScheduleSpec(technique="gss", N=N, P=8, levels=(("gss", 4), ("awf_b", 2)))
+    src = make_source(spec)
+    assert isinstance(src, HierarchicalSource)
+    lock = threading.Lock()
+    got = []
+
+    def worker(wid):
+        while True:
+            c = src.claim(wid)
+            if c is None:
+                break
+            src.report(c, 1e-5 * c.size, overhead=1e-7)
+            with lock:
+                got.append((c.lo, c.hi))
+
+    threads = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    got.sort()
+    assert got[0][0] == 0 and got[-1][1] == N
+    assert all(a[1] == b[0] for a, b in zip(got, got[1:])), "gap/overlap"
+    assert src.drained()
+    assert src._issued == {}, "reported chunks must not pin feedback entries"

@@ -1,0 +1,253 @@
+"""DistributedExecutor: the paper's coverage contract across real OS processes.
+
+The acceptance matrix: exact [0, N) tiling for 4+ techniques under both the
+shared-static DCA placement and the foreman CCA placement with 4 worker
+processes, plus dead-worker lease reclamation (SIGKILL mid-loop) and the
+hung-worker watchdog.  Work functions write to a shared hit array so the
+tests verify *execution* coverage, not just claim accounting.
+"""
+
+import functools
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.techniques import DLSParams
+from repro.dist import DistributedExecutor, ForemanSource, SharedStaticSource
+from repro.dist.shm import attach_block, create_block, int64_field
+
+pytestmark = pytest.mark.dist  # SIGALRM hard deadline via tests/conftest.py
+
+
+@pytest.fixture()
+def hits_block():
+    """A shared int64 hit-count array sized by the test via .resize(N)."""
+
+    class _Block:
+        def __init__(self):
+            self.shm = None
+            self.n = 0
+
+        def alloc(self, n):
+            self.n = n
+            self.shm = create_block(8 * n)
+            return self
+
+        @property
+        def counts(self):
+            return int64_field(self.shm, 0, self.n)
+
+        @property
+        def name(self):
+            return self.shm.name
+
+    b = _Block()
+    yield b
+    if b.shm is not None:
+        b.shm.close()
+        b.shm.unlink()
+
+
+# -- module-level work functions (picklable under spawn too) -----------------
+
+
+def _hit(name, n, lo, hi):
+    shm = attach_block(name)
+    v = int64_field(shm, 0, n)
+    v[lo:hi] += 1  # ranges are disjoint per run: no cross-process race
+    del v
+    shm.close()
+
+
+def _kill_once(name, n, flag, kill_at, lo, hi):
+    """SIGKILL this worker mid-loop, once: lease published, record not yet
+    committed, fn not yet run — the chunk must be reclaimed by the parent."""
+    if lo <= kill_at < hi and not os.path.exists(flag):
+        open(flag, "w").close()
+        os.kill(os.getpid(), signal.SIGKILL)
+    _hit(name, n, lo, hi)
+
+
+def _hang_once(name, n, flag, hang_at, lo, hi):
+    """Hang (once) before executing, so the lease stays held until the
+    watchdog terminates the worker; the parent's re-execution sees the flag
+    and completes the range."""
+    if lo <= hang_at < hi and not os.path.exists(flag):
+        open(flag, "w").close()
+        time.sleep(300)  # far past the watchdog
+    _hit(name, n, lo, hi)
+
+
+def _assert_exact_coverage(ex, N):
+    rng = ex.executed_ranges()
+    assert rng.shape[0] > 0
+    assert rng[0, 0] == 0 and rng[-1, 1] == N
+    assert (rng[1:, 0] == rng[:-1, 1]).all(), "gap/overlap in executed ranges"
+
+
+# ---------------------------------------------------------------------------
+# Coverage matrix: 4 techniques x {shared-static DCA, foreman CCA} x 4 procs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+@pytest.mark.parametrize("tech", ["ss", "gss", "fac", "tss"])
+def test_exact_coverage_four_processes(tech, mode, hits_block):
+    N, W = 1200, 4
+    hits_block.alloc(N)
+    with DistributedExecutor(tech, DLSParams(N=N, P=W), mode=mode) as ex:
+        if mode == "dca":
+            assert isinstance(ex.source, SharedStaticSource)
+        else:
+            assert isinstance(ex.source, ForemanSource)
+        t = ex.run(functools.partial(_hit, hits_block.name, N), W, join_timeout=90)
+    assert t > 0
+    _assert_exact_coverage(ex, N)
+    counts = np.array(hits_block.counts)
+    assert (counts == 1).all(), f"{tech}/{mode}: min={counts.min()} max={counts.max()}"
+    # no parallelism assertion: with chunky techniques on a small box the
+    # first worker can legitimately drain the whole queue before the last
+    # fork finishes — coverage, not load balance, is the contract here
+
+
+@pytest.mark.parametrize("tech,mode", [("awf_b", "adaptive"), ("af", "dca_sync")])
+def test_feedback_techniques_through_foreman(tech, mode, hits_block):
+    N, W = 800, 4
+    hits_block.alloc(N)
+    with DistributedExecutor(tech, DLSParams(N=N, P=W), mode=mode) as ex:
+        assert isinstance(ex.source, ForemanSource)
+        ex.run(functools.partial(_hit, hits_block.name, N), W, join_timeout=90)
+    _assert_exact_coverage(ex, N)
+    assert (np.array(hits_block.counts) == 1).all()
+
+
+def test_selector_mode_through_foreman(hits_block):
+    """technique="auto": the SimAS SelectingSource runs inside the foreman."""
+    N, W = 600, 4
+    hits_block.alloc(N)
+    with DistributedExecutor("auto", DLSParams(N=N, P=W)) as ex:
+        assert ex.technique.name == "auto"  # sentinel Technique, not a str
+        assert ex.technique.requires_feedback
+        ex.run(functools.partial(_hit, hits_block.name, N), W, join_timeout=90)
+    _assert_exact_coverage(ex, N)
+    assert (np.array(hits_block.counts) == 1).all()
+
+
+def test_executor_technique_is_always_a_technique_object():
+    ex = DistributedExecutor("gss", DLSParams(N=100, P=2))
+    assert ex.technique.name == "gss"
+    ex.close()
+
+
+# ---------------------------------------------------------------------------
+# Failure handling: lease reclamation + watchdog
+# ---------------------------------------------------------------------------
+
+
+def test_killed_worker_chunk_is_reclaimed(tmp_path, hits_block):
+    N, W = 2000, 4
+    hits_block.alloc(N)
+    flag = str(tmp_path / "killed")
+    fn = functools.partial(_kill_once, hits_block.name, N, flag, 700)
+    with DistributedExecutor("fac", DLSParams(N=N, P=W), mode="dca") as ex:
+        ex.run(fn, W, join_timeout=90)
+    assert ex.reclaimed, "the killed worker's leased chunk must be reclaimed"
+    assert ex.recoveries >= 1
+    _assert_exact_coverage(ex, N)
+    counts = np.array(hits_block.counts)
+    assert (counts == 1).all(), "reclaim must re-execute exactly the lost lease"
+
+
+def test_killed_worker_through_foreman(tmp_path, hits_block):
+    """Death under CCA: the foreman survives a dropped worker connection and
+    the parent reclaims the lease + drains the remainder."""
+    N, W = 1000, 4
+    hits_block.alloc(N)
+    flag = str(tmp_path / "killed")
+    fn = functools.partial(_kill_once, hits_block.name, N, flag, 300)
+    with DistributedExecutor("gss", DLSParams(N=N, P=W), mode="cca") as ex:
+        ex.run(fn, W, join_timeout=90)
+    assert ex.reclaimed
+    _assert_exact_coverage(ex, N)
+    assert (np.array(hits_block.counts) == 1).all()
+
+
+def test_hung_worker_hits_watchdog_not_the_job_budget(tmp_path, hits_block):
+    N, W = 400, 4
+    hits_block.alloc(N)
+    flag = str(tmp_path / "hung")
+    fn = functools.partial(_hang_once, hits_block.name, N, flag, 100)
+    t0 = time.perf_counter()
+    with DistributedExecutor("gss", DLSParams(N=N, P=W), mode="dca") as ex:
+        ex.run(fn, W, join_timeout=8)
+    assert time.perf_counter() - t0 < 60, "watchdog must fire well before SIGALRM"
+    assert ex.reclaimed, "the hung worker's lease must be reclaimed"
+    _assert_exact_coverage(ex, N)
+    assert (np.array(hits_block.counts) == 1).all()
+
+
+def test_single_worker_death_drains_remainder(tmp_path, hits_block):
+    """With one worker, death leaves the source half-drained; the parent must
+    finish the loop itself (records tile anyway)."""
+    N = 600
+    hits_block.alloc(N)
+    flag = str(tmp_path / "killed")
+    # fac/P=4 gives a multi-chunk schedule; the lone worker dies on the chunk
+    # containing iteration 100, leaving later chunks unclaimed
+    fn = functools.partial(_kill_once, hits_block.name, N, flag, 100)
+    with DistributedExecutor("fac", DLSParams(N=N, P=4), mode="dca") as ex:
+        ex.run(fn, 1, join_timeout=90)
+    _assert_exact_coverage(ex, N)
+    assert (np.array(hits_block.counts) == 1).all()
+    assert any(r.worker == -1 for r in ex.records), "parent must drain the remainder"
+
+
+class _ClaimThenDie:
+    """Source wrapper that SIGKILLs the claiming process once, right after
+    the inner claim returned: the shared counter has advanced but the worker
+    never published a lease — the nastiest loss window."""
+
+    def __init__(self, inner, kill_step, flag):
+        self.inner = inner
+        self.kill_step = kill_step
+        self.flag = flag
+
+    @property
+    def serialized(self):
+        return self.inner.serialized
+
+    def claim(self, worker=0):
+        c = self.inner.claim(worker)
+        if (
+            c is not None
+            and c.step == self.kill_step
+            and not os.path.exists(self.flag)
+        ):
+            open(self.flag, "w").close()
+            os.kill(os.getpid(), signal.SIGKILL)
+        return c
+
+    def report(self, chunk, elapsed, overhead=0.0):
+        return self.inner.report(chunk, elapsed, overhead)
+
+    def drained(self):
+        return self.inner.drained()
+
+
+def test_death_between_claim_and_lease_is_repaired(tmp_path, hits_block):
+    """A chunk lost with no lease (death before the lease publish) must be
+    recovered by the coverage-gap repair, not silently dropped."""
+    N, W = 1500, 4
+    hits_block.alloc(N)
+    inner = SharedStaticSource.build("fac", DLSParams(N=N, P=W))
+    src = _ClaimThenDie(inner, kill_step=2, flag=str(tmp_path / "died"))
+    ex = DistributedExecutor("fac", DLSParams(N=N, P=W), source=src)
+    ex.run(functools.partial(_hit, hits_block.name, N), W, join_timeout=90)
+    _assert_exact_coverage(ex, N)
+    assert (np.array(hits_block.counts) == 1).all()
+    # the repair is accounted as a recovery with no known step/worker
+    assert any(w == -1 and s == -1 for (w, s, _, _) in ex.reclaimed)
+    inner.close()

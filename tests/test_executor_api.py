@@ -84,3 +84,32 @@ def test_api_af_dca_promotes_with_warning():
         api.Configure_Chunk_Calculation_Mode(info, "dca")
     assert info.mode == "dca"  # the request is recorded...
     assert info.effective_mode == "adaptive"  # ...and what runs is explicit
+
+
+def test_executor_technique_attribute_is_always_a_technique_object():
+    """`.technique` used to be the raw string "auto" in selector mode,
+    breaking any caller that reads `.name`; both constructions now expose a
+    Technique object."""
+    ex = SelfSchedulingExecutor("gss", DLSParams(N=100, P=4), mode="dca")
+    assert ex.technique.name == "gss"
+    assert not ex.technique.requires_feedback
+
+    ex_auto = SelfSchedulingExecutor("auto", DLSParams(N=128, P=4))
+    assert ex_auto.technique.name == "auto"  # sentinel, not the str "auto"
+    assert ex_auto.technique.requires_feedback
+    assert ex_auto.mode == "select"
+    done = np.zeros(128, dtype=np.int64)
+    ex_auto.run(lambda lo, hi: done.__setitem__(slice(lo, hi), done[lo:hi] + 1), 4)
+    assert (done == 1).all()
+
+
+def test_auto_is_not_a_registry_technique():
+    """"auto" is a policy, not a formula: the registry must keep rejecting it
+    (the sentinel exists only for executor attribute normalization)."""
+    from repro.core.techniques import auto_technique, get_technique
+
+    with pytest.raises(KeyError):
+        get_technique("auto")
+    sentinel = auto_technique()
+    with pytest.raises(RuntimeError, match="SimAS"):
+        sentinel.recursive_step(0, 100, 0, DLSParams(N=100, P=4), None)

@@ -1,0 +1,74 @@
+"""FaultTolerantRunner recovery path: replayed steps must not duplicate
+metric rows (the replay-history bugfix), and recovery accounting stays exact.
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.runtime.failure import FaultInjector, FaultTolerantRunner
+
+
+def _make_runner(tmp_path, fail_at, every=4, max_retries=3):
+    store = CheckpointStore(tmp_path / "ckpt", every=every, keep=10, background=False)
+    template = {"w": np.zeros(3, dtype=np.float64)}
+
+    def step_fn(state, batch):
+        new = {"w": state["w"] + batch}
+        return new, {"loss": float(batch), "w0": float(new["w"][0])}
+
+    runner = FaultTolerantRunner(
+        step_fn=step_fn,
+        store=store,
+        state_template=template,
+        make_batch=lambda step: float(step + 1),  # deterministic => replayable
+        max_retries=max_retries,
+        injector=FaultInjector(fail_at=fail_at),
+    )
+    return runner, template
+
+
+def test_replay_does_not_duplicate_metric_rows(tmp_path):
+    """Checkpoints at steps 0 and 4; failure injected at step 6 restores to
+    step 5, so steps 5 runs twice — the history must still hold exactly one
+    row per step, the row from the replay."""
+    runner, template = _make_runner(tmp_path, fail_at=(6,), every=4)
+    state, hist = runner.run(8, dict(template))
+    assert runner.recoveries == 1
+    steps = [m["step"] for m in hist]
+    assert steps == list(range(8)), f"history must be one row per step, got {steps}"
+    # the final state must equal the no-failure run: w = sum(1..8)
+    assert state["w"][0] == pytest.approx(sum(range(1, 9)))
+    # and each surviving row must be the *replayed* (correct) value
+    for m in hist:
+        assert m["w0"] == pytest.approx(sum(range(1, m["step"] + 2)))
+
+
+def test_replay_after_multiple_failures(tmp_path):
+    runner, template = _make_runner(tmp_path, fail_at=(3, 6), every=2)
+    state, hist = runner.run(8, dict(template))
+    assert runner.recoveries == 2
+    assert [m["step"] for m in hist] == list(range(8))
+    assert state["w"][0] == pytest.approx(sum(range(1, 9)))
+
+
+def test_failure_rewinds_past_unsaved_rows(tmp_path):
+    """With only the step-0 checkpoint on disk, a failure at step 2 resumes
+    from step 1: row 1 (already appended) must be dropped and re-appended by
+    the replay, not kept twice."""
+    runner, template = _make_runner(tmp_path, fail_at=(2,), every=100)
+    state, hist = runner.run(5, dict(template))
+    assert runner.recoveries == 1
+    assert [m["step"] for m in hist] == list(range(5))
+    assert state["w"][0] == pytest.approx(sum(range(1, 6)))
+
+
+def test_budget_exhaustion_still_raises(tmp_path):
+    class AlwaysFail:
+        def check(self, step):
+            raise RuntimeError("persistent hardware fault")
+
+    runner, template = _make_runner(tmp_path, fail_at=(), max_retries=2)
+    runner.injector = AlwaysFail()
+    with pytest.raises(RuntimeError, match="persistent"):
+        runner.run(3, dict(template))
