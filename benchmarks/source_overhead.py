@@ -14,6 +14,13 @@ placement), measured from inside real worker processes so startup is
 excluded.  The DCA-vs-CCA gap here is the per-claim cost the slowdown
 experiments amplify.
 
+Injector section: the scenario-injection layer (runtime/inject.py) must not
+tax the claim hot path — ns/claim through an ``InjectedSource`` wrapping a
+StaticSource under a *non-constant* scenario (zero configured delay, so the
+number is pure wrapper overhead) next to the bare source, plus the cost of
+one shared-clock speed sample (``ScenarioInjector.slowdown``, paid once per
+chunk, not per claim).
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/source_overhead.py [--json out.json]
 
 The committed snapshot is BENCH_source_overhead.json (bench-gate job).
@@ -96,6 +103,39 @@ def bench(n_claims: int = 200_000, n_threads: int = 4, repeats: int = 5) -> dict
     return out
 
 
+def bench_injector(n_claims: int = 200_000, repeats: int = 5) -> dict:
+    """Claim latency with vs without a non-constant scenario attached."""
+    from repro.runtime.inject import InjectedSource, ScenarioInjector
+    from repro.select.scenarios import PerturbationScenario
+
+    params = DLSParams(N=n_claims, P=8)
+    schedule = build_schedule_dca("ss", params)
+    scen = PerturbationScenario.bursty(
+        8, pe=1, windows=[(0.1, 0.5)], factor=0.5
+    )  # time-varying, zero delay: the wrapper cost alone
+    bares, injs = [], []
+    with ScenarioInjector(scen) as injector:
+        injector.start()
+        for _ in range(repeats):
+            src = StaticSource(schedule)
+            bares.append(_drain_timed(lambda: src.claim(0), 1))
+            wrapped = InjectedSource(StaticSource(schedule), injector.delay_calc_s)
+            injs.append(_drain_timed(lambda: wrapped.claim(0), 1))
+        # the per-chunk speed sample (shared clock + padded-table lookup)
+        n_samples = 50_000
+        t0 = time.perf_counter()
+        for _ in range(n_samples):
+            injector.slowdown(1)
+        sample_ns = (time.perf_counter() - t0) / n_samples * 1e9
+    out = {
+        "injector_bare_ns_per_claim": min(bares) / n_claims * 1e9,
+        "injector_injected_ns_per_claim": min(injs) / n_claims * 1e9,
+        "injector_overhead_ratio": min(injs) / min(bares),
+        "injector_slowdown_sample_ns": sample_ns,
+    }
+    return out
+
+
 def _timed_drain_worker(source, q):
     """Runs inside a worker process: drain, report (count, claim seconds)."""
     n = 0
@@ -157,6 +197,7 @@ if __name__ == "__main__":
                     help="thread rows only (e.g. on platforms without fork)")
     args = ap.parse_args()
     res = bench(n_claims=args.claims)
+    res.update(bench_injector(n_claims=args.claims))
     if not args.skip_process:
         res.update(bench_process(n_claims=args.process_claims))
     print(json.dumps(res, indent=2))

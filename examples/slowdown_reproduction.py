@@ -3,6 +3,8 @@ injected chunk-calculation delays, on both applications.
 
 Run:  PYTHONPATH=src python examples/slowdown_reproduction.py [--full|--smoke]
       PYTHONPATH=src python examples/slowdown_reproduction.py --processes [--smoke]
+      PYTHONPATH=src python examples/slowdown_reproduction.py --processes \
+          --scenario bursty [--smoke]
 
 --full uses the paper's exact scale (262,144 iterations, 256 ranks); default
 is 4x reduced; --smoke is a fast CI-sized run.  Expect: ~equal at 0/10us;
@@ -18,6 +20,13 @@ calc delay injected per claim), claiming either from shared memory (DCA,
 ``SharedStaticSource``) or from a coordinator process (CCA,
 ``ForemanSource``).  Wall-clock times then show the same story as the
 simulated figures, but measured on real OS processes.
+
+--scenario picks a ``PerturbationScenario`` family beyond the paper's
+constant delay (select/scenarios.py): per-PE speed profiles drive the run —
+through ``SimConfig.scenario`` on the simulator path and through the
+``ScenarioInjector`` (runtime/inject.py) on real threads/processes, where
+profile tables live in shared memory and each chunk's execution is stretched
+by the speed sampled at chunk start on a shared run clock.
 """
 
 import argparse
@@ -30,16 +39,46 @@ from repro.core.techniques import DLSParams, get_technique
 TECHS = ["static", "ss", "fsc", "gss", "tss", "fac", "fiss", "viss", "pls",
          "awf_b", "af"]
 DELAYS = (0.0, 1e-5, 1e-4)
+SCENARIOS = ("constant", "hetero", "bursty", "correlated")
 
 
-def run(app: str, costs, n, p):
-    print(f"\n=== {app} (N={n}, P={p}) — T_loop_par seconds ===")
+def scenario_for(name: str, P: int, horizon_s: float, delay_s: float):
+    """One PerturbationScenario per family, window edges scaled to sit
+    inside a run of roughly ``horizon_s`` seconds."""
+    from repro.select.scenarios import PerturbationScenario
+
+    h = float(horizon_s)
+    quarter = max(P // 4, 1)
+    if name == "constant":
+        return PerturbationScenario.constant(P, delay_calc_s=delay_s)
+    if name == "hetero":
+        return PerturbationScenario.variable(
+            P, slow_pes=range(P - quarter, P), factor=0.25, delay_calc_s=delay_s
+        )
+    if name == "bursty":
+        return PerturbationScenario.bursty(
+            P, pe=1, windows=[(0.25 * h, 0.75 * h)], factor=0.25,
+            delay_calc_s=delay_s,
+        )
+    if name == "correlated":
+        return PerturbationScenario.correlated(
+            P, pes=range(quarter), windows=[(0.1 * h, 0.6 * h)], factor=0.3,
+            delay_calc_s=delay_s,
+        )
+    raise ValueError(f"unknown scenario {name!r} (choose from {SCENARIOS})")
+
+
+def run(app: str, costs, n, p, scenario_name=None):
+    title = f" — scenario={scenario_name}" if scenario_name else ""
+    print(f"\n=== {app} (N={n}, P={p}){title} — T_loop_par seconds ===")
     header = f"{'technique':9s} " + "".join(
         f"{a}/{d}us".rjust(13)
         for a in ("cca", "dca", "adapt")
         for d in (0, 10, 100)
     )
     print(header)
+    # rough horizon for window placement: serial work spread over P PEs
+    horizon = float(costs[:n].sum()) / p * 2.0
     for tech in TECHS:
         adaptive = get_technique(tech).requires_feedback
         row = f"{tech:9s} "
@@ -48,11 +87,18 @@ def run(app: str, costs, n, p):
                 if approach == "adaptive" and not adaptive:
                     row += f"{'-':>13s}"
                     continue
-                res = simulate(
-                    SimConfig(technique=tech, params=DLSParams(N=n, P=p),
-                              approach=approach, delay_calc_s=delay),
-                    costs,
-                )
+                if scenario_name:
+                    cfg = SimConfig(
+                        technique=tech, params=DLSParams(N=n, P=p),
+                        approach=approach,
+                        scenario=scenario_for(scenario_name, p, horizon, delay),
+                    )
+                else:
+                    cfg = SimConfig(
+                        technique=tech, params=DLSParams(N=n, P=p),
+                        approach=approach, delay_calc_s=delay,
+                    )
+                res = simulate(cfg, costs)
                 row += f"{res.t_parallel:13.3f}"
         print(row)
 
@@ -62,18 +108,21 @@ def _sleep_work(iter_cost_s, lo, hi):
     time.sleep(iter_cost_s * (hi - lo))
 
 
-def run_processes(n: int, workers: int, iter_cost_s: float, delays):
+def run_processes(n: int, workers: int, iter_cost_s: float, delays,
+                  scenario_name=None):
     """Real worker processes: shared-static DCA vs foreman CCA wall times."""
     from repro.dist import DistributedExecutor
 
     techs = ["ss", "gss", "fac", "awf_b"]
+    title = f", scenario={scenario_name}" if scenario_name else ""
     print(f"\n=== cross-process (N={n}, {workers} worker processes, "
-          f"{iter_cost_s * 1e6:.0f}us/iter) — wall seconds ===")
+          f"{iter_cost_s * 1e6:.0f}us/iter{title}) — wall seconds ===")
     header = f"{'technique':9s} " + "".join(
         f"{m}/{int(d * 1e6)}us".rjust(13) for m in ("cca", "dca") for d in delays
     )
     print(header)
     fn = functools.partial(_sleep_work, iter_cost_s)
+    horizon = n * iter_cost_s / workers * 2.0
     for tech in techs:
         row = f"{tech:9s} "
         for mode in ("cca", "dca"):
@@ -83,8 +132,13 @@ def run_processes(n: int, workers: int, iter_cost_s: float, delays):
             eff = ("adaptive" if mode == "dca"
                    and get_technique(tech).requires_feedback else mode)
             for delay in delays:
+                kw = (
+                    dict(scenario=scenario_for(scenario_name, workers,
+                                               horizon, delay))
+                    if scenario_name else dict(calc_delay_s=delay)
+                )
                 ex = DistributedExecutor(
-                    tech, DLSParams(N=n, P=workers), mode=eff, calc_delay_s=delay
+                    tech, DLSParams(N=n, P=workers), mode=eff, **kw
                 )
                 t = ex.run(fn, workers, join_timeout=600)
                 ex.close()
@@ -101,14 +155,21 @@ if __name__ == "__main__":
     ap.add_argument("--processes", action="store_true",
                     help="run the slowdown scenarios on real worker processes "
                          "(DistributedExecutor) instead of the simulator")
+    ap.add_argument("--scenario", default=None, choices=SCENARIOS,
+                    help="perturbation family beyond the paper's constant "
+                         "delay (speed profiles injected into real execution "
+                         "under --processes)")
     args = ap.parse_args()
     if args.processes:
         if args.smoke:
-            run_processes(n=2_000, workers=4, iter_cost_s=2e-5, delays=(0.0, 1e-4))
+            run_processes(n=2_000, workers=4, iter_cost_s=2e-5,
+                          delays=(0.0, 1e-4), scenario_name=args.scenario)
         elif args.full:
-            run_processes(n=65_536, workers=16, iter_cost_s=5e-5, delays=(0.0, 1e-5, 1e-4))
+            run_processes(n=65_536, workers=16, iter_cost_s=5e-5,
+                          delays=(0.0, 1e-5, 1e-4), scenario_name=args.scenario)
         else:
-            run_processes(n=8_192, workers=8, iter_cost_s=5e-5, delays=(0.0, 1e-4))
+            run_processes(n=8_192, workers=8, iter_cost_s=5e-5,
+                          delays=(0.0, 1e-4), scenario_name=args.scenario)
         raise SystemExit(0)
     if args.full:
         n, p = 262_144, 256
@@ -121,5 +182,5 @@ if __name__ == "__main__":
         n, p = 65_536, 256
         ps = psia_costs(n, mean_s=0.018)
         mb = mandelbrot_costs(n, conversion_threshold=256, mean_s=0.0025)
-    run("PSIA", ps, n, p)
-    run("Mandelbrot", mb, n, p)
+    run("PSIA", ps, n, p, scenario_name=args.scenario)
+    run("Mandelbrot", mb, n, p, scenario_name=args.scenario)

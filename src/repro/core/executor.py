@@ -19,12 +19,18 @@ logic at all** — it drives whatever ``ChunkSource`` backend the mode selects
   selector picks the technique online and re-picks it at chunk boundaries
   as claim/report feedback accumulates.
 
-``calc_delay_s`` injects the paper's chunk-calculation slowdown: serialized
-inside the lock for CCA-style sources, concurrent on the claiming worker for
-DCA-style sources.
+``scenario=`` (a ``PerturbationScenario``, select/scenarios.py) drives the
+run through ``runtime.inject.ScenarioInjector``: the scenario's calculation
+delay is injected per claim (serialized inside the lock for CCA-style
+sources, concurrent on the claiming worker for DCA-style sources — exactly
+the simulators' split) and its per-PE speed profiles stretch each chunk's
+real execution, sampled at chunk start on a shared run clock.  The legacy
+``calc_delay_s`` scalar is kept as the constant-scenario alias (same
+behaviour as before the injection layer existed).
 
 Used by: data/scheduler.py (document->rank assignment), runtime/straggler.py
-(microbatch claims), examples/slowdown_reproduction.py.
+(microbatch claims), examples/slowdown_reproduction.py, and the cross-engine
+conformance suite (tests/test_conformance.py).
 """
 
 from __future__ import annotations
@@ -39,6 +45,38 @@ from .source import ChunkSource, resolve_mode, source_for
 from .techniques import DLSParams, auto_technique, get_technique
 
 __all__ = ["SelfSchedulingExecutor", "ChunkRecord"]
+
+
+def _resolve_scenario(scenario, calc_delay_s: float, P: int):
+    """Normalize the (scenario, legacy calc_delay_s) pair for an executor.
+
+    Returns ``(scenario, delay_calc_s, injector)``: the legacy scalar
+    becomes a constant scenario (the paper's original perturbation, aliased
+    rather than a second code path); a ``ScenarioInjector`` is built only
+    when the scenario actually perturbs speeds — a uniform static profile
+    *is* the machine's native pace under relative speeds, so stretching
+    would only add overhead.
+    """
+    if scenario is None:
+        if not calc_delay_s:
+            return None, 0.0, None
+        from repro.select.scenarios import PerturbationScenario  # select imports core
+
+        scenario = PerturbationScenario.constant(
+            P, delay_calc_s=calc_delay_s, name="calc_delay"
+        )
+    elif calc_delay_s:
+        raise ValueError("pass either scenario= or the legacy calc_delay_s, not both")
+    if scenario.P != P:
+        raise ValueError(
+            f"scenario has {scenario.P} PE profiles, params.P={P}"
+        )
+    injector = None
+    if not (scenario.static and np.ptp(scenario.base_speeds()) == 0.0):
+        from repro.runtime.inject import ScenarioInjector  # runtime imports core
+
+        injector = ScenarioInjector(scenario)
+    return scenario, float(scenario.delay_calc_s), injector
 
 
 class ChunkRecord:
@@ -62,24 +100,54 @@ class SelfSchedulingExecutor:
         mode: str = "dca",
         calc_delay_s: float = 0.0,
         source: Optional[ChunkSource] = None,
+        scenario=None,
     ):
         # always a Technique object — selector mode gets the "auto" sentinel,
         # so callers reading .name / .requires_feedback never see a bare str
         self.technique = auto_technique() if technique == "auto" else get_technique(technique)
         self.params = params
-        self.calc_delay_s = calc_delay_s
+        self.scenario, self.calc_delay_s, self._injector = _resolve_scenario(
+            scenario, calc_delay_s, params.P
+        )
         if source is not None:
+            if self.calc_delay_s and source.serialized:
+                # the serialized delay belongs inside the source's own
+                # critical section, not on the claiming worker
+                from repro.runtime.inject import inject_source  # runtime imports core
+
+                source = inject_source(source, self.calc_delay_s)
             self.source = source
             self.mode = "custom"
         else:
             self.mode, _ = resolve_mode(technique, mode)
             self.source = source_for(
-                technique, params, mode, calc_delay_s=calc_delay_s
+                technique, params, mode, calc_delay_s=self.calc_delay_s
             )
         self.records: List[ChunkRecord] = []
         self._records_lock = threading.Lock()
 
+    def close(self):
+        """Release the scenario injector's shared block (no-op without one)."""
+        if self._injector is not None:
+            self._injector.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
     # -- chunk claiming ------------------------------------------------------
+
+    def _loop_delay(self) -> float:
+        """The per-claim delay the worker loop owes: zero for serialized
+        sources (they sleep inside their critical section) and for sources
+        that inject their own (``InjectedSource`` — paying it here too would
+        double the delay)."""
+        src = self.source
+        if src.serialized or getattr(src, "injects_delay", False):
+            return 0.0
+        return self.calc_delay_s
 
     def _claim(self, worker: int = 0) -> Optional[Tuple[int, int, int]]:
         """Legacy-shaped claim: (step, lo, hi) or None.  Kept for callers of
@@ -87,8 +155,9 @@ class SelfSchedulingExecutor:
         c = self.source.claim(worker)
         if c is None:
             return None
-        if self.calc_delay_s and not self.source.serialized:
-            time.sleep(self.calc_delay_s)  # injected slowdown (concurrent)
+        delay = self._loop_delay()
+        if delay:
+            time.sleep(delay)  # injected slowdown (concurrent)
         return c.step, c.lo, c.hi
 
     # -- execution -----------------------------------------------------------
@@ -96,10 +165,15 @@ class SelfSchedulingExecutor:
     def run(self, fn: Callable[[int, int], None], n_workers: int) -> float:
         """Execute; returns wall-clock parallel time (the paper's T_loop^par)."""
         t0 = time.perf_counter()
+        injector = self._injector
+        if injector is not None:
+            injector.start()  # stamp the shared run clock before workers start
 
         def worker(wid: int):
             source = self.source
-            delay = self.calc_delay_s if not source.serialized else 0.0
+            delay = self._loop_delay()
+            # per-chunk speed stretching, sampled at chunk start (scenario)
+            run_fn = injector.bind(fn, wid) if injector is not None else fn
             while True:
                 t_req = time.perf_counter()
                 chunk = source.claim(wid)
@@ -108,7 +182,7 @@ class SelfSchedulingExecutor:
                 if delay:
                     time.sleep(delay)  # calculation slowdown, concurrent (DCA)
                 t_claim = time.perf_counter()
-                fn(chunk.lo, chunk.hi)
+                run_fn(chunk.lo, chunk.hi)
                 t_done = time.perf_counter()
                 source.report(chunk, t_done - t_claim, overhead=t_claim - t_req)
                 with self._records_lock:
@@ -130,3 +204,11 @@ class SelfSchedulingExecutor:
         with self._records_lock:
             pairs = sorted((r.lo, r.hi) for r in self.records)
         return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+
+    def chunk_size_sequence(self) -> np.ndarray:
+        """Chunk sizes in scheduling-step order — for non-feedback techniques
+        this sequence is execution-independent and must match the simulators'
+        ``chunk_sizes`` exactly (the conformance suite's shared contract)."""
+        with self._records_lock:
+            pairs = sorted((r.step, r.hi - r.lo) for r in self.records)
+        return np.asarray([s for _, s in pairs], dtype=np.int64)

@@ -146,6 +146,34 @@ class SimResult:
     def cov_finish(self) -> float:
         return float(self.pe_finish.std() / max(self.pe_finish.mean(), 1e-30))
 
+    @classmethod
+    def from_records(cls, records, P: int) -> "SimResult":
+        """The same result shape from a *real* executor's ``ChunkRecord``
+        list (thread or process), so simulator predictions and measured runs
+        compare through one set of metrics (cov_finish, load_imbalance, the
+        chunk-size sequence).  Timestamps are re-based to the earliest claim;
+        parent-side recovery records (worker < 0, dist reclamation) keep
+        their ranges in the sequence but are pinned to PE slot 0."""
+        if not records:
+            raise ValueError("no records to summarize")
+        t0 = min(r.t_claim for r in records)
+        pe_finish = np.zeros(P)
+        pe_busy = np.zeros(P)
+        ordered = sorted(records, key=lambda r: (r.step, r.lo))
+        sizes = np.asarray([r.hi - r.lo for r in ordered], dtype=np.int64)
+        pes = np.asarray([max(r.worker, 0) % P for r in ordered], dtype=np.int64)
+        for r, pe in zip(ordered, pes):
+            pe_finish[pe] = max(pe_finish[pe], r.t_done - t0)
+            pe_busy[pe] += r.t_done - r.t_claim
+        return cls(
+            t_parallel=float(pe_finish.max()),
+            num_chunks=len(ordered),
+            pe_finish=pe_finish,
+            pe_busy=pe_busy,
+            chunk_sizes=sizes,
+            chunk_pes=pes,
+        )
+
 
 class AFFeedback:
     """Per-PE running (mu, sigma) estimates for adaptive factoring (Eq. 11)."""

@@ -208,6 +208,14 @@ class ScheduleSpec:
     in-process backends; ``"process"`` builds their cross-process analogues
     from repro.dist — shared-memory tables + shared counter for DCA, a
     foreman coordinator process for CCA/adaptive/select (DESIGN.md Sec. 10).
+
+    ``scenario`` (a ``PerturbationScenario``, select/scenarios.py) makes the
+    built source scenario-driven: its calculation delay is injected with the
+    simulators' placement semantics — inside the critical section for
+    serialized (CCA-style) backends, concurrently on the claiming worker for
+    DCA-style ones (``runtime.inject``).  Speed-profile stretching of the
+    *workload* is the executors' job (they accept ``scenario=`` directly);
+    a bare source only owns the claim side.
     """
 
     technique: str
@@ -219,6 +227,7 @@ class ScheduleSpec:
     levels: Tuple[Tuple[str, int], ...] = ()
     params: Optional[DLSParams] = None
     placement: str = "thread"
+    scenario: Optional[object] = None
 
     def __post_init__(self):
         if self.placement not in ("thread", "process"):
@@ -710,7 +719,32 @@ def source_for(
 def make_source(spec: ScheduleSpec, **kw) -> ChunkSource:
     """Build a ChunkSource from a declarative spec (hierarchical if
     ``spec.levels`` names more than one level; cross-process if
-    ``spec.placement == "process"``)."""
+    ``spec.placement == "process"``; scenario-driven claim delays if
+    ``spec.scenario`` is set)."""
+    if spec.scenario is not None:
+        if kw.get("calc_delay_s"):
+            raise ValueError("pass the delay through spec.scenario, not calc_delay_s")
+        delay = float(spec.scenario.delay_calc_s)
+        if spec.levels:
+            # one delay per *worker* claim, like the simulators: inject at
+            # the composed outer source — NOT inside the global level's
+            # critical section too, which would charge a second delay on
+            # every group-queue refill
+            src = _make_source_base(spec, **kw)
+        else:
+            # serialized backends take the delay inside their critical
+            # section at construction; DCA-style backends get wrapped below
+            kw["calc_delay_s"] = delay
+            src = _make_source_base(spec, **kw)
+        if not src.serialized and delay:
+            from repro.runtime.inject import InjectedSource  # runtime imports core
+
+            src = InjectedSource(src, delay)
+        return src
+    return _make_source_base(spec, **kw)
+
+
+def _make_source_base(spec: ScheduleSpec, **kw) -> ChunkSource:
     if spec.placement == "process":
         from repro.dist.sources import process_source_for  # deferred: dist imports core
 

@@ -23,9 +23,14 @@ not a queue: a SIGKILL mid-put can wedge a queue's lock forever, while a ring
 just loses at most the uncommitted row — which the lease table recovers.
 
 Workers claim from any cross-process ``ChunkSource`` (shared-static DCA,
-foreman CCA — dist/sources.py); ``calc_delay_s`` injects the paper's
-chunk-calculation slowdown concurrently for DCA sources (the foreman applies
-it inside its own serve loop for CCA).  See DESIGN.md Sec. 10.
+foreman CCA — dist/sources.py); ``scenario=`` (a ``PerturbationScenario``)
+drives the whole run through ``runtime.inject.ScenarioInjector``: the
+scenario's calculation delay is injected concurrently per claim for DCA
+sources (the foreman applies it inside its own serve loop for CCA), and its
+per-PE speed profiles stretch each chunk's real execution — the profile
+tables and the run clock live in shared memory, so spawned workers sample
+them with two array reads and no IPC.  The legacy ``calc_delay_s`` scalar
+remains as the constant-scenario alias.  See DESIGN.md Secs. 10-11.
 """
 
 from __future__ import annotations
@@ -39,7 +44,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.executor import ChunkRecord
+from repro.core.executor import ChunkRecord, _resolve_scenario
 from repro.core.source import ChunkSource
 from repro.core.techniques import DLSParams, auto_technique, get_technique
 
@@ -68,13 +73,26 @@ def _ring_views(shm, n_workers: int, capacity: int, wid: int):
     return head, rows
 
 
-def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s):
+def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
+                 injector=None):
     """Worker loop: claim -> lease -> execute -> report -> commit -> release."""
     shm = attach_block(shm_name)
     try:
+        if injector is not None:
+            # scenario speed profiles: per-chunk stretching, sampled on the
+            # shared run clock (the injector arrived pickled — it re-attached
+            # the profile tables from shared memory in __setstate__)
+            fn = injector.bind(fn, wid)
         lease = _lease_view(shm, wid)
         head, rows = _ring_views(shm, n_workers, capacity, wid)
-        delay = calc_delay_s if not source.serialized else 0.0
+        # serialized sources sleep the delay inside their critical section,
+        # and delay-injecting wrappers (InjectedSource) sleep it in claim():
+        # in both cases the loop owes nothing — sleeping here too would
+        # double the injected delay
+        if source.serialized or getattr(source, "injects_delay", False):
+            delay = 0.0
+        else:
+            delay = calc_delay_s
         while True:
             t_req = time.perf_counter()
             chunk = source.claim(wid)
@@ -119,12 +137,22 @@ class DistributedExecutor:
         source: Optional[ChunkSource] = None,
         start_method: Optional[str] = None,
         record_capacity: Optional[int] = None,
+        scenario=None,
     ):
         self.technique = auto_technique() if technique == "auto" else get_technique(technique)
         self.params = params
-        self.calc_delay_s = calc_delay_s
+        self.scenario, self.calc_delay_s, self._injector = _resolve_scenario(
+            scenario, calc_delay_s, params.P
+        )
         self._ctx = default_context(start_method)
         if source is not None:
+            if self.calc_delay_s and source.serialized:
+                # same rule as the thread executor: a serialized source pays
+                # the scenario delay inside its critical section — configure
+                # it (or fail loudly) instead of silently running undelayed
+                from repro.runtime.inject import inject_source  # runtime imports core
+
+                source = inject_source(source, self.calc_delay_s)
             self.source = source
             self.mode = "custom"
             self._owns_source = False
@@ -133,7 +161,7 @@ class DistributedExecutor:
 
             self.mode = "select" if technique == "auto" else resolve_mode(technique, mode)[0]
             self.source = process_source_for(
-                technique, params, mode, calc_delay_s=calc_delay_s, ctx=self._ctx
+                technique, params, mode, calc_delay_s=self.calc_delay_s, ctx=self._ctx
             )
             self._owns_source = True
         if record_capacity is None:
@@ -166,6 +194,8 @@ class DistributedExecutor:
             + 8 * n_workers * (1 + _REC_FIELDS * self._capacity)
         )
         procs = []
+        if self._injector is not None:
+            self._injector.start()  # stamp the run clock before any spawn
         t0 = time.perf_counter()
         try:
             for wid in range(n_workers):
@@ -179,6 +209,7 @@ class DistributedExecutor:
                         n_workers,
                         self._capacity,
                         self.calc_delay_s,
+                        self._injector,
                     ),
                 )
                 p.start()
@@ -211,9 +242,11 @@ class DistributedExecutor:
 
     def close(self):
         """Release the source (shared memory / foreman) if this executor
-        built it."""
+        built it, plus the scenario injector's shared block."""
         if self._owns_source and hasattr(self.source, "close"):
             self.source.close()
+        if self._injector is not None:
+            self._injector.close()
 
     def __enter__(self):
         return self
@@ -296,3 +329,10 @@ class DistributedExecutor:
         """Sorted (lo, hi) pairs; tests assert exact [0, N) coverage."""
         pairs = sorted((r.lo, r.hi) for r in self.records)
         return np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+
+    def chunk_size_sequence(self) -> np.ndarray:
+        """Chunk sizes in scheduling-step order — the engines' shared
+        sequence contract for non-feedback techniques (gap-repair records
+        carry step -1 and sort first; none exist on a clean run)."""
+        pairs = sorted((r.step, r.hi - r.lo) for r in self.records)
+        return np.asarray([s for _, s in pairs], dtype=np.int64)

@@ -15,8 +15,9 @@ This module owns the fiddly parts:
   segment for leak-tracking and unlinks it when the child exits, which would
   tear the table down under the remaining workers (bpo-38119).  Attachers
   only ever ``close()``; the creating process is the sole ``unlink()``-er.
-* ``int64_field`` — an int64 numpy view into a byte range of a segment, the
-  only accessor the claim hot path needs.
+* ``int64_field`` / ``float64_field`` — typed numpy views into a byte range
+  of a segment: int64 for counters/leases/records (the claim hot path),
+  float64 for the scenario-injection profile tables (runtime/inject.py).
 
 Layouts themselves (counter + chunk tables, lease slots, record rings) live
 with their owners in ``dist/sources.py`` and ``dist/executor.py``.
@@ -33,6 +34,7 @@ __all__ = [
     "create_block",
     "attach_block",
     "int64_field",
+    "float64_field",
     "default_context",
 ]
 
@@ -69,6 +71,11 @@ def attach_block(name: str) -> shared_memory.SharedMemory:
 def int64_field(shm: shared_memory.SharedMemory, offset: int, count: int) -> np.ndarray:
     """An int64 view of ``count`` values starting at byte ``offset``."""
     return np.frombuffer(shm.buf, dtype=np.int64, offset=offset, count=count)
+
+
+def float64_field(shm: shared_memory.SharedMemory, offset: int, count: int) -> np.ndarray:
+    """A float64 view of ``count`` values starting at byte ``offset``."""
+    return np.frombuffer(shm.buf, dtype=np.float64, offset=offset, count=count)
 
 
 def default_context(start_method: str | None = None):

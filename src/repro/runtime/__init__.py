@@ -1,5 +1,7 @@
 from .failure import FaultTolerantRunner, FaultInjector
+from .inject import InjectedSource, ScenarioInjector, inject_source
 from .straggler import StragglerMitigator, dls_microbatch_assignment
 
 __all__ = ["FaultTolerantRunner", "FaultInjector", "StragglerMitigator",
-           "dls_microbatch_assignment"]
+           "dls_microbatch_assignment", "ScenarioInjector", "InjectedSource",
+           "inject_source"]

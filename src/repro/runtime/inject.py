@@ -1,0 +1,302 @@
+"""Scenario injection: PerturbationScenario driving *real* execution.
+
+The simulators accept any ``PerturbationScenario`` (select/scenarios.py)
+through ``SimConfig.scenario``; the real executors historically only knew the
+paper's single scalar ``calc_delay_s``.  ``ScenarioInjector`` closes that
+gap: it publishes a scenario's padded per-PE speed tables plus a shared run
+clock so that worker *threads and processes* sample the same profiles the
+simulators read, and stretches real chunk execution to match.
+
+Semantics, chosen to mirror the simulators exactly (DESIGN.md Sec. 11):
+
+* **Speed profiles -> per-chunk stretching.**  A worker samples its PE's
+  relative speed once, at chunk start, on the shared run clock — the
+  simulators' chunk-granular sampling (``speed_at(pe, done)``) — and holds
+  it for the chunk: the chunk's measured execution time ``e`` is stretched
+  to ``e * s_max / s`` by sleeping the difference after the workload ran.
+  ``s_max`` (the scenario's fastest speed anywhere) anchors the
+  normalization: real hardware cannot run *faster* than unperturbed, so the
+  fastest profile speed maps to the machine's native pace and everything
+  else is a slowdown — relative speeds, which is all the scenarios encode.
+* **Calculation delay -> per-claim delay.**  For DCA-style sources
+  (``serialized == False``) the delay runs on the claiming worker,
+  concurrently across workers (``InjectedSource``); for CCA-style sources
+  it belongs *inside* the critical section, which the sources themselves
+  implement (``CriticalSectionSource.calc_delay_s``; the foreman applies it
+  in its serve loop) — the injector only configures it.
+* **One clock, every placement.**  The profile tables, the scenario's
+  calculation delay, and the run-clock origin live in one
+  ``multiprocessing.shared_memory`` block (dist/shm.py primitives).
+  ``start()`` stamps ``time.monotonic()`` — CLOCK_MONOTONIC, whose epoch is
+  system-wide — into the block; a pickled injector re-attaches by segment
+  name, so spawned ``repro.dist`` workers sample with two array reads and
+  no IPC, exactly like a thread.
+
+Used by: core/executor.py and dist/executor.py (``scenario=``),
+core/source.py (``ScheduleSpec.scenario`` via ``make_source``),
+examples/slowdown_reproduction.py (``--scenario``), and the cross-engine
+conformance suite (tests/test_conformance.py).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+from repro.core.source import Chunk, ChunkSource
+
+__all__ = ["ScenarioInjector", "InjectedSource", "inject_source"]
+
+
+# shared block layout (byte offsets):
+#   int64   [0]        t0_ns   — run-clock origin (time.monotonic_ns), 0 == not started
+#   float64 [8]        delay_calc_s
+#   float64 [16]       s_max   — normalization anchor (fastest table speed)
+#   float64 [24 ..]    times   [P, kmax]      (+inf padded)
+#   float64 [.. end]   speeds  [P, kmax + 1]  (final value repeated)
+_HDR_BYTES = 24
+
+
+class ScenarioInjector:
+    """Publishes one ``PerturbationScenario`` for sampling from any worker.
+
+    The injector is picklable (it travels in ``Process(args=...)`` like the
+    dist sources): the pickle carries the segment name and table shape, and
+    ``__setstate__`` re-attaches.  Only the creating process unlinks the
+    segment (``close()``); attached copies just drop their mapping.
+    """
+
+    def __init__(self, scenario, *, name: Optional[str] = None):
+        from repro.dist.shm import create_block
+
+        times, speeds = scenario.padded_tables()
+        self.scenario_name = name if name is not None else scenario.name
+        self.P = int(times.shape[0])
+        self.kmax = int(times.shape[1])
+        self._owner = True
+        self._shm = create_block(
+            _HDR_BYTES + 8 * (self.P * self.kmax + self.P * (self.kmax + 1))
+        )
+        self._map_views()
+        self._vals[0] = float(scenario.delay_calc_s)
+        self._vals[1] = scenario.max_speed
+        self._times[:] = times
+        self._speeds[:] = speeds
+
+    def _map_views(self):
+        from repro.dist.shm import float64_field, int64_field
+
+        P, kmax = self.P, self.kmax
+        self._t0 = int64_field(self._shm, 0, 1)
+        self._vals = float64_field(self._shm, 8, 2)
+        self._times = float64_field(self._shm, _HDR_BYTES, P * kmax).reshape(P, kmax)
+        self._speeds = float64_field(
+            self._shm, _HDR_BYTES + 8 * P * kmax, P * (kmax + 1)
+        ).reshape(P, kmax + 1)
+
+    def __repr__(self):
+        return (
+            f"ScenarioInjector({self.scenario_name!r}, P={self.P}, "
+            f"delay={self.delay_calc_s * 1e6:.0f}us, "
+            f"{'started' if self.started else 'not started'})"
+        )
+
+    # -- the shared run clock --------------------------------------------------
+
+    def start(self, t0_ns: Optional[int] = None) -> None:
+        """Stamp the run-clock origin (idempotent per run: executors call it
+        at the top of ``run()``, re-stamping on reuse).  Must happen in the
+        parent *before* workers fork/spawn so every worker sees it."""
+        self._t0[0] = int(time.monotonic_ns() if t0_ns is None else t0_ns)
+
+    @property
+    def started(self) -> bool:
+        return int(self._t0[0]) != 0
+
+    def now(self) -> float:
+        """Seconds since ``start()`` on the shared monotonic clock (0.0
+        before the clock is stamped — profiles then read their t=0 window,
+        which is also what the simulators do at their first event)."""
+        t0 = int(self._t0[0])
+        return 0.0 if t0 == 0 else (time.monotonic_ns() - t0) / 1e9
+
+    # -- sampling --------------------------------------------------------------
+
+    @property
+    def delay_calc_s(self) -> float:
+        return float(self._vals[0])
+
+    def speed(self, worker: int, t: Optional[float] = None) -> float:
+        """Relative speed of ``worker``'s PE slot (``worker % P``) at ``t``
+        (default: now) — the same padded-table lookup, hence the same
+        window-start-inclusive boundary semantics, as the simulators'
+        ``speed_at``/``speeds_at``."""
+        pe = worker % self.P
+        tt = self.now() if t is None else t
+        return float(self._speeds[pe, int((self._times[pe] <= tt).sum())])
+
+    def slowdown(self, worker: int) -> float:
+        """Stretch factor >= 1 for a chunk starting now: ``s_max / speed``."""
+        return float(self._vals[1]) / self.speed(worker)
+
+    # -- wrappers --------------------------------------------------------------
+
+    def bind(self, fn: Callable[[int, int], None], worker: int) -> "_StretchedFn":
+        """Per-worker workload wrapper: each ``fn(lo, hi)`` call samples the
+        worker's slowdown at chunk start and stretches the chunk's real
+        execution time by it (picklable when ``fn`` is)."""
+        return _StretchedFn(self, fn, worker)
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self):
+        """Drop this process's mapping; the creator also unlinks."""
+        if self._shm is None:
+            return
+        self._t0 = self._vals = self._times = self._speeds = None
+        self._shm.close()
+        if self._owner:
+            try:
+                self._shm.unlink()
+            except FileNotFoundError:  # pragma: no cover - already unlinked
+                pass
+        self._shm = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):  # best-effort; executors call close() explicitly
+        try:
+            self.close()
+        except Exception:  # pragma: no cover
+            pass
+
+    # -- pickling (Process args) ----------------------------------------------
+
+    def __getstate__(self):
+        if self._shm is None:
+            raise ValueError("cannot pickle a closed ScenarioInjector")
+        return {
+            "name": self._shm.name,
+            "P": self.P,
+            "kmax": self.kmax,
+            "scenario_name": self.scenario_name,
+        }
+
+    def __setstate__(self, state):
+        from repro.dist.shm import attach_block
+
+        self.scenario_name = state["scenario_name"]
+        self.P = state["P"]
+        self.kmax = state["kmax"]
+        self._owner = False
+        self._shm = attach_block(state["name"])
+        self._map_views()
+
+
+class _StretchedFn:
+    """``fn(lo, hi)`` stretched to the scenario's speed, chunk-granularly.
+
+    The slowdown is sampled once at chunk start (the shared run clock) and
+    held: the workload runs at native pace, then the wrapper sleeps the
+    stretch remainder — total elapsed becomes ``measured * s_max / s``,
+    matching the simulators' ``work / speed`` execution model without
+    needing to know the workload's cost model.
+    """
+
+    __slots__ = ("injector", "fn", "worker")
+
+    def __init__(self, injector: ScenarioInjector, fn, worker: int):
+        self.injector = injector
+        self.fn = fn
+        self.worker = worker
+
+    def __getstate__(self):
+        return (self.injector, self.fn, self.worker)
+
+    def __setstate__(self, state):
+        self.injector, self.fn, self.worker = state
+
+    def __call__(self, lo: int, hi: int) -> None:
+        stretch = self.injector.slowdown(self.worker)  # sampled at chunk start
+        t0 = time.perf_counter()
+        self.fn(lo, hi)
+        if stretch > 1.0:
+            time.sleep((time.perf_counter() - t0) * (stretch - 1.0))
+
+
+class InjectedSource(ChunkSource):
+    """A DCA-style source with the scenario's calculation delay applied on
+    the claiming worker — concurrent across workers, like the simulators'
+    requesting-PE delay (the fetch-and-add inside ``inner.claim`` stays the
+    only serialization).  Everything else forwards to ``inner``; picklable
+    when the inner source is (SharedStaticSource travels to dist workers
+    wrapped).
+
+    ``injects_delay`` marks the source as owning its delay: the executors'
+    worker loops check it so a wrapped source passed together with
+    ``scenario=`` pays the delay once, not once in ``claim()`` and once in
+    the loop."""
+
+    def __init__(self, inner: ChunkSource, delay_calc_s: float):
+        if inner.serialized:
+            raise ValueError(
+                "InjectedSource models the concurrent (DCA) delay; serialized "
+                "sources take calc_delay_s inside their critical section"
+            )
+        self.inner = inner
+        self.delay_calc_s = float(delay_calc_s)
+
+    serialized = False
+    injects_delay = True
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        chunk = self.inner.claim(worker)
+        if chunk is not None and self.delay_calc_s:
+            time.sleep(self.delay_calc_s)  # on the claimer, concurrent
+        return chunk
+
+    def report(self, chunk: Chunk, elapsed: float, overhead: float = 0.0) -> None:
+        self.inner.report(chunk, elapsed, overhead)
+
+    def drained(self) -> bool:
+        return self.inner.drained()
+
+    @property
+    def claimed(self) -> int:
+        return getattr(self.inner, "claimed", 0)
+
+    def materialize(self):
+        mat = getattr(self.inner, "materialize", None)
+        if mat is None:
+            raise ValueError(
+                f"{type(self.inner).__name__} chunks depend on execution; "
+                "no static schedule"
+            )
+        return mat()
+
+    def close(self):
+        if hasattr(self.inner, "close"):
+            self.inner.close()
+
+
+def inject_source(source: ChunkSource, delay_calc_s: float) -> ChunkSource:
+    """Apply a scenario's calculation delay to an existing source with the
+    simulator's placement semantics: inside the critical section for
+    serialized (CCA-style) sources, concurrent on the claimer for DCA-style
+    ones.  Returns the source unchanged when there is nothing to inject."""
+    if not delay_calc_s:
+        return source
+    if source.serialized:
+        if hasattr(source, "calc_delay_s"):
+            source.calc_delay_s = float(delay_calc_s)
+            return source
+        raise ValueError(
+            f"{type(source).__name__} is serialized but exposes no "
+            "calc_delay_s; build it with the delay instead (source_for / "
+            "process_source_for accept calc_delay_s)"
+        )
+    return InjectedSource(source, delay_calc_s)

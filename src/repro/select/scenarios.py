@@ -83,15 +83,26 @@ class SpeedProfile:
         base: float = 1.0,
     ) -> "SpeedProfile":
         """Speed ``base`` everywhere except ``factor * base`` inside each
-        (t_start, t_end) window; windows must be disjoint and ascending."""
+        half-open [t_start, t_end) window; windows must be disjoint and
+        ascending.  Adjacent windows (``t_start == previous t_end``) are
+        legal — the windows are half-open, matching ``at()``'s
+        window-start-inclusive sampling — and fuse without emitting the
+        zero-width base segment a naive encoding would create."""
         times: List[float] = []
         speeds: List[float] = [base]
         for t0, t1 in windows:
             if not t0 < t1:
                 raise ValueError(f"empty perturbation window ({t0}, {t1})")
-            if times and t0 <= times[-1]:
+            if times and t0 < times[-1]:
                 raise ValueError("perturbation windows must be disjoint and ascending")
-            times += [float(t0), float(t1)]
+            if times and t0 == times[-1]:
+                # adjacent to the previous window: the base gap is the empty
+                # interval [t0, t0) — drop it so breakpoints stay strictly
+                # increasing (the previous boundary at t0 remains)
+                speeds.pop()
+                times += [float(t1)]
+            else:
+                times += [float(t0), float(t1)]
             speeds += [base * factor, base]
         return cls(speeds, times)
 
@@ -168,6 +179,22 @@ class PerturbationScenario:
         """Vectorized ``speed_at``: speeds of ``pes[k]`` at ``ts[k]``."""
         idx = (self._times[pes] <= np.asarray(ts)[:, None]).sum(axis=1)
         return self._speeds[pes, idx]
+
+    def padded_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Copies of the padded lookup tables: breakpoints [P, kmax]
+        (+inf-padded) and speeds [P, kmax+1] (final value repeated).  This is
+        the representation the vectorized engine reads and the one
+        ``runtime.inject.ScenarioInjector`` publishes into shared memory —
+        sharing it keeps every consumer's boundary semantics (window starts
+        inclusive) identical by construction."""
+        return self._times.copy(), self._speeds.copy()
+
+    @property
+    def max_speed(self) -> float:
+        """Fastest speed any PE ever reaches — the injector's normalization
+        anchor (real hardware cannot run *faster* than unperturbed, so the
+        injector maps this speed to the machine's native pace)."""
+        return float(self._speeds.max())
 
     # -- constructors ---------------------------------------------------------
 
@@ -348,9 +375,13 @@ class ScenarioEstimator:
         m = self._mean_per_iter()
         if np.isnan(m).all():
             return np.ones(self.P)
+        # zero-elapsed chunks (clock-resolution floor) would make the
+        # fastest per-iter time 0 and every other PE's speed 0 — which a
+        # PerturbationScenario rightly rejects; clamp before normalizing
+        m = np.maximum(m, 1e-30)  # NaN (unobserved) propagates through max
         fastest = np.nanmin(m)
         m = np.where(np.isnan(m), fastest, m)
-        return fastest / np.maximum(m, 1e-30)
+        return fastest / m
 
     def delay_estimate(self) -> float:
         """Estimated injected calculation delay: median recent overhead minus
@@ -394,9 +425,10 @@ class ScenarioEstimator:
             np.nan,
         )
         mean_bins = np.where(counts > 0, mean_bins, overall[None, :])
+        mean_bins = np.maximum(mean_bins, 1e-30)  # zero-elapsed floor (see speeds)
         fastest = np.nanmin(mean_bins)
         mean_bins = np.where(np.isnan(mean_bins), fastest, mean_bins)
-        speeds = fastest / np.maximum(mean_bins, 1e-30)
+        speeds = fastest / mean_bins
         return PerturbationScenario.from_trace(
             edges, speeds, self.delay_estimate(), name=name
         )

@@ -1,0 +1,347 @@
+"""Cross-engine conformance: the four execution engines against one contract.
+
+The repo has four ways to execute a (technique, mode, scenario) cell:
+
+* the heapq event simulator        (core/simulator.simulate)
+* the vectorized round simulator   (core/fastsim.simulate_fast)
+* the thread executor              (core/executor.SelfSchedulingExecutor)
+* the process executor             (dist/executor.DistributedExecutor)
+
+They share a contract this suite enforces differentially, per
+``mixed_suite`` perturbation scenario (select/scenarios.py):
+
+1. **coverage** — chunks tile [0, N) exactly (``executed_ranges`` for the
+   executors, chunk-size sum for the simulators);
+2. **exactly-once** — every scheduling step appears in exactly one record;
+3. **chunk-size sequence** — for non-feedback techniques the step-ordered
+   size sequence is execution-independent and identical across all four
+   engines;
+4. **imbalance ordering** — where the simulator predicts a *clear* c.o.v.
+   separation between two techniques, real execution reproduces the
+   ordering (scenario speed profiles drive real threads/processes through
+   the ScenarioInjector);
+5. **DCA <= CCA** — in every slowdown scenario (injected calculation
+   delay > 0), the paper's headline: the distributed calculation approach
+   is not slower than the centralized one.
+
+The full grid is expensive (it spawns real worker processes per cell), so
+it is marked ``conformance`` and skipped unless ``--conformance`` /
+``RUN_CONFORMANCE=1`` (tests/conftest.py); a small unmarked smoke subset
+runs in tier-1.  The fuzz section pins the ``executed_ranges()`` contract
+(sorted, non-overlapping, exactly covering) under random draws — the
+invariant the dist reclamation logic relies on.
+"""
+
+import functools
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.executor import SelfSchedulingExecutor
+from repro.core.fastsim import simulate_fast
+from repro.core.simulator import SimConfig, SimResult, constant_costs, simulate
+from repro.core.techniques import DLSParams
+from repro.select.scenarios import PerturbationScenario, mixed_suite
+
+# one shared cell geometry: small enough for CI, large enough that every
+# technique emits a multi-chunk schedule and every worker participates
+P = 4
+N = 600
+ITER_COST_S = 250e-6
+HORIZON_S = N * ITER_COST_S / P  # approximate unperturbed run length
+TECHNIQUES = ["static", "ss", "fsc", "gss", "tss", "fac"]  # non-feedback
+MODES = ["cca", "dca"]
+
+SCENARIOS = {s.name: s for s in mixed_suite(P, HORIZON_S)}
+SLOWDOWN_SCENARIOS = [name for name, s in SCENARIOS.items() if s.delay_calc_s > 0]
+
+
+def _sleep_work(iter_cost_s, lo, hi):
+    """Module-level (picklable) workload: constant cost per iteration."""
+    time.sleep(iter_cost_s * (hi - lo))
+
+
+WORK = functools.partial(_sleep_work, ITER_COST_S)
+
+
+def _params(n=N, p=P, min_chunk=1):
+    return DLSParams(N=n, P=p, min_chunk=min_chunk)
+
+
+def _sim(engine, tech, mode, scen, n=N, p=P):
+    cfg = SimConfig(
+        technique=tech, params=_params(n, p), approach=mode, scenario=scen
+    )
+    costs = constant_costs(n, ITER_COST_S)
+    return engine(cfg, costs)
+
+
+def _run_thread(tech, mode, scen, n=N, p=P):
+    with SelfSchedulingExecutor(
+        tech, _params(n, p), mode=mode, scenario=scen
+    ) as ex:
+        t = ex.run(WORK, p)
+    return ex, t
+
+
+def _run_process(tech, mode, scen, n=N, p=P):
+    from repro.dist import DistributedExecutor
+
+    with DistributedExecutor(
+        tech, _params(n, p), mode=mode, scenario=scen
+    ) as ex:
+        t = ex.run(WORK, p, join_timeout=90)
+    return ex, t
+
+
+def _assert_exact_coverage(ex, n):
+    rng = ex.executed_ranges()
+    assert rng.shape[0] > 0
+    assert rng[0, 0] == 0 and rng[-1, 1] == n
+    assert (rng[1:, 0] == rng[:-1, 1]).all(), "gap/overlap in executed ranges"
+
+
+def _assert_exactly_once(ex):
+    steps = sorted(r.step for r in ex.records)
+    assert steps == list(range(len(steps))), "steps must be 0..S-1, each once"
+
+
+# ---------------------------------------------------------------------------
+# The full grid: scenario x technique x mode, all four engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.conformance
+@pytest.mark.dist
+@pytest.mark.parametrize("scenario_name", sorted(SCENARIOS))
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("tech", TECHNIQUES)
+def test_four_engines_agree(tech, mode, scenario_name):
+    scen = SCENARIOS[scenario_name]
+    ev = _sim(simulate, tech, mode, scen)
+    fa = _sim(simulate_fast, tech, mode, scen)
+    # simulators: bit-identical to each other, exact coverage by sum
+    assert np.array_equal(ev.chunk_sizes, fa.chunk_sizes)
+    assert ev.t_parallel == fa.t_parallel
+    assert int(ev.chunk_sizes.sum()) == N
+
+    thread_ex, _ = _run_thread(tech, mode, scen)
+    proc_ex, _ = _run_process(tech, mode, scen)
+    for ex in (thread_ex, proc_ex):
+        _assert_exact_coverage(ex, N)
+        _assert_exactly_once(ex)
+        assert len(ex.records) == ev.num_chunks
+        # non-feedback techniques: the chunk-size sequence is execution-
+        # independent — all four engines must emit the same one
+        assert np.array_equal(ex.chunk_size_sequence(), ev.chunk_sizes)
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("scenario_name", sorted(SCENARIOS))
+def test_cov_ranking_matches_simulator(scenario_name):
+    """Where the simulator predicts a clear load-imbalance separation
+    between two techniques, the real (thread) executor reproduces the
+    ordering under the same injected scenario."""
+    scen = SCENARIOS[scenario_name]
+    sim_cov, real_cov = {}, {}
+    for tech in TECHNIQUES:
+        sim_cov[tech] = _sim(simulate_fast, tech, "dca", scen).cov_finish
+        ex, _ = _run_thread(tech, "dca", scen)
+        res = SimResult.from_records(ex.records, P)
+        if (res.pe_finish > 0).all():  # every worker participated
+            real_cov[tech] = res.cov_finish
+    checked = 0
+    for a in real_cov:
+        for b in real_cov:
+            # "clear" prediction: >= 2.5x apart and not both noise-level
+            if sim_cov[a] >= 2.5 * sim_cov[b] + 0.05:
+                assert real_cov[a] > real_cov[b] - 0.02, (
+                    f"{scenario_name}: simulator ranks {a} (cov "
+                    f"{sim_cov[a]:.3f}) above {b} ({sim_cov[b]:.3f}) but real "
+                    f"run measured {real_cov[a]:.3f} vs {real_cov[b]:.3f}"
+                )
+                checked += 1
+    if scenario_name in ("hetero", "bursty"):
+        assert checked > 0, "perturbed scenarios must yield clear pairs"
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("scenario_name", SLOWDOWN_SCENARIOS)
+@pytest.mark.parametrize("tech", ["ss", "fsc"])
+def test_dca_not_slower_than_cca_threads(tech, scenario_name):
+    """The paper's headline, on real threads: under an injected calculation
+    delay the DCA claim path must not lose to the serialized CCA master
+    (fine-chunk techniques — where serialization hurts most)."""
+    scen = SCENARIOS[scenario_name]
+    _, t_cca = _run_thread(tech, "cca", scen)
+    _, t_dca = _run_thread(tech, "dca", scen)
+    assert t_dca <= t_cca * 1.2 + 0.03, (
+        f"{tech}/{scenario_name}: dca {t_dca:.3f}s vs cca {t_cca:.3f}s"
+    )
+
+
+@pytest.mark.conformance
+@pytest.mark.dist
+@pytest.mark.parametrize("scenario_name", SLOWDOWN_SCENARIOS)
+def test_dca_not_slower_than_cca_processes(scenario_name):
+    """Same headline on real worker processes: shared-memory fetch-and-add
+    vs a foreman round-trip per chunk."""
+    scen = SCENARIOS[scenario_name]
+    _, t_cca = _run_process("ss", "cca", scen)
+    _, t_dca = _run_process("ss", "dca", scen)
+    assert t_dca <= t_cca * 1.2 + 0.05, (
+        f"ss/{scenario_name}: dca {t_dca:.3f}s vs cca {t_cca:.3f}s"
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 smoke subset (unmarked): one perturbed cell through all four engines
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("tech", ["ss", "fac"])
+def test_smoke_four_engines_agree_bursty(tech):
+    scen = SCENARIOS["bursty"]
+    ev = _sim(simulate, tech, "dca", scen)
+    fa = _sim(simulate_fast, tech, "dca", scen)
+    assert np.array_equal(ev.chunk_sizes, fa.chunk_sizes)
+    assert ev.t_parallel == fa.t_parallel
+    thread_ex, _ = _run_thread(tech, "dca", scen)
+    proc_ex, _ = _run_process(tech, "dca", scen)
+    for ex in (thread_ex, proc_ex):
+        _assert_exact_coverage(ex, N)
+        _assert_exactly_once(ex)
+        assert np.array_equal(ex.chunk_size_sequence(), ev.chunk_sizes)
+
+
+def test_smoke_dca_beats_cca_under_calc_delay():
+    scen = SCENARIOS["calc_delay"]
+    _, t_cca = _run_thread("ss", "cca", scen)
+    _, t_dca = _run_thread("ss", "dca", scen)
+    # 600 SS steps x 500us serialized inside the CCA lock is ~0.3s of pure
+    # serialization; concurrent DCA pays it P-way parallel
+    assert t_dca < t_cca, f"dca {t_dca:.3f}s must beat cca {t_cca:.3f}s"
+
+
+def test_smoke_injected_slow_pe_claims_less():
+    """A statically slowed PE must end up with fewer iterations under a
+    self-scheduling technique — the injector visibly drives real claims."""
+    scen = PerturbationScenario.variable(P, slow_pes=[2], factor=0.2)
+    with SelfSchedulingExecutor("ss", _params(n=400), mode="dca",
+                                scenario=scen) as ex:
+        ex.run(WORK, P)
+    per_worker = np.zeros(P, dtype=np.int64)
+    for r in ex.records:
+        per_worker[r.worker] += r.hi - r.lo
+    others = [per_worker[w] for w in range(P) if w != 2]
+    assert per_worker[2] < min(others), per_worker.tolist()
+
+
+# ---------------------------------------------------------------------------
+# Delay-placement regressions: the scenario delay is paid exactly once
+# ---------------------------------------------------------------------------
+
+
+def test_injected_source_delay_paid_once():
+    """A make_source(spec.scenario)-built DCA source handed to an executor
+    with the same scenario must pay the claim delay once — the wrapper
+    sleeps it in claim(), so the worker loop must not sleep it again."""
+    from repro.core.source import ScheduleSpec, make_source
+
+    delay, n = 5e-3, 40
+    scen = PerturbationScenario.constant(2, delay_calc_s=delay)
+    src = make_source(ScheduleSpec("ss", N=n, P=2, mode="dca", scenario=scen))
+    with SelfSchedulingExecutor(
+        "ss", DLSParams(N=n, P=2), source=src, scenario=scen
+    ) as ex:
+        t = ex.run(_noop, 1)
+    assert t >= n * delay * 0.9, "the delay must still be injected at all"
+    assert t < n * delay * 1.5, f"{t:.3f}s: delay paid twice (expect ~{n * delay:.2f}s)"
+
+
+def test_hierarchical_scenario_delay_injected_at_outer_level_only():
+    """With a hierarchical spec, the scenario delay is charged per *worker*
+    claim at the composed source — not a second time inside the global
+    level's critical section on every group-queue refill."""
+    from repro.core.source import ScheduleSpec, make_source
+    from repro.runtime.inject import InjectedSource
+
+    scen = PerturbationScenario.constant(8, delay_calc_s=2e-3)
+    src = make_source(
+        ScheduleSpec("fac", N=400, P=8, mode="cca", scenario=scen,
+                     levels=(("fac", 2), ("ss", 4)))
+    )
+    assert isinstance(src, InjectedSource)
+    assert src.delay_calc_s == 2e-3
+    assert getattr(src.inner.global_source, "calc_delay_s", 0.0) == 0.0
+
+
+def test_dist_custom_serialized_source_gets_delay_configured():
+    """The process executor mirrors the thread one: a custom serialized
+    source passed with a delaying scenario has the delay configured inside
+    its critical section instead of silently running undelayed."""
+    from repro.core.source import CriticalSectionSource
+    from repro.dist import DistributedExecutor
+
+    inner = CriticalSectionSource("gss", DLSParams(N=100, P=2))
+    with DistributedExecutor(
+        "gss", DLSParams(N=100, P=2), source=inner, calc_delay_s=1e-4
+    ):
+        assert inner.calc_delay_s == 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Fuzz: the executed_ranges() contract under random draws
+# ---------------------------------------------------------------------------
+
+ALL_TECHS = ["static", "ss", "fsc", "gss", "tss", "fac", "fiss", "viss",
+             "pls", "awf_b", "awf_c", "af"]
+
+
+def _noop(lo, hi):
+    pass
+
+
+def _draw(rng, n_max):
+    return dict(
+        n=rng.randint(1, n_max),
+        p=rng.randint(1, 12),
+        min_chunk=rng.randint(1, 8),
+        tech=rng.choice(ALL_TECHS),
+        workers=rng.randint(1, 8),
+    )
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_fuzz_executed_ranges_thread(seed):
+    d = _draw(random.Random(seed), n_max=5000)
+    with SelfSchedulingExecutor(
+        d["tech"], DLSParams(N=d["n"], P=d["p"], min_chunk=d["min_chunk"]),
+        mode="auto",
+    ) as ex:
+        ex.run(_noop, d["workers"])
+    _assert_exact_coverage(ex, d["n"])
+    _assert_exactly_once(ex)
+    rng = ex.executed_ranges()
+    assert (rng[:, 1] > rng[:, 0]).all(), f"empty chunk in draw {d}"
+
+
+@pytest.mark.dist
+@pytest.mark.parametrize("seed", range(3))
+def test_fuzz_executed_ranges_process(seed):
+    from repro.dist import DistributedExecutor
+
+    d = _draw(random.Random(1000 + seed), n_max=2000)
+    d["workers"] = min(d["workers"], 4)  # keep the spawn cost bounded
+    with DistributedExecutor(
+        d["tech"], DLSParams(N=d["n"], P=d["p"], min_chunk=d["min_chunk"]),
+        mode="auto",
+    ) as ex:
+        ex.run(_noop, d["workers"], join_timeout=90)
+    _assert_exact_coverage(ex, d["n"])
+    _assert_exactly_once(ex)
+    rng = ex.executed_ranges()
+    assert (rng[:, 1] > rng[:, 0]).all(), f"empty chunk in draw {d}"

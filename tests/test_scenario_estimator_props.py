@@ -1,0 +1,195 @@
+"""Property suite for ScenarioEstimator (select/scenarios.py).
+
+The estimator closes the scenario loop: ``report()`` feedback in,
+``PerturbationScenario`` out.  Its contract, pinned here property-style:
+
+* **round-trip** — synthetic report streams generated from known per-PE
+  speeds and a known injected delay are recovered by ``estimate()`` (static
+  speeds + delay) and ``trace_scenario()`` (piecewise replay) within
+  tolerance, for arbitrary speed vectors, chunk sizes, and window widths;
+* **degenerate inputs never crash** — zero reports, a single PE, and
+  ``window=1`` all behave (documented fallbacks: unit speeds, zero delay,
+  ``trace_scenario`` raising on an empty history);
+* **ready() gates correctly** — False until *every* PE has reported, True
+  from then on, regardless of observation order.
+
+The hypothesis-driven parts skip where hypothesis is absent (same policy as
+tests/test_schedule_properties.py); the degenerate/gating cases are plain
+pytest so they always run.
+"""
+
+import numpy as np
+import pytest
+
+from repro.select.scenarios import PerturbationScenario, ScenarioEstimator
+
+try:  # property tests skip without hypothesis; the plain ones always run
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI always installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="hypothesis not installed"
+)
+
+if HAVE_HYPOTHESIS:
+    speeds_strategy = st.lists(
+        st.floats(min_value=0.05, max_value=1.0), min_size=1, max_size=6
+    )
+
+
+def _feed(est, speeds, base_it=1e-3, chunks_per_pe=6, size=8, overhead=0.0):
+    """Deterministic synthetic stream: PE q runs ``size`` iterations at
+    ``base_it / speeds[q]`` seconds each, ``chunks_per_pe`` times."""
+    for _ in range(chunks_per_pe):
+        for q, s in enumerate(speeds):
+            est.observe(q, size, size * base_it / s, overhead=overhead)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip recovery (hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @needs_hypothesis
+    @settings(deadline=None, max_examples=60)
+    @given(
+        speeds=speeds_strategy,
+        size=st.integers(1, 64),
+        window=st.integers(1, 32),
+    )
+    def test_estimate_recovers_relative_speeds(speeds, size, window):
+        speeds = np.asarray(speeds)
+        est = ScenarioEstimator(P=len(speeds), window=window)
+        _feed(est, speeds, size=size)
+        assert est.ready
+        got = est.speeds()
+        want = speeds / speeds.max()  # fastest-PE := 1 normalization
+        np.testing.assert_allclose(got, want, rtol=1e-9)
+        scen = est.estimate()
+        assert isinstance(scen, PerturbationScenario)
+        assert scen.static
+        np.testing.assert_allclose(scen.base_speeds(), want, rtol=1e-9)
+
+    @needs_hypothesis
+    @settings(deadline=None, max_examples=40)
+    @given(
+        speeds=speeds_strategy,
+        delay=st.floats(min_value=0.0, max_value=1e-2),
+        floor=st.floats(min_value=0.0, max_value=1e-3),
+    )
+    def test_delay_estimate_recovers_injected_delay(speeds, delay, floor):
+        est = ScenarioEstimator(P=len(speeds), overhead_floor_s=floor)
+        _feed(est, np.asarray(speeds), overhead=delay + floor)
+        assert est.delay_estimate() == pytest.approx(delay, abs=1e-12)
+        assert est.estimate().delay_calc_s == pytest.approx(delay, abs=1e-12)
+
+    @needs_hypothesis
+    @settings(deadline=None, max_examples=30)
+    @given(
+        speeds=speeds_strategy,
+        n_bins=st.integers(1, 12),
+        chunks=st.integers(2, 12),
+    )
+    def test_trace_scenario_round_trip_constant_speeds(speeds, n_bins, chunks):
+        """With time-constant true speeds, every bin of the replay scenario
+        recovers the same relative speed vector — sampled back out through
+        the scenario's own lookup faces at bin-interior times."""
+        speeds = np.asarray(speeds)
+        est = ScenarioEstimator(P=len(speeds))
+        _feed(est, speeds, chunks_per_pe=chunks)
+        scen = est.trace_scenario(n_bins=n_bins)
+        assert scen.P == len(speeds)
+        want = speeds / speeds.max()
+        # probe strictly inside [0, t_end] plus far beyond the trace
+        for t in (0.0, 1e-6, 0.5, 1e9):
+            got = scen.speeds_at(np.arange(scen.P), np.full(scen.P, t))
+            np.testing.assert_allclose(got, want, rtol=1e-9)
+
+    @needs_hypothesis
+    @settings(deadline=None, max_examples=30)
+    @given(data=st.data(), p=st.integers(1, 4))
+    def test_observe_any_order_never_crashes_and_speeds_positive(data, p):
+        """Arbitrary (pe, size, elapsed, overhead, t) streams keep every
+        public accessor total: no crash, speeds positive and <= 1."""
+        est = ScenarioEstimator(P=p, window=data.draw(st.integers(1, 8)))
+        n_obs = data.draw(st.integers(0, 30))
+        for _ in range(n_obs):
+            est.observe(
+                pe=data.draw(st.integers(-2 * p, 2 * p)),  # out-of-range wraps
+                size=data.draw(st.integers(0, 100)),  # 0 clamps to 1
+                elapsed=data.draw(st.floats(min_value=0.0, max_value=10.0)),
+                overhead=data.draw(st.floats(min_value=0.0, max_value=1.0)),
+                t=data.draw(
+                    st.one_of(
+                        st.none(), st.floats(min_value=0.0, max_value=100.0)
+                    )
+                ),
+            )
+        s = est.speeds()
+        assert s.shape == (p,)
+        assert (s > 0).all() and (s <= 1.0 + 1e-12).all()
+        assert est.delay_estimate() >= 0.0
+        assert est.estimate().P == p
+        if n_obs:
+            est.trace_scenario(n_bins=3)  # must not crash with sparse bins
+        assert est.observations == n_obs
+
+
+# ---------------------------------------------------------------------------
+# Degenerate inputs and ready() gating (plain pytest: always run)
+# ---------------------------------------------------------------------------
+
+
+def test_zero_reports_fallbacks():
+    est = ScenarioEstimator(P=3)
+    assert not est.ready
+    np.testing.assert_array_equal(est.speeds(), np.ones(3))
+    assert est.delay_estimate() == 0.0
+    scen = est.estimate()
+    np.testing.assert_array_equal(scen.base_speeds(), np.ones(3))
+    with pytest.raises(RuntimeError):
+        est.iter_time_mean()
+    with pytest.raises(RuntimeError):
+        est.trace_scenario()
+
+
+def test_single_pe_and_window_one():
+    est = ScenarioEstimator(P=1, window=1)
+    assert not est.ready
+    est.observe(0, 4, 4e-3)
+    assert est.ready  # the only PE reported
+    np.testing.assert_allclose(est.speeds(), [1.0])
+    # window=1 keeps exactly the latest observation
+    est.observe(0, 4, 8e-3)
+    assert est.iter_time_mean() == pytest.approx(2e-3)
+    scen = est.trace_scenario(n_bins=2)
+    assert scen.P == 1
+
+
+def test_invalid_p_rejected():
+    with pytest.raises(ValueError):
+        ScenarioEstimator(P=0)
+
+
+def test_ready_gates_on_every_pe():
+    est = ScenarioEstimator(P=3)
+    est.observe(2, 1, 1e-3)
+    assert not est.ready
+    est.observe(0, 1, 1e-3)
+    assert not est.ready, "one PE still silent"
+    est.observe(1, 1, 1e-3)
+    assert est.ready
+    est.observe(1, 1, 1e-3)
+    assert est.ready, "ready must stay true once every PE reported"
+
+
+def test_unobserved_pe_assumes_full_speed():
+    est = ScenarioEstimator(P=2)
+    est.observe(0, 10, 10 * 2e-3)  # PE0 slow; PE1 silent
+    s = est.speeds()
+    assert s[1] == 1.0, "silent PEs must not read as perturbed"
+    assert s[0] == 1.0, "lone observed PE is the fastest by definition"

@@ -260,3 +260,110 @@ def test_estimator_trace_scenario_round_trips():
     cc = np.full(256, 1e-3)
     cfg = SimConfig(technique="fac", params=params, approach="dca", scenario=scen)
     _assert_identical(simulate(cfg, cc), simulate_fast(cfg, cc), "trace replay")
+
+
+# ---------------------------------------------------------------------------
+# Window-edge boundary sampling (regression: the engines' shared semantics)
+# ---------------------------------------------------------------------------
+
+
+def test_window_edge_takes_the_new_window_on_every_face():
+    """``at(t)`` exactly on a window edge must take the *new* window (window
+    starts inclusive, half-open windows) — and the three lookup faces the
+    engines use (scalar ``SpeedProfile.at``, scalar ``speed_at``, vectorized
+    ``speeds_at``) must agree bit-exactly on the edges, or the event and
+    round-based engines would silently diverge whenever an assignment time
+    lands on a breakpoint."""
+    prof = SpeedProfile.windows([(1.0, 2.0), (3.0, 4.5)], factor=0.5)
+    ragged = SpeedProfile([1.0, 0.25], [2.0])  # fewer breakpoints: padding
+    scen = PerturbationScenario("edges", [prof, ragged])
+    probes = [-1.0, 0.0, 1.0 - 1e-12, 1.0, 1.5, 2.0, 3.0, 4.5, 1e9]
+    # entering each window start: the new (perturbed) value, exactly
+    assert prof.at(1.0) == 0.5 and prof.at(3.0) == 0.5
+    # leaving each window end: back to base, exactly
+    assert prof.at(2.0) == 1.0 and prof.at(4.5) == 1.0
+    for pe, p in enumerate([prof, ragged]):
+        for t in probes:
+            want = p.at(t)
+            assert scen.speed_at(pe, t) == want, (pe, t)
+            got = scen.speeds_at(np.array([pe]), np.array([t]))[0]
+            assert got == want, (pe, t)
+
+
+def test_breakpoint_at_zero_is_inclusive_everywhere():
+    """A window starting exactly at t=0 perturbs from the first sample on —
+    including ``base_speeds`` (the static fold the fast engine uses)."""
+    p0 = SpeedProfile([1.0, 0.5], [0.0])
+    scen = PerturbationScenario("t0", [p0])
+    assert p0.at(0.0) == 0.5
+    assert p0.at(-0.0) == 0.5  # IEEE -0.0 == 0.0: same window
+    assert scen.speed_at(0, 0.0) == 0.5
+    assert scen.base_speeds()[0] == 0.5
+
+
+def test_adjacent_windows_are_legal_and_fuse():
+    """Windows are half-open [start, end): ``(a, b)`` followed by ``(b, c)``
+    is a legal disjoint pair and must sample as one perturbed stretch —
+    the old encoding rejected it with 'must be disjoint and ascending'
+    even though the windows never overlap."""
+    prof = SpeedProfile.windows([(0.5, 1.0), (1.0, 2.0)], factor=0.25)
+    assert np.all(np.diff(prof.times) > 0), "breakpoints stay strictly increasing"
+    assert prof.at(0.75) == 0.25
+    assert prof.at(1.0) == 0.25, "the shared edge belongs to the second window"
+    assert prof.at(2.0 - 1e-9) == 0.25
+    assert prof.at(2.0) == 1.0
+    assert prof.at(0.25) == 1.0
+    # truly overlapping windows are still rejected
+    with pytest.raises(ValueError):
+        SpeedProfile.windows([(0.0, 1.0), (0.5, 2.0)], factor=0.5)
+    # ... and so are unordered ones
+    with pytest.raises(ValueError):
+        SpeedProfile.windows([(2.0, 3.0), (0.0, 1.0)], factor=0.5)
+
+
+def test_from_trace_edge_observation_lands_in_new_bin():
+    """`trace_scenario` bins with the same window-start-inclusive rule the
+    playback samples with: an observation exactly on a bin edge belongs to
+    the *new* bin, so replaying the trace returns the speed that was
+    measured there, not the previous bin's."""
+    est = ScenarioEstimator(2, window=64)
+    # t_end = 16, so a 2-bin split puts its edge exactly at t=8 — where
+    # PE1's first *fast* observation sits: slow on [0, 8), fast from 8 on
+    for i in range(17):
+        est.observe(0, 1, 1e-3, t=float(i))
+        est.observe(1, 1, 4e-3 if i < 8 else 1e-3, t=float(i))
+    scen = est.trace_scenario(n_bins=2)
+    edge = float(scen.profiles[1].times[0])
+    assert edge == pytest.approx(8.0)
+    # at the edge itself: the new (fast) bin on every face
+    assert scen.speed_at(1, edge) == pytest.approx(1.0)
+    assert scen.profiles[1].at(edge) == pytest.approx(1.0)
+    assert scen.speeds_at(np.array([1]), np.array([edge]))[0] == pytest.approx(1.0)
+    # strictly before the edge: still the slow bin
+    assert scen.speed_at(1, edge - 1e-9) == pytest.approx(0.25)
+
+
+def test_engines_identical_with_breakpoints_on_assignment_times(costs):
+    """Both engines sample chunk speed at the assignment-done time; placing
+    breakpoints exactly on representable multiples of h_assign (the
+    serialized service quantum, so early done times land on them) must not
+    break bit-identity — the scalar and vector faces resolve edges the
+    same way."""
+    params = DLSParams(N=N, P=P)
+    h = 1e-6
+    scen = PerturbationScenario(
+        "on_edges",
+        [
+            SpeedProfile([1.0, 0.5, 1.0], [k * h, (k + 4) * h])
+            for k in range(1, P + 1)
+        ],
+    )
+    for approach in ("cca", "dca"):
+        cfg = SimConfig(
+            technique="fac", params=params, approach=approach,
+            h_assign_s=h, scenario=scen,
+        )
+        _assert_identical(
+            simulate(cfg, costs), simulate_fast(cfg, costs),
+            f"edge-breakpoints/{approach}",
+        )
