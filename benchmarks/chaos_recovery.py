@@ -1,0 +1,162 @@
+"""Chaos recovery cost: faulted vs fault-free makespan, per fault kind.
+
+For every ``fault_suite`` scenario x both process backends (shared-static
+DCA, foreman CCA) this runs the same workload twice through
+``DistributedExecutor`` — once with the scenario's fault stripped (the
+slowdown/delay family alone) and once with the fault armed — and reports:
+
+* ``makespan_clean_s`` / ``makespan_faulted_s`` and their ratio
+  ``inflation`` — what surviving the fault actually costs end to end;
+* ``detect_latency_s`` — time from run start to the parent noticing the
+  failure (for hangs this includes the heartbeat timeout by construction);
+* ``recovery_s`` — the online lease-reclaim + re-execution cost;
+* ``failures_detected`` / ``reclaimed_chunks`` / ``respawns`` /
+  ``coordinator_restarts`` — the survival evidence, which the regression
+  gate checks for presence (a silently-not-firing fault shrinks coverage).
+
+The capstone row ``coordinator_kill_advantage`` compares DCA vs CCA
+inflation under the coordinator kill: the paper's decentralization argument
+as a measured number (DCA has no coordinator to lose, so its inflation
+stays ~1.0 while CCA pays detection + restart + reconnect).
+
+Wall times here are machine-scheduling time: the CI gate skips the ``_s``
+leaves and compares the dimensionless inflation ratios and survival counts
+(see .github/workflows/ci.yml, bench-gate job).
+
+Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/chaos_recovery.py \
+          [--json out.json]
+
+The committed snapshot is BENCH_chaos_recovery.json.
+"""
+
+import argparse
+import functools
+import json
+import os
+import platform
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.techniques import DLSParams
+from repro.dist import DistributedExecutor
+from repro.select.scenarios import PerturbationScenario, fault_suite
+
+N = 3000
+WORKERS = 4
+ITER_S = 1e-3  # ~3s serial work: faults land mid-run, runs stay CI-sized
+HORIZON_S = 1.0
+HEARTBEAT_S = 1.0
+TECH = "fac"
+
+
+def _work(per_iter_s, lo, hi):
+    time.sleep((hi - lo) * per_iter_s)
+
+
+def _strip_faults(scen):
+    """The same slowdown/delay family with the fault family removed."""
+    return PerturbationScenario(
+        f"{scen.name}_clean", scen.profiles, scen.delay_calc_s
+    )
+
+
+def _run_once(scen, mode):
+    fn = functools.partial(_work, ITER_S)
+    with DistributedExecutor(
+        TECH, DLSParams(N=N, P=WORKERS), mode=mode, scenario=scen
+    ) as ex:
+        t = ex.run(
+            fn,
+            WORKERS,
+            join_timeout=120,
+            heartbeat_timeout_s=HEARTBEAT_S,
+            respawn=True,
+        )
+        rng = ex.executed_ranges()
+        assert rng[0, 0] == 0 and rng[-1, 1] == N, "coverage broke under chaos"
+        return t, ex
+
+
+def bench_cell(scen, mode):
+    t_clean, _ = _run_once(_strip_faults(scen), mode)
+    t_fault, ex = _run_once(scen, mode)
+    detect = [f["t_detect_s"] for f in ex.failures]
+    recover = [f["recovery_s"] for f in ex.failures]
+    return {
+        "scenario": scen.name,
+        "mode": mode,
+        "fault_kinds": sorted({f.kind for f in scen.faults}),
+        "makespan_clean_s": round(t_clean, 4),
+        "makespan_faulted_s": round(t_fault, 4),
+        "inflation": round(t_fault / t_clean, 3),
+        "detect_latency_s": round(max(detect), 4) if detect else 0.0,
+        "recovery_s": round(sum(recover), 4),
+        "failures_detected": len(ex.failures),
+        "reclaimed_chunks": len(ex.reclaimed),
+        "respawns": ex.respawns,
+        "coordinator_restarts": getattr(ex.source, "restarts", 0),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT")
+    args = ap.parse_args()
+
+    cells = []
+    for scen in fault_suite(WORKERS, horizon_s=HORIZON_S):
+        for mode in ("dca", "cca"):
+            cell = bench_cell(scen, mode)
+            cells.append(cell)
+            print(
+                f"{cell['scenario']:17s} {mode}: "
+                f"clean={cell['makespan_clean_s']:.2f}s "
+                f"faulted={cell['makespan_faulted_s']:.2f}s "
+                f"x{cell['inflation']:.2f}  "
+                f"detect={cell['detect_latency_s']:.2f}s "
+                f"failures={cell['failures_detected']} "
+                f"respawns={cell['respawns']} "
+                f"coord_restarts={cell['coordinator_restarts']}"
+            )
+
+    by = {(c["scenario"], c["mode"]): c for c in cells}
+    advantage = {
+        # CCA inflation minus DCA inflation under the coordinator kill;
+        # positive == decentralization pays off under coordinator loss
+        "cca_minus_dca_inflation": round(
+            by["coordinator_down", "cca"]["inflation"]
+            - by["coordinator_down", "dca"]["inflation"],
+            3,
+        ),
+        "dca_inflation": by["coordinator_down", "dca"]["inflation"],
+        "cca_inflation": by["coordinator_down", "cca"]["inflation"],
+    }
+    print(f"coordinator_kill_advantage: {advantage}")
+
+    doc = {
+        "meta": {
+            "bench": "chaos_recovery",
+            "N": N,
+            "workers": WORKERS,
+            "iter_s": ITER_S,
+            "technique": TECH,
+            "heartbeat_timeout_s": HEARTBEAT_S,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "cells": cells,
+        "coordinator_kill_advantage": advantage,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

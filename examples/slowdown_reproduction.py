@@ -27,6 +27,17 @@ through ``SimConfig.scenario`` on the simulator path and through the
 ``ScenarioInjector`` (runtime/inject.py) on real threads/processes, where
 profile tables live in shared memory and each chunk's execution is stretched
 by the speed sampled at chunk start on a shared run clock.
+
+The chaos scenarios (``crashy``, ``hangy``, ``stally``,
+``coordinator_down`` — select/scenarios.py ``fault_suite``) additionally
+SIGKILL/hang/stall real worker processes, or kill the CCA coordinator,
+mid-run; they require ``--processes``.  The executor detects the failure
+(heartbeats + exit codes), reclaims the lost lease, respawns the worker —
+or, for ``coordinator_down``, the foreman supervisor restarts the
+coordinator while DCA shrugs (nothing to kill).  Try:
+
+    PYTHONPATH=src python examples/slowdown_reproduction.py \
+        --processes --scenario crashy --smoke
 """
 
 import argparse
@@ -40,15 +51,23 @@ TECHS = ["static", "ss", "fsc", "gss", "tss", "fac", "fiss", "viss", "pls",
          "awf_b", "af"]
 DELAYS = (0.0, 1e-5, 1e-4)
 SCENARIOS = ("constant", "hetero", "bursty", "correlated")
+FAULT_SCENARIOS = ("crashy", "hangy", "stally", "coordinator_down")
 
 
 def scenario_for(name: str, P: int, horizon_s: float, delay_s: float):
     """One PerturbationScenario per family, window edges scaled to sit
     inside a run of roughly ``horizon_s`` seconds."""
-    from repro.select.scenarios import PerturbationScenario
+    from repro.select.scenarios import PerturbationScenario, fault_suite
 
     h = float(horizon_s)
     quarter = max(P // 4, 1)
+    if name in FAULT_SCENARIOS:
+        scen = {s.name: s for s in fault_suite(P, h)}[name]
+        if delay_s and delay_s != scen.delay_calc_s:
+            scen = PerturbationScenario(
+                scen.name, scen.profiles, delay_s, faults=scen.faults
+            )
+        return scen
     if name == "constant":
         return PerturbationScenario.constant(P, delay_calc_s=delay_s)
     if name == "hetero":
@@ -123,6 +142,7 @@ def run_processes(n: int, workers: int, iter_cost_s: float, delays,
     print(header)
     fn = functools.partial(_sleep_work, iter_cost_s)
     horizon = n * iter_cost_s / workers * 2.0
+    notes = []  # chaos survival summaries, printed per technique row
     for tech in techs:
         row = f"{tech:9s} "
         for mode in ("cca", "dca"):
@@ -137,14 +157,29 @@ def run_processes(n: int, workers: int, iter_cost_s: float, delays,
                                                horizon, delay))
                     if scenario_name else dict(calc_delay_s=delay)
                 )
+                chaotic = getattr(kw.get("scenario"), "has_faults", False)
+                run_kw = (
+                    dict(heartbeat_timeout_s=max(4 * horizon, 2.0),
+                         respawn=True)
+                    if chaotic else {}
+                )
                 ex = DistributedExecutor(
                     tech, DLSParams(N=n, P=workers), mode=eff, **kw
                 )
-                t = ex.run(fn, workers, join_timeout=600)
+                t = ex.run(fn, workers, join_timeout=600, **run_kw)
                 ex.close()
                 assert ex.executed_ranges()[-1, 1] == n  # coverage, always
                 row += f"{t:13.3f}"
+                if chaotic:
+                    kinds = ",".join(f["kind"] for f in ex.failures) or "none"
+                    restarts = getattr(ex.source, "restarts", 0)
+                    notes.append(f"  {tech}/{mode}/{int(delay * 1e6)}us: "
+                                 f"faults={kinds} respawns={ex.respawns} "
+                                 f"coordinator_restarts={restarts}")
         print(row)
+        for note in notes:
+            print(note)
+        notes.clear()
 
 
 if __name__ == "__main__":
@@ -155,11 +190,17 @@ if __name__ == "__main__":
     ap.add_argument("--processes", action="store_true",
                     help="run the slowdown scenarios on real worker processes "
                          "(DistributedExecutor) instead of the simulator")
-    ap.add_argument("--scenario", default=None, choices=SCENARIOS,
+    ap.add_argument("--scenario", default=None,
+                    choices=SCENARIOS + FAULT_SCENARIOS,
                     help="perturbation family beyond the paper's constant "
                          "delay (speed profiles injected into real execution "
-                         "under --processes)")
+                         "under --processes); the chaos families "
+                         f"{FAULT_SCENARIOS} kill/hang/stall real processes "
+                         "and require --processes")
     args = ap.parse_args()
+    if args.scenario in FAULT_SCENARIOS and not args.processes:
+        ap.error(f"--scenario {args.scenario} injects real process faults; "
+                 "it requires --processes")
     if args.processes:
         if args.smoke:
             run_processes(n=2_000, workers=4, iter_cost_s=2e-5,

@@ -72,7 +72,11 @@ def _resolve_scenario(scenario, calc_delay_s: float, P: int):
             f"scenario has {scenario.P} PE profiles, params.P={P}"
         )
     injector = None
-    if not (scenario.static and np.ptp(scenario.base_speeds()) == 0.0):
+    # faults force an injector even under uniform static speeds: the fault
+    # table and fired flags live in the injector's shared block
+    if getattr(scenario, "has_faults", False) or not (
+        scenario.static and np.ptp(scenario.base_speeds()) == 0.0
+    ):
         from repro.runtime.inject import ScenarioInjector  # runtime imports core
 
         injector = ScenarioInjector(scenario)
@@ -106,6 +110,14 @@ class SelfSchedulingExecutor:
         # so callers reading .name / .requires_feedback never see a bare str
         self.technique = auto_technique() if technique == "auto" else get_technique(technique)
         self.params = params
+        if scenario is not None and getattr(scenario, "has_faults", False):
+            # a crash fault SIGKILLs its worker's *process* — under threads
+            # that is the whole executor; fault scenarios need process
+            # workers (repro.dist.DistributedExecutor)
+            raise ValueError(
+                "fault scenarios require process-level workers; use "
+                f"repro.dist.DistributedExecutor for {scenario.name!r}"
+            )
         self.scenario, self.calc_delay_s, self._injector = _resolve_scenario(
             scenario, calc_delay_s, params.P
         )

@@ -436,6 +436,19 @@ class CriticalSectionSource(ChunkSource):
     def drained(self) -> bool:
         return self._remaining <= 0
 
+    def fast_forward(self, step: int, lp: int, prev_raw: float = 0.0) -> None:
+        """Re-seed a fresh source to resume after ``step`` chunks covering
+        ``[0, lp)`` were already served — the foreman supervisor's recovery
+        hook (dist/sources.py): a restarted coordinator rebuilds its inner
+        source and fast-forwards it from the shared progress block so no
+        range is served twice.  ``prev_raw`` restores the recursion's
+        previous-chunk state for techniques that consume it."""
+        with self._lock:
+            self._step = int(step)
+            self._lp = int(lp)
+            self._remaining = self.params.N - int(lp)
+            self._prev_raw = float(prev_raw)
+
     @property
     def claimed(self) -> int:
         """Successful claims so far (== chunks the master has served)."""
@@ -587,6 +600,15 @@ class AdaptiveSource(ChunkSource):
 
     def drained(self) -> bool:
         return self._lp >= self.params.N
+
+    def fast_forward(self, step: int, lp: int, prev_raw: float = 0.0) -> None:
+        """Resume-after-restart re-seed (see CriticalSectionSource): the
+        queue head jumps to ``lp`` so [0, lp) is never re-served.  Feedback
+        state restarts cold — the epoch scheme re-learns it from subsequent
+        reports, which only perturbs chunk *sizes*, never coverage."""
+        with self._lock:
+            self._step = int(step)
+            self._lp = int(lp)
 
     @property
     def claimed(self) -> int:

@@ -14,15 +14,31 @@ See DESIGN.md Sec. 10.
 """
 
 from .executor import DistributedExecutor
-from .shm import attach_block, create_block, default_context
-from .sources import ForemanSource, SharedStaticSource, process_source_for
+from .shm import (
+    attach_block,
+    cleanup_registry,
+    create_block,
+    default_context,
+    registered_blocks,
+    unlink_block,
+)
+from .sources import (
+    CoordinatorLostError,
+    ForemanSource,
+    SharedStaticSource,
+    process_source_for,
+)
 
 __all__ = [
     "DistributedExecutor",
     "ForemanSource",
     "SharedStaticSource",
+    "CoordinatorLostError",
     "process_source_for",
     "attach_block",
     "create_block",
+    "unlink_block",
+    "cleanup_registry",
+    "registered_blocks",
     "default_context",
 ]

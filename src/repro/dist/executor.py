@@ -39,8 +39,9 @@ import logging
 import math
 import os
 import signal
+import threading
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -48,8 +49,8 @@ from repro.core.executor import ChunkRecord, _resolve_scenario
 from repro.core.source import ChunkSource
 from repro.core.techniques import DLSParams, auto_technique, get_technique
 
-from .shm import attach_block, create_block, default_context, int64_field
-from .sources import process_source_for
+from .shm import attach_block, create_block, default_context, int64_field, unlink_block
+from .sources import CoordinatorLostError, ForemanSource, process_source_for
 
 __all__ = ["DistributedExecutor"]
 
@@ -60,14 +61,27 @@ _REC_FIELDS = 5  # step, lo, hi, t_claim_ns, t_done_ns
 
 _LEASE_FREE, _LEASE_HELD = 0, 1
 
+# shared block layout: [heartbeats W | leases W | record rings W].  Each
+# heartbeat is one int64: the worker's last time.monotonic_ns() stamp (0 ==
+# never stamped).  CLOCK_MONOTONIC's epoch is system-wide, so the parent
+# compares the stamp against its own clock directly.
 
-def _lease_view(shm, wid: int) -> np.ndarray:
-    return int64_field(shm, 8 * _LEASE_FIELDS * wid, _LEASE_FIELDS)
+
+def _hb_view(shm, wid: int) -> np.ndarray:
+    return int64_field(shm, 8 * wid, 1)
+
+
+def _lease_view(shm, n_workers: int, wid: int) -> np.ndarray:
+    return int64_field(shm, 8 * n_workers + 8 * _LEASE_FIELDS * wid, _LEASE_FIELDS)
 
 
 def _ring_views(shm, n_workers: int, capacity: int, wid: int):
     """(count header, rows) of worker ``wid``'s record ring."""
-    base = 8 * _LEASE_FIELDS * n_workers + 8 * wid * (1 + _REC_FIELDS * capacity)
+    base = (
+        8 * n_workers
+        + 8 * _LEASE_FIELDS * n_workers
+        + 8 * wid * (1 + _REC_FIELDS * capacity)
+    )
     head = int64_field(shm, base, 1)
     rows = int64_field(shm, base + 8, _REC_FIELDS * capacity).reshape(capacity, _REC_FIELDS)
     return head, rows
@@ -75,15 +89,28 @@ def _ring_views(shm, n_workers: int, capacity: int, wid: int):
 
 def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
                  injector=None):
-    """Worker loop: claim -> lease -> execute -> report -> commit -> release."""
+    """Worker loop: claim -> lease -> execute -> report -> commit -> release.
+
+    The loop stamps its heartbeat slot at every phase transition; chunk
+    *execution* itself only ticks through injected stall faults (which are
+    alive-but-slow by definition), so a genuinely hung worker goes stale and
+    the parent's liveness detector catches it.
+    """
     shm = attach_block(shm_name)
     try:
+        hb = _hb_view(shm, wid)
+
+        def tick():
+            hb[0] = time.monotonic_ns()
+
+        tick()
         if injector is not None:
             # scenario speed profiles: per-chunk stretching, sampled on the
             # shared run clock (the injector arrived pickled — it re-attached
-            # the profile tables from shared memory in __setstate__)
-            fn = injector.bind(fn, wid)
-        lease = _lease_view(shm, wid)
+            # the profile tables from shared memory in __setstate__); fault
+            # rows compose a _FaultyFn that polls due faults at chunk start
+            fn = injector.bind(fn, wid, tick=tick)
+        lease = _lease_view(shm, n_workers, wid)
         head, rows = _ring_views(shm, n_workers, capacity, wid)
         # serialized sources sleep the delay inside their critical section,
         # and delay-injecting wrappers (InjectedSource) sleep it in claim():
@@ -94,6 +121,7 @@ def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
         else:
             delay = calc_delay_s
         while True:
+            tick()
             t_req = time.perf_counter()
             chunk = source.claim(wid)
             if chunk is None:
@@ -104,9 +132,11 @@ def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
             lease[0] = _LEASE_HELD
             if delay:
                 time.sleep(delay)  # DCA calculation slowdown, concurrent
+            tick()
             t_claim = time.perf_counter()
             fn(chunk.lo, chunk.hi)
             t_done = time.perf_counter()
+            tick()
             source.report(chunk, t_done - t_claim, overhead=t_claim - t_req)
             n = int(head[0])
             if n >= capacity:  # pragma: no cover - capacity is a strict bound
@@ -115,7 +145,7 @@ def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
             head[0] = n + 1  # commit the record...
             lease[0] = _LEASE_FREE  # ...then release the lease
     finally:
-        lease = head = rows = None
+        hb = lease = head = rows = None
         shm.close()
 
 
@@ -145,7 +175,16 @@ class DistributedExecutor:
             scenario, calc_delay_s, params.P
         )
         self._ctx = default_context(start_method)
+        has_coord_faults = self.scenario is not None and bool(
+            getattr(self.scenario, "coordinator_faults", lambda: ())()
+        )
         if source is not None:
+            if has_coord_faults and isinstance(source, ForemanSource) and not source._supervised:
+                raise ValueError(
+                    "scenario injects coordinator_kill but the ForemanSource "
+                    "was built without supervise=True; the kill would strand "
+                    "every worker"
+                )
             if self.calc_delay_s and source.serialized:
                 # same rule as the thread executor: a serialized source pays
                 # the scenario delay inside its critical section — configure
@@ -160,8 +199,12 @@ class DistributedExecutor:
             from repro.core.source import resolve_mode
 
             self.mode = "select" if technique == "auto" else resolve_mode(technique, mode)[0]
+            # coordinator faults in the scenario auto-enable the foreman
+            # supervisor: the scenario *promises* to kill the coordinator,
+            # so an unsupervised one would deadlock the run by construction
             self.source = process_source_for(
-                technique, params, mode, calc_delay_s=self.calc_delay_s, ctx=self._ctx
+                technique, params, mode, calc_delay_s=self.calc_delay_s, ctx=self._ctx,
+                supervise=has_coord_faults,
             )
             self._owns_source = True
         if record_capacity is None:
@@ -172,6 +215,8 @@ class DistributedExecutor:
         self.records: List[ChunkRecord] = []
         self.reclaimed: List[Tuple[int, int, int, int]] = []  # (worker, step, lo, hi)
         self.recoveries = 0
+        self.respawns = 0
+        self.failures: List[Dict] = []  # one dict per detected worker failure
 
     # -- execution -----------------------------------------------------------
 
@@ -180,65 +225,135 @@ class DistributedExecutor:
         fn: Callable[[int, int], None],
         n_workers: int,
         join_timeout: Optional[float] = None,
+        heartbeat_timeout_s: Optional[float] = None,
+        respawn: bool = False,
+        max_respawns: Optional[int] = None,
     ) -> float:
         """Execute; returns wall-clock parallel time (the paper's T_loop^par).
 
-        ``join_timeout`` is the watchdog: a worker still alive that long after
-        the loop should have drained is terminated and treated as failed (its
-        lease is reclaimed) instead of hanging the caller.
+        Failure handling, coarsest to finest:
+
+        * ``join_timeout`` — the blunt watchdog: any worker still alive that
+          long after start is terminated and treated as failed.
+        * ``heartbeat_timeout_s`` — live hang detection: a worker whose
+          heartbeat stamp goes stale this long is SIGKILLed *during* the run
+          and its lease reclaimed online (post-join discovery would wait for
+          the watchdog).  Size it above the longest legitimate chunk
+          execution — the loop only stamps between chunks.
+        * worker death (any abnormal exit, including injected crash faults)
+          is detected within one supervision poll (~20ms), the leased chunk
+          re-executed by the parent immediately, and — with ``respawn=True``
+          — a replacement worker started on the same slot (at most
+          ``max_respawns`` times, default ``n_workers``), so throughput
+          degrades gracefully instead of running short-handed.
+
+        Every detected failure is appended to ``self.failures`` as a dict
+        with the detection latency the chaos benchmarks report.
         """
         self.records = []
         self.reclaimed = []
+        self.failures = []
+        self.respawns = 0
+        if max_respawns is None:
+            max_respawns = n_workers
         shm = create_block(
-            8 * _LEASE_FIELDS * n_workers
+            8 * n_workers
+            + 8 * _LEASE_FIELDS * n_workers
             + 8 * n_workers * (1 + _REC_FIELDS * self._capacity)
         )
-        procs = []
         if self._injector is not None:
             self._injector.start()  # stamp the run clock before any spawn
+        chaos_stop = threading.Event()
+        chaos_thread = None
+        if self._injector is not None and self._injector.has_faults:
+            chaos_thread = threading.Thread(
+                target=self._chaos_loop, args=(chaos_stop,), daemon=True,
+                name="chaos-controller",
+            )
+            chaos_thread.start()
         t0 = time.perf_counter()
+        procs: Dict[int, object] = {}
+
+        def spawn(wid: int):
+            p = self._ctx.Process(
+                target=_worker_main,
+                args=(self.source, fn, wid, shm.name, n_workers, self._capacity,
+                      self.calc_delay_s, self._injector),
+            )
+            p.start()
+            return p
+
         try:
             for wid in range(n_workers):
-                p = self._ctx.Process(
-                    target=_worker_main,
-                    args=(
-                        self.source,
-                        fn,
-                        wid,
-                        shm.name,
-                        n_workers,
-                        self._capacity,
-                        self.calc_delay_s,
-                        self._injector,
-                    ),
-                )
-                p.start()
-                procs.append(p)
-            deadline = None if join_timeout is None else time.perf_counter() + join_timeout
-            dead = []
-            for wid, p in enumerate(procs):
-                p.join(None if deadline is None else max(deadline - time.perf_counter(), 0.1))
-                if p.is_alive():
-                    log.warning("worker %d hung past join_timeout; terminating", wid)
-                    p.terminate()
-                    p.join(timeout=5)
-                    if p.is_alive():  # pragma: no cover - SIGTERM ignored
-                        os.kill(p.pid, signal.SIGKILL)
+                procs[wid] = spawn(wid)
+            deadline = None if join_timeout is None else t0 + join_timeout
+            pending = set(range(n_workers))
+            any_failed = False
+            while pending:
+                for wid in sorted(pending):
+                    p = procs[wid]
+                    if not p.is_alive():
+                        p.join()
+                        pending.discard(wid)
+                        if p.exitcode == 0:
+                            continue
+                        any_failed = True
+                        log.warning("worker %d died (exitcode %s)", wid, p.exitcode)
+                        self._on_failure(shm, n_workers, wid, fn, "died", t0)
+                        if respawn and self.respawns < max_respawns:
+                            _hb_view(shm, wid)[0] = 0  # fresh incarnation
+                            procs[wid] = spawn(wid)
+                            pending.add(wid)
+                            self.respawns += 1
+                        continue
+                    if heartbeat_timeout_s is not None:
+                        hb = int(_hb_view(shm, wid)[0])
+                        stale_s = (time.monotonic_ns() - hb) / 1e9 if hb else 0.0
+                        if hb and stale_s > heartbeat_timeout_s:
+                            log.warning(
+                                "worker %d heartbeat stale %.2fs; killing", wid, stale_s
+                            )
+                            os.kill(p.pid, signal.SIGKILL)
+                            p.join(timeout=5)
+                            pending.discard(wid)
+                            any_failed = True
+                            self._on_failure(
+                                shm, n_workers, wid, fn, "hung", t0,
+                                stale_s=stale_s - heartbeat_timeout_s,
+                            )
+                            if respawn and self.respawns < max_respawns:
+                                _hb_view(shm, wid)[0] = 0
+                                procs[wid] = spawn(wid)
+                                pending.add(wid)
+                                self.respawns += 1
+                if pending and deadline is not None and time.perf_counter() > deadline:
+                    for wid in sorted(pending):
+                        p = procs[wid]
+                        log.warning("worker %d hung past join_timeout; terminating", wid)
+                        p.terminate()
                         p.join(timeout=5)
-                    dead.append(wid)
-                elif p.exitcode != 0:
-                    log.warning("worker %d died (exitcode %s)", wid, p.exitcode)
-                    dead.append(wid)
+                        if p.is_alive():  # pragma: no cover - SIGTERM ignored
+                            os.kill(p.pid, signal.SIGKILL)
+                            p.join(timeout=5)
+                        any_failed = True
+                        self._on_failure(shm, n_workers, wid, fn, "timeout", t0)
+                    pending.clear()
+                    break
+                if pending:
+                    time.sleep(0.02)
             t_wall = time.perf_counter() - t0
             self._collect_records(shm, n_workers)
-            self._reclaim(shm, n_workers, dead, fn)
+            if any_failed:
+                self._finish_degraded(shm, n_workers, fn)
             return t_wall
         finally:
-            for p in procs:  # defensive: never leak worker processes
+            chaos_stop.set()
+            if chaos_thread is not None:
+                chaos_thread.join(timeout=2)
+            for p in procs.values():  # defensive: never leak worker processes
                 if p.is_alive():  # pragma: no cover
                     p.terminate()
-            shm.close()
-            shm.unlink()
+            unlink_block(shm)
 
     def close(self):
         """Release the source (shared memory / foreman) if this executor
@@ -264,33 +379,97 @@ class DistributedExecutor:
                     ChunkRecord(int(step), int(lo), int(hi), wid, t_c / 1e9, t_d / 1e9)
                 )
 
-    def _reclaim(self, shm, n_workers: int, dead: List[int], fn):
-        """Re-execute chunks leased to dead workers, then drain the source.
+    def _chaos_loop(self, stop: threading.Event):
+        """Parent-side fault controller: fires due ``coordinator_kill``
+        events (worker faults fire worker-side in the injector wrapper).
 
-        The committed-record check makes reclamation exactly-once for chunks
-        whose record landed (death between commit and lease release); a death
-        between ``fn`` and commit re-executes — at-least-once, like replaying
-        a step from the last checkpoint in runtime/failure.py.
+        Against a supervised ``ForemanSource`` this SIGKILLs the live
+        coordinator — whose supervisor then restarts it.  Against the
+        coordinator-free DCA source there is nothing to kill: the fault is
+        marked fired and logged as a no-op, which *is* the paper's
+        resilience argument restated as an event.
         """
-        for wid in dead:
-            lease = _lease_view(shm, wid)
-            if int(lease[0]) != _LEASE_HELD:
+        inj = self._injector
+        while not stop.wait(0.02):
+            idx = inj.due_coordinator_fault()
+            if idx is None:
                 continue
-            step, lo, hi = int(lease[1]), int(lease[2]), int(lease[3])
-            committed = any(r.worker == wid and r.step == step for r in self.records)
-            if committed:
-                continue
-            log.warning("reclaiming chunk step=%d [%d,%d) from dead worker %d",
-                        step, lo, hi, wid)
-            t_claim = time.perf_counter()
-            fn(lo, hi)
-            t_done = time.perf_counter()
-            self.records.append(ChunkRecord(step, lo, hi, wid, t_claim, t_done))
-            self.reclaimed.append((wid, step, lo, hi))
-            self.recoveries += 1
-        if dead:
-            # dead workers may leave the source un-drained (e.g. a lone
-            # worker): the parent finishes the loop itself
+            inj.mark_fired(idx)  # before the kill: no double-fire on restart
+            pid = getattr(self.source, "coordinator_pid", None)
+            if pid is None:
+                log.info(
+                    "coordinator_kill fault: %s has no coordinator (DCA) — no-op",
+                    type(self.source).__name__,
+                )
+            else:
+                log.warning("chaos: SIGKILL coordinator pid %d", pid)
+                try:
+                    os.kill(pid, signal.SIGKILL)
+                except ProcessLookupError:  # pragma: no cover - already dead
+                    pass
+
+    def _recover_lease(self, shm, n_workers: int, wid: int, fn) -> Optional[Tuple[int, int, int]]:
+        """Reclaim worker ``wid``'s held lease (it must already be dead).
+
+        The committed-record check (against the worker's own ring, so online
+        recovery sees records the parent has not collected yet) makes
+        reclamation exactly-once for chunks whose record landed — death
+        between commit and lease release; a death between ``fn`` and commit
+        re-executes: at-least-once execution, exactly-once records, like
+        replaying a step from the last checkpoint in runtime/failure.py.
+        """
+        lease = _lease_view(shm, n_workers, wid)
+        if int(lease[0]) != _LEASE_HELD:
+            return None
+        step, lo, hi = int(lease[1]), int(lease[2]), int(lease[3])
+        head, rows = _ring_views(shm, n_workers, self._capacity, wid)
+        committed = any(int(rows[i, 0]) == step for i in range(int(head[0])))
+        lease[0] = _LEASE_FREE  # consumed either way: never reclaim twice
+        if committed:
+            return None
+        log.warning("reclaiming chunk step=%d [%d,%d) from dead worker %d",
+                    step, lo, hi, wid)
+        t_claim = time.perf_counter()
+        fn(lo, hi)
+        t_done = time.perf_counter()
+        self.records.append(ChunkRecord(step, lo, hi, wid, t_claim, t_done))
+        self.reclaimed.append((wid, step, lo, hi))
+        self.recoveries += 1
+        return (step, lo, hi)
+
+    def _on_failure(self, shm, n_workers: int, wid: int, fn, kind: str, t0: float,
+                    stale_s: float = 0.0):
+        """Record a detected worker failure and reclaim its lease online."""
+        t_recover0 = time.perf_counter()
+        reclaimed = self._recover_lease(shm, n_workers, wid, fn)
+        self.failures.append(
+            {
+                "worker": wid,
+                "kind": kind,
+                "t_detect_s": t_recover0 - t0,
+                # hang detection trails the last heartbeat by the timeout
+                # plus poll jitter; deaths are caught within one poll
+                "latency_s": stale_s,
+                "recovery_s": time.perf_counter() - t_recover0,
+                "reclaimed": reclaimed,
+            }
+        )
+
+    def _finish_degraded(self, shm, n_workers: int, fn):
+        """Post-join completion pass after any failure.
+
+        Sweep every worker's lease (watchdog terminations were not recovered
+        online), drain whatever the source still holds (dead workers may
+        leave it un-drained), and repair residual coverage gaps — a death
+        between ``source.claim()`` and the lease publish loses the chunk
+        with no lease to reclaim (the counter advanced, so nobody will be
+        handed that range again).  The gap repair executes directly from the
+        records, so the loop completes even when the source itself is
+        unreachable (unsupervised coordinator death).
+        """
+        for wid in range(n_workers):
+            self._recover_lease(shm, n_workers, wid, fn)
+        try:
             while True:
                 chunk = self.source.claim(0)
                 if chunk is None:
@@ -302,11 +481,9 @@ class DistributedExecutor:
                 self.records.append(
                     ChunkRecord(chunk.step, chunk.lo, chunk.hi, -1, t_claim, t_done)
                 )
-            # final safety net: a death *between* source.claim() and the lease
-            # publish loses the chunk with no lease to reclaim (the counter
-            # advanced, so nobody will be handed that range again) — repair
-            # any residual coverage gap directly from the records
-            self._repair_gaps(fn)
+        except CoordinatorLostError as e:
+            log.warning("drain pass lost the coordinator (%s); gap repair covers", e)
+        self._repair_gaps(fn)
 
     def _repair_gaps(self, fn):
         N = self.params.N

@@ -21,22 +21,91 @@ This module owns the fiddly parts:
 
 Layouts themselves (counter + chunk tables, lease slots, record rings) live
 with their owners in ``dist/sources.py`` and ``dist/executor.py``.
+
+Because attachers never unlink, segments whose *creator* dies without
+running its ``close()`` path (SIGKILL — precisely what chaos crash faults
+inject) would leak in ``/dev/shm`` forever.  ``create_block`` therefore
+records every segment in a per-process registry that an ``atexit`` hook
+sweeps; ``unlink_block`` is the paired orderly release that also
+deregisters.  Entries are pid-guarded: a fork-inherited registry copy must
+not let a *child*'s exit unlink segments the parent still serves.
 """
 
 from __future__ import annotations
 
+import atexit
 import multiprocessing
+import os
 from multiprocessing import resource_tracker, shared_memory
+from typing import Dict
 
 import numpy as np
 
 __all__ = [
     "create_block",
     "attach_block",
+    "unlink_block",
+    "adopt_block",
+    "cleanup_registry",
+    "registered_blocks",
     "int64_field",
     "float64_field",
     "default_context",
 ]
+
+
+# name -> creator pid.  Module-level (shared by every creator in the
+# process); the pid guard makes fork-inherited copies inert in children.
+_REGISTRY: Dict[str, int] = {}
+
+
+def registered_blocks() -> Dict[str, int]:
+    """Snapshot of live registrations (name -> creator pid) — for tests."""
+    return dict(_REGISTRY)
+
+
+def adopt_block(name: str) -> None:
+    """Register an existing segment for this process's exit sweep.
+
+    Used by a *supervisor* that outlives a segment's creator (e.g. the
+    parent adopting a foreman child's blocks): if the creator is SIGKILLed,
+    the adopter's atexit sweep unlinks instead of leaking.
+    """
+    _REGISTRY[name] = os.getpid()
+
+
+def _deregister(name: str) -> None:
+    if _REGISTRY.get(name) == os.getpid():
+        _REGISTRY.pop(name, None)
+
+
+def cleanup_registry() -> int:
+    """Unlink every still-registered segment this process created/adopted.
+
+    Runs at interpreter exit (atexit) as the leak backstop; callers with an
+    orderly shutdown path should have already gone through ``unlink_block``
+    and made this a no-op.  Returns the number of segments reclaimed.
+    """
+    pid = os.getpid()
+    reclaimed = 0
+    for name, owner in list(_REGISTRY.items()):
+        if owner != pid:
+            continue  # fork-inherited entry; the real owner sweeps it
+        _REGISTRY.pop(name, None)
+        try:
+            seg = attach_block(name)
+        except FileNotFoundError:
+            continue  # already unlinked (creator's orderly path won the race)
+        seg.close()
+        try:
+            seg.unlink()
+            reclaimed += 1
+        except FileNotFoundError:  # pragma: no cover - unlink raced
+            pass
+    return reclaimed
+
+
+atexit.register(cleanup_registry)
 
 
 def create_block(n_bytes: int) -> shared_memory.SharedMemory:
@@ -46,8 +115,29 @@ def create_block(n_bytes: int) -> shared_memory.SharedMemory:
     ftruncate, and mmap-backed equivalents elsewhere) — layouts whose
     "empty" encoding is all-zeros (lease state, record counts) rely on
     that, so no explicit (and memory-doubling) zeroing pass is done here.
+
+    The segment is recorded in this process's leak registry; release it
+    with ``unlink_block`` (or close()+unlink() — the atexit sweep tolerates
+    an already-unlinked entry).
     """
-    return shared_memory.SharedMemory(create=True, size=n_bytes)
+    shm = shared_memory.SharedMemory(create=True, size=n_bytes)
+    _REGISTRY[shm.name] = os.getpid()
+    return shm
+
+
+def unlink_block(shm: shared_memory.SharedMemory) -> None:
+    """Orderly creator-side release: close, unlink, deregister.
+
+    Idempotent (FileNotFoundError from a prior unlink is swallowed), so
+    close paths and the atexit sweep can overlap safely.
+    """
+    name = shm.name
+    shm.close()
+    try:
+        shm.unlink()
+    except FileNotFoundError:
+        pass
+    _deregister(name)
 
 
 def attach_block(name: str) -> shared_memory.SharedMemory:

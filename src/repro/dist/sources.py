@@ -29,6 +29,7 @@ import functools
 import os
 import tempfile
 import threading
+import time
 import uuid
 import warnings
 from multiprocessing.connection import Client, Listener
@@ -43,10 +44,34 @@ from repro.core.source import (
     source_for,
 )
 from repro.core.techniques import DLSParams
+from repro.runtime.failure import BackoffPolicy
 
-from .shm import attach_block, create_block, default_context, int64_field
+from .shm import (
+    attach_block,
+    create_block,
+    default_context,
+    float64_field,
+    int64_field,
+    unlink_block,
+)
 
-__all__ = ["SharedStaticSource", "ForemanSource", "process_source_for"]
+__all__ = [
+    "SharedStaticSource",
+    "ForemanSource",
+    "CoordinatorLostError",
+    "process_source_for",
+]
+
+
+class CoordinatorLostError(RuntimeError):
+    """The foreman (coordinator process) died mid-conversation.
+
+    Raised by ``ForemanSource`` when a claim/report/stat hits a dead or
+    vanished coordinator and no supervisor brings one back within the retry
+    deadline.  Deliberately a ``RuntimeError`` — *not* an ``OSError``
+    subclass — so existing ``except OSError`` cleanup paths don't silently
+    swallow a lost coordinator as routine connection noise.
+    """
 
 
 # ---------------------------------------------------------------------------
@@ -131,12 +156,10 @@ class SharedStaticSource(ChunkSource):
         if self._shm is None:
             return
         self._ctr = self._lo_view = self._hi_view = None  # release buffer views
-        self._shm.close()
         if self._owner:
-            try:
-                self._shm.unlink()
-            except FileNotFoundError:  # pragma: no cover - already unlinked
-                pass
+            unlink_block(self._shm)
+        else:
+            self._shm.close()
         self._shm = None
 
     def __enter__(self):
@@ -182,7 +205,17 @@ class SharedStaticSource(ChunkSource):
 # ---------------------------------------------------------------------------
 
 
-def _foreman_serve(address: str, ready, inner_factory, calc_delay_s: float):
+# foreman progress block layout (written by the serving coordinator, read by
+# a replacement after a coordinator death; created/owned by the owner process):
+#   int64   [0]   served    — chunks handed out (== next source step)
+#   int64   [8]   lp        — highest iteration bound served (chunks tile [0, lp))
+#   int64   [16]  gen       — coordinator generation (bumped per restart)
+#   float64 [24]  prev_raw  — recursion previous-chunk state (CriticalSectionSource)
+_PROGRESS_BYTES = 32
+
+
+def _foreman_serve(address: str, ready, inner_factory, calc_delay_s: float,
+                   progress_name: Optional[str] = None):
     """Coordinator main: host the inner source, serve claims over the pipe.
 
     One handler thread per connected worker (the inner sources are already
@@ -190,11 +223,31 @@ def _foreman_serve(address: str, ready, inner_factory, calc_delay_s: float):
     plus the per-claim round-trip, which is the point).  Runs until a
     ``("shutdown",)`` message arrives; daemonized, so an owner crash cannot
     strand it.
+
+    With a progress block, every served claim is recorded in shared memory
+    *before* its reply is sent — at-most-once service: a coordinator death
+    between the progress write and the reply loses that chunk (a coverage
+    gap the executor's repair pass fills) but can never double-serve a
+    range, because the replacement coordinator ``fast_forward``s its fresh
+    inner source from the recorded (served, lp, prev_raw) at startup.
     """
     inner = inner_factory()
     if calc_delay_s and hasattr(inner, "calc_delay_s"):
         inner.calc_delay_s = calc_delay_s
+    prog = prog_i = prog_f = None
+    prog_lock = threading.Lock()
+    if progress_name is not None:
+        prog = attach_block(progress_name)
+        prog_i = int64_field(prog, 0, 3)
+        prog_f = float64_field(prog, 24, 1)
+        served, lp = int(prog_i[0]), int(prog_i[1])
+        if served > 0 and hasattr(inner, "fast_forward"):
+            inner.fast_forward(served, lp, float(prog_f[0]))
     stop = threading.Event()
+    try:
+        os.unlink(address)  # stale socket from a killed predecessor
+    except FileNotFoundError:
+        pass
     listener = Listener(address, family="AF_UNIX")
     ready.set()
 
@@ -207,6 +260,13 @@ def _foreman_serve(address: str, ready, inner_factory, calc_delay_s: float):
             op = msg[0]
             if op == "claim":
                 c = inner.claim(msg[1])
+                if c is not None and prog_i is not None:
+                    with prog_lock:  # durable BEFORE the reply leaves
+                        if c.step + 1 > prog_i[0]:
+                            prog_i[0] = c.step + 1
+                        if c.hi > prog_i[1]:
+                            prog_i[1] = c.hi
+                        prog_f[0] = float(getattr(inner, "_prev_raw", 0.0))
                 conn.send(None if c is None else (c.step, c.lo, c.hi))
             elif op == "report":  # one-way: feedback must not cost a round-trip
                 _, step, lo, hi, worker, elapsed, overhead = msg
@@ -247,6 +307,17 @@ class ForemanSource(ChunkSource):
 
     ``serialized`` reflects the *inner* source's timing semantics: True for
     cca/dca_sync (the calculation happens in the foreman's critical path).
+
+    ``supervise=True`` makes the coordinator self-healing: a progress block
+    in shared memory records every served claim before its reply leaves, a
+    supervisor thread in the owner process detects coordinator death and
+    restarts it on the same socket address, and the replacement
+    ``fast_forward``s a fresh inner source from the progress block — no
+    range served twice, at most one in-flight chunk lost per death (a
+    coverage gap the distributed executor repairs).  Requests from any
+    process then retry with ``retry`` (a ``BackoffPolicy``) until
+    ``deadline_s``; an unsupervised source raises ``CoordinatorLostError``
+    on the first dead-coordinator symptom instead.
     """
 
     def __init__(
@@ -257,10 +328,21 @@ class ForemanSource(ChunkSource):
         calc_delay_s: float = 0.0,
         ctx=None,
         technique: str = "?",
+        supervise: bool = False,
+        retry: Optional[BackoffPolicy] = None,
+        deadline_s: float = 15.0,
     ):
         ctx = ctx if ctx is not None else default_context()
+        self._ctx = ctx
         self.serialized = serialized
         self.technique = technique
+        self._inner_factory = inner_factory
+        self._calc_delay_s = calc_delay_s
+        self._supervised = bool(supervise)
+        self._retry = retry if retry is not None else BackoffPolicy(
+            base_s=0.005, factor=2.0, cap_s=0.25
+        )
+        self._deadline_s = float(deadline_s)
         self._address = os.path.join(
             tempfile.gettempdir(), f"repro-foreman-{os.getpid()}-{uuid.uuid4().hex[:8]}.sock"
         )
@@ -268,16 +350,76 @@ class ForemanSource(ChunkSource):
         self._conn = None
         self._conn_pid = None
         self._lock = threading.Lock()
-        ready = ctx.Event()
-        self._proc = ctx.Process(
+        self.restarts = 0
+        self._progress_shm = None
+        self._prog_i = self._prog_f = None
+        if self._supervised:
+            self._progress_shm = create_block(_PROGRESS_BYTES)
+            self._prog_i = int64_field(self._progress_shm, 0, 3)
+            self._prog_f = float64_field(self._progress_shm, 24, 1)
+        self._spawn()
+        self._closing = threading.Event()
+        self._restart_lock = threading.Lock()
+        self._supervisor = None
+        if self._supervised:
+            self._supervisor = threading.Thread(
+                target=self._supervise_loop, name="foreman-supervisor", daemon=True
+            )
+            self._supervisor.start()
+
+    def _spawn(self):
+        ready = self._ctx.Event()
+        self._proc = self._ctx.Process(
             target=_foreman_serve,
-            args=(self._address, ready, inner_factory, calc_delay_s),
+            args=(
+                self._address,
+                ready,
+                self._inner_factory,
+                self._calc_delay_s,
+                None if self._progress_shm is None else self._progress_shm.name,
+            ),
             daemon=True,
         )
         self._proc.start()
         if not ready.wait(timeout=30):  # pragma: no cover - startup hang
             self._proc.terminate()
             raise RuntimeError("foreman process failed to start")
+
+    # -- supervision -----------------------------------------------------------
+
+    @property
+    def coordinator_pid(self) -> Optional[int]:
+        """The live coordinator's pid (owner only) — the chaos controller's
+        kill target."""
+        return None if self._proc is None else self._proc.pid
+
+    def progress(self) -> dict:
+        """Snapshot of the shared progress block (supervised owner only)."""
+        if self._prog_i is None:
+            raise ValueError("progress tracking needs supervise=True")
+        return {
+            "served": int(self._prog_i[0]),
+            "lp": int(self._prog_i[1]),
+            "gen": int(self._prog_i[2]),
+            "prev_raw": float(self._prog_f[0]),
+        }
+
+    def _supervise_loop(self):
+        while not self._closing.wait(0.05):
+            proc = self._proc
+            if proc is None or proc.is_alive():
+                continue
+            with self._restart_lock:
+                if self._closing.is_set():
+                    return
+                if self._proc is not None and not self._proc.is_alive():
+                    self._restart()
+
+    def _restart(self):
+        """Replace a dead coordinator (called with ``_restart_lock`` held)."""
+        self._prog_i[2] += 1  # generation: replacement serves under gen+1
+        self.restarts += 1
+        self._spawn()
 
     # -- per-process connection ------------------------------------------------
 
@@ -287,11 +429,49 @@ class ForemanSource(ChunkSource):
             self._conn_pid = os.getpid()
         return self._conn
 
+    def _drop_connection(self):
+        if self._conn is not None:
+            try:
+                self._conn.close()
+            except OSError:  # pragma: no cover
+                pass
+        self._conn = None
+
     def _request(self, msg, reply: bool):
-        with self._lock:
-            conn = self._connection()
-            conn.send(msg)
-            return conn.recv() if reply else None
+        """One request round-trip, surviving coordinator death.
+
+        Dead-coordinator symptoms (EOF on recv, broken pipe on send,
+        connection refused / missing socket on connect) retry against the
+        supervisor's replacement with bounded exponential backoff until
+        ``deadline_s``; unsupervised sources convert the first symptom to
+        ``CoordinatorLostError`` — typed, so callers distinguish "foreman
+        gone" from programming errors.  A claim lost in flight is *not*
+        re-served by the replacement (the progress block already recorded
+        it); the retried request simply claims the next chunk.
+        """
+        attempt = 0
+        deadline = time.monotonic() + self._deadline_s if self._supervised else None
+        while True:
+            try:
+                with self._lock:
+                    conn = self._connection()
+                    conn.send(msg)
+                    return conn.recv() if reply else None
+            except (EOFError, OSError) as e:
+                with self._lock:
+                    self._drop_connection()
+                if deadline is None:
+                    raise CoordinatorLostError(
+                        f"foreman at {self._address} is gone "
+                        f"({type(e).__name__}); supervise=True enables restart"
+                    ) from e
+                attempt += 1
+                if time.monotonic() >= deadline:
+                    raise CoordinatorLostError(
+                        f"foreman at {self._address} did not come back within "
+                        f"{self._deadline_s:.1f}s ({attempt} attempts)"
+                    ) from e
+                self._retry.sleep(attempt)
 
     # -- protocol ----------------------------------------------------------------
 
@@ -315,15 +495,25 @@ class ForemanSource(ChunkSource):
     # -- lifecycle -----------------------------------------------------------
 
     def close(self):
-        """Owner: stop the coordinator and remove the socket.  Non-owners just
-        drop their connection."""
+        """Owner: stop the supervisor, then the coordinator, and remove the
+        socket.  Non-owners just drop their connection."""
         if self._conn is not None and self._conn_pid == os.getpid():
             try:
                 self._conn.close()
             except OSError:  # pragma: no cover
                 pass
         self._conn = None
-        if not self._owner or self._proc is None:
+        if not self._owner:
+            return
+        if self._supervisor is not None:
+            self._closing.set()  # before shutdown: no restart of what we stop
+            self._supervisor.join(timeout=5)
+            self._supervisor = None
+        if self._progress_shm is not None:
+            prog, self._progress_shm = self._progress_shm, None
+            self._prog_i = self._prog_f = None
+            unlink_block(prog)
+        if self._proc is None:
             return
         try:
             ctl = Client(self._address, family="AF_UNIX")
@@ -355,17 +545,28 @@ class ForemanSource(ChunkSource):
             "address": self._address,
             "serialized": self.serialized,
             "technique": self.technique,
+            "supervised": self._supervised,
+            "retry": self._retry,
+            "deadline_s": self._deadline_s,
         }
 
     def __setstate__(self, state):
         self._address = state["address"]
         self.serialized = state["serialized"]
         self.technique = state["technique"]
+        self._supervised = state.get("supervised", False)
+        self._retry = state.get("retry") or BackoffPolicy(
+            base_s=0.005, factor=2.0, cap_s=0.25
+        )
+        self._deadline_s = state.get("deadline_s", 15.0)
         self._owner = False
         self._proc = None
         self._conn = None
         self._conn_pid = None
         self._lock = threading.Lock()
+        self._supervisor = None
+        self._progress_shm = None
+        self._prog_i = self._prog_f = None
 
 
 # ---------------------------------------------------------------------------
@@ -381,6 +582,9 @@ def process_source_for(
     ctx=None,
     warn: bool = True,
     feedback=None,
+    supervise: bool = False,
+    retry: Optional[BackoffPolicy] = None,
+    deadline_s: float = 15.0,
 ) -> ChunkSource:
     """placement="process" analogue of ``source_for``.
 
@@ -388,6 +592,9 @@ def process_source_for(
     coordinator at all); every other effective mode (``cca``, ``dca_sync``,
     ``adaptive``, ``select``) needs a live recursion or feedback state and is
     hosted by a foreman process — CCA's centralized chunk server, for real.
+    ``supervise``/``retry``/``deadline_s`` configure the foreman's
+    self-healing path (ignored for the coordinator-free DCA placement,
+    which has nothing to supervise — the paper's resilience argument).
     """
     if feedback is not None:
         raise NotImplementedError(
@@ -412,4 +619,7 @@ def process_source_for(
         calc_delay_s=calc_delay_s,
         ctx=ctx,
         technique=technique,
+        supervise=supervise,
+        retry=retry,
+        deadline_s=deadline_s,
     )

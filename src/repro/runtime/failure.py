@@ -12,15 +12,64 @@ recovery path is *tested*, not aspirational (tests/test_fault_tolerance.py).
 
 from __future__ import annotations
 
+import dataclasses
 import logging
+import random
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, List, Optional
 
 from repro.checkpoint import CheckpointStore, latest_step, restore_checkpoint
 
 log = logging.getLogger(__name__)
 
-__all__ = ["FaultInjector", "FaultTolerantRunner"]
+__all__ = ["BackoffPolicy", "FaultInjector", "FaultTolerantRunner"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential, jittered, capped retry backoff — one policy, every retrier.
+
+    ``delay(attempt)`` for attempt 1, 2, ... is ``base_s * factor**(attempt-1)``
+    capped at ``cap_s``, then scaled by a deterministic jitter in
+    ``[1 - jitter, 1 + jitter]`` drawn from ``Random(f"{seed}:{attempt}")`` — no
+    hidden RNG state, so the schedule is reproducible (tests pin it) and the
+    policy pickles freely (it travels to worker processes inside
+    ``ForemanSource``).  Used by ``FaultTolerantRunner`` (checkpoint-restart
+    replay) and the ``ForemanSource`` coordinator-retry path (dist/sources.py).
+    """
+
+    base_s: float = 0.01
+    factor: float = 2.0
+    cap_s: float = 1.0
+    jitter: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.base_s < 0 or self.cap_s < 0:
+            raise ValueError("base_s/cap_s must be >= 0")
+        if self.factor < 1.0:
+            raise ValueError("factor must be >= 1 (backoff must not shrink)")
+        if not 0.0 <= self.jitter < 1.0:
+            raise ValueError("jitter must be in [0, 1)")
+
+    def delay(self, attempt: int) -> float:
+        """Sleep before retry ``attempt`` (1-based)."""
+        if attempt < 1:
+            raise ValueError("attempt is 1-based")
+        d = min(self.base_s * self.factor ** (attempt - 1), self.cap_s)
+        if self.jitter:
+            d *= 1.0 + self.jitter * random.Random(f"{self.seed}:{attempt}").uniform(-1, 1)
+        return d
+
+    def schedule(self, n: int) -> List[float]:
+        """The first ``n`` delays — the full sleep schedule, for tests."""
+        return [self.delay(a) for a in range(1, n + 1)]
+
+    def sleep(self, attempt: int, _sleep: Optional[Callable[[float], None]] = None) -> float:
+        """Sleep ``delay(attempt)`` (injectable sleeper for tests); returns it."""
+        d = self.delay(attempt)
+        (_sleep if _sleep is not None else time.sleep)(d)
+        return d
 
 
 class FaultInjector:
@@ -49,6 +98,8 @@ class FaultTolerantRunner:
         scheduler=None,  # optional DLSBatchScheduler (state = one int)
         max_retries: int = 3,
         injector: Optional[FaultInjector] = None,
+        backoff: Optional[BackoffPolicy] = None,
+        _sleep: Optional[Callable[[float], None]] = None,
     ):
         self.step_fn = step_fn
         self.store = store
@@ -57,6 +108,8 @@ class FaultTolerantRunner:
         self.scheduler = scheduler
         self.max_retries = max_retries
         self.injector = injector
+        self.backoff = backoff if backoff is not None else BackoffPolicy()
+        self._sleep = _sleep
         self.recoveries = 0
 
     def _restore(self):
@@ -92,7 +145,7 @@ class FaultTolerantRunner:
                             step, e, retries, self.max_retries)
                 if retries > self.max_retries:
                     raise
-                time.sleep(0.01 * retries)  # backoff (placeholder for real re-slice)
+                self.backoff.sleep(retries, self._sleep)
                 self.store.wait()
                 step, state = self._restore()
                 # rewind the metric history with the state: replayed steps

@@ -40,6 +40,8 @@ conformance suite (tests/test_conformance.py).
 
 from __future__ import annotations
 
+import os
+import signal
 import time
 from typing import Callable, Optional
 
@@ -53,8 +55,20 @@ __all__ = ["ScenarioInjector", "InjectedSource", "inject_source"]
 #   float64 [8]        delay_calc_s
 #   float64 [16]       s_max   — normalization anchor (fastest table speed)
 #   float64 [24 ..]    times   [P, kmax]      (+inf padded)
-#   float64 [.. end]   speeds  [P, kmax + 1]  (final value repeated)
+#   float64 [.. ..]    speeds  [P, kmax + 1]  (final value repeated)
+#   float64 [.. ..]    faults  [F, 4]         (kind_code, pe, t, duration_s)
+#   int64   [.. end]   fired   [F]            (0 = pending, 1 = fired)
 _HDR_BYTES = 24
+
+# fault kind codes in the shared table (scenarios' FAULT_KINDS, in order);
+# the fired flags live in shm so a *respawned* worker re-attaching to the
+# same PE slot sees already-fired faults and does not re-fire them.
+_FAULT_CODES = {"crash": 1, "hang": 2, "stall": 3, "coordinator_kill": 4}
+
+# stall sleeps in short increments so it can keep stamping its heartbeat
+# (a stalled worker is alive-but-slow, not dead); hang never ticks, which
+# is precisely what the executor's heartbeat staleness check must catch.
+_STALL_TICK_S = 0.05
 
 
 class ScenarioInjector:
@@ -70,29 +84,41 @@ class ScenarioInjector:
         from repro.dist.shm import create_block
 
         times, speeds = scenario.padded_tables()
+        faults = tuple(getattr(scenario, "faults", ()))
         self.scenario_name = name if name is not None else scenario.name
         self.P = int(times.shape[0])
         self.kmax = int(times.shape[1])
+        self.F = len(faults)
         self._owner = True
         self._shm = create_block(
-            _HDR_BYTES + 8 * (self.P * self.kmax + self.P * (self.kmax + 1))
+            _HDR_BYTES
+            + 8 * (self.P * self.kmax + self.P * (self.kmax + 1))
+            + 8 * (4 * self.F + self.F)
         )
         self._map_views()
         self._vals[0] = float(scenario.delay_calc_s)
         self._vals[1] = scenario.max_speed
         self._times[:] = times
         self._speeds[:] = speeds
+        for i, f in enumerate(faults):
+            self._faults[i, 0] = _FAULT_CODES[f.kind]
+            self._faults[i, 1] = float(f.pe)
+            self._faults[i, 2] = float(f.t)
+            self._faults[i, 3] = float(f.duration_s)
 
     def _map_views(self):
         from repro.dist.shm import float64_field, int64_field
 
-        P, kmax = self.P, self.kmax
+        P, kmax, F = self.P, self.kmax, self.F
         self._t0 = int64_field(self._shm, 0, 1)
         self._vals = float64_field(self._shm, 8, 2)
         self._times = float64_field(self._shm, _HDR_BYTES, P * kmax).reshape(P, kmax)
         self._speeds = float64_field(
             self._shm, _HDR_BYTES + 8 * P * kmax, P * (kmax + 1)
         ).reshape(P, kmax + 1)
+        off = _HDR_BYTES + 8 * (P * kmax + P * (kmax + 1))
+        self._faults = float64_field(self._shm, off, 4 * F).reshape(F, 4)
+        self._fired = int64_field(self._shm, off + 8 * 4 * F, F)
 
     def __repr__(self):
         return (
@@ -139,13 +165,96 @@ class ScenarioInjector:
         """Stretch factor >= 1 for a chunk starting now: ``s_max / speed``."""
         return float(self._vals[1]) / self.speed(worker)
 
+    # -- faults ----------------------------------------------------------------
+
+    @property
+    def has_faults(self) -> bool:
+        return self.F > 0
+
+    def worker_has_faults(self, worker: int) -> bool:
+        """Does ``worker``'s PE slot have any crash/hang/stall rows?"""
+        pe = worker % self.P
+        return any(
+            self._faults[i, 0] != _FAULT_CODES["coordinator_kill"]
+            and int(self._faults[i, 1]) == pe
+            for i in range(self.F)
+        )
+
+    def fired(self, idx: int) -> bool:
+        return bool(self._fired[idx])
+
+    def mark_fired(self, idx: int) -> None:
+        self._fired[idx] = 1
+
+    def due_coordinator_fault(self) -> Optional[int]:
+        """Index of an unfired ``coordinator_kill`` whose time has come, or
+        None.  Polled parent-side (the executor's chaos thread owns the
+        foreman pid); the caller marks it fired *before* killing so a
+        restarted coordinator is not immediately re-killed."""
+        t = self.now()
+        for i in range(self.F):
+            if (
+                not self._fired[i]
+                and self._faults[i, 0] == _FAULT_CODES["coordinator_kill"]
+                and self._faults[i, 2] <= t
+            ):
+                return i
+        return None
+
+    def poll_faults(self, worker: int, tick: Optional[Callable[[], None]] = None) -> None:
+        """Fire any due worker fault for ``worker``'s PE slot.  Called at
+        chunk start (chunk-granular, like speed sampling).  Only the worker
+        occupying a PE slot polls that slot's rows, so plain check-then-set
+        on the shared fired flag is race-free; the flag persists in shm so a
+        respawned replacement does not re-fire the fault.
+
+        * ``crash`` — SIGKILL self (flag set first: the kill is immediate).
+        * ``hang``  — sleep forever *without* ticking the heartbeat; only
+          the executor's staleness detector ends this worker.
+        * ``stall`` — sleep ``duration_s`` in short increments, ticking the
+          heartbeat each one, then return and keep working.
+        """
+        pe = worker % self.P
+        t = self.now()
+        for i in range(self.F):
+            code = int(self._faults[i, 0])
+            if (
+                self._fired[i]
+                or code == _FAULT_CODES["coordinator_kill"]
+                or int(self._faults[i, 1]) != pe
+                or self._faults[i, 2] > t
+            ):
+                continue
+            self._fired[i] = 1
+            if code == _FAULT_CODES["crash"]:
+                os.kill(os.getpid(), signal.SIGKILL)
+            elif code == _FAULT_CODES["hang"]:
+                while True:  # pragma: no cover - ended by SIGTERM/SIGKILL
+                    time.sleep(3600.0)
+            elif code == _FAULT_CODES["stall"]:
+                end = time.monotonic() + float(self._faults[i, 3])
+                while (left := end - time.monotonic()) > 0:
+                    time.sleep(min(left, _STALL_TICK_S))
+                    if tick is not None:
+                        tick()
+
     # -- wrappers --------------------------------------------------------------
 
-    def bind(self, fn: Callable[[int, int], None], worker: int) -> "_StretchedFn":
-        """Per-worker workload wrapper: each ``fn(lo, hi)`` call samples the
-        worker's slowdown at chunk start and stretches the chunk's real
-        execution time by it (picklable when ``fn`` is)."""
-        return _StretchedFn(self, fn, worker)
+    def bind(
+        self,
+        fn: Callable[[int, int], None],
+        worker: int,
+        tick: Optional[Callable[[], None]] = None,
+    ) -> Callable[[int, int], None]:
+        """Per-worker workload wrapper: each ``fn(lo, hi)`` call polls the
+        worker's due faults, then samples the worker's slowdown at chunk
+        start and stretches the chunk's real execution time by it (picklable
+        when ``fn`` and ``tick`` are; executors bind worker-side, where
+        ``tick`` is a local heartbeat closure)."""
+        wrapped: Callable[[int, int], None] = _StretchedFn(self, fn, worker)
+        if self.worker_has_faults(worker):
+            wrapped = _FaultyFn(self, wrapped, worker, tick)
+        return wrapped
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -154,12 +263,13 @@ class ScenarioInjector:
         if self._shm is None:
             return
         self._t0 = self._vals = self._times = self._speeds = None
-        self._shm.close()
+        self._faults = self._fired = None
         if self._owner:
-            try:
-                self._shm.unlink()
-            except FileNotFoundError:  # pragma: no cover - already unlinked
-                pass
+            from repro.dist.shm import unlink_block
+
+            unlink_block(self._shm)
+        else:
+            self._shm.close()
         self._shm = None
 
     def __enter__(self):
@@ -183,6 +293,7 @@ class ScenarioInjector:
             "name": self._shm.name,
             "P": self.P,
             "kmax": self.kmax,
+            "F": self.F,
             "scenario_name": self.scenario_name,
         }
 
@@ -192,6 +303,7 @@ class ScenarioInjector:
         self.scenario_name = state["scenario_name"]
         self.P = state["P"]
         self.kmax = state["kmax"]
+        self.F = state.get("F", 0)
         self._owner = False
         self._shm = attach_block(state["name"])
         self._map_views()
@@ -226,6 +338,34 @@ class _StretchedFn:
         self.fn(lo, hi)
         if stretch > 1.0:
             time.sleep((time.perf_counter() - t0) * (stretch - 1.0))
+
+
+class _FaultyFn:
+    """``fn(lo, hi)`` preceded by a fault poll at chunk start.
+
+    A crash fires *before* the chunk executes: the chunk was claimed (and,
+    under ``DistributedExecutor``, leased) but produced no record — exactly
+    the lost-lease shape the executor's reclamation paths must repair.  The
+    wrapper composes over ``_StretchedFn`` so slowdowns and faults stack.
+    """
+
+    __slots__ = ("injector", "fn", "worker", "tick")
+
+    def __init__(self, injector: ScenarioInjector, fn, worker: int, tick=None):
+        self.injector = injector
+        self.fn = fn
+        self.worker = worker
+        self.tick = tick
+
+    def __getstate__(self):
+        return (self.injector, self.fn, self.worker, self.tick)
+
+    def __setstate__(self, state):
+        self.injector, self.fn, self.worker, self.tick = state
+
+    def __call__(self, lo: int, hi: int) -> None:
+        self.injector.poll_faults(self.worker, self.tick)
+        self.fn(lo, hi)
 
 
 class InjectedSource(ChunkSource):

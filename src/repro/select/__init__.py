@@ -12,9 +12,11 @@ boundaries as the live scenario drifts.
 """
 
 from .scenarios import (
+    FaultEvent,
     PerturbationScenario,
     ScenarioEstimator,
     SpeedProfile,
+    fault_suite,
     mixed_suite,
 )
 from .simas import (
@@ -26,9 +28,11 @@ from .simas import (
 )
 
 __all__ = [
+    "FaultEvent",
     "PerturbationScenario",
     "ScenarioEstimator",
     "SpeedProfile",
+    "fault_suite",
     "mixed_suite",
     "SELECTABLE",
     "SelectingSource",

@@ -29,6 +29,17 @@ tests/test_scenarios.py pins event == fast under every profile type).
 per-PE relative speeds from windowed per-iteration times, a calculation-delay
 estimate from the observed overheads, and optionally a trace-replay scenario
 (piecewise-constant speeds over time bins) for post-hoc analysis.
+
+Beyond slowdowns, a scenario can carry a **fault family**: timed
+``FaultEvent``s — ``crash`` (the PE's worker process is SIGKILLed),
+``hang`` (the worker stops claiming/committing), ``stall`` (pause, then
+resume) and ``coordinator_kill`` (the CCA foreman process dies) — freely
+composable with the speed/delay families above.  Faults are *execution*
+perturbations: the simulators ignore them (they model time, not process
+death), and ``runtime.inject.ScenarioInjector`` plus
+``dist.DistributedExecutor`` execute them against real processes
+(DESIGN.md Sec. 12).  ``fault_suite`` is the chaos acceptance suite, the
+fault analogue of ``mixed_suite``.
 """
 
 from __future__ import annotations
@@ -41,10 +52,54 @@ import numpy as np
 
 __all__ = [
     "SpeedProfile",
+    "FaultEvent",
     "PerturbationScenario",
     "ScenarioEstimator",
     "mixed_suite",
+    "fault_suite",
 ]
+
+FAULT_KINDS = ("crash", "hang", "stall", "coordinator_kill")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One timed fault on the shared run clock.
+
+    ``kind`` picks the failure shape:
+
+    * ``crash``            — SIGKILL the PE's worker process at time ``t``;
+    * ``hang``             — the worker stops claiming/committing (alive but
+                             silent — the shape a heartbeat must catch);
+    * ``stall``            — the worker pauses for ``duration_s`` seconds,
+                             then resumes (transient, must NOT be killed);
+    * ``coordinator_kill`` — SIGKILL the CCA coordinator (foreman) process;
+                             ``pe`` is ignored.  A no-op for DCA sources,
+                             which have no coordinator to lose — the paper's
+                             decentralization argument as a fault event.
+
+    ``t`` is seconds on the scenario run clock (the same clock the speed
+    windows use).  Worker faults fire once, at the first chunk boundary at
+    or after ``t`` (chunk-granular, like every other scenario effect).
+    """
+
+    kind: str
+    t: float
+    pe: int = -1
+    duration_s: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"kind must be one of {FAULT_KINDS}, got {self.kind!r}")
+        if self.t < 0:
+            raise ValueError("fault time t must be >= 0")
+        if self.kind == "stall":
+            if self.duration_s <= 0:
+                raise ValueError("stall faults need duration_s > 0")
+        elif self.duration_s:
+            raise ValueError(f"duration_s only applies to stall faults, not {self.kind}")
+        if self.kind != "coordinator_kill" and self.pe < 0:
+            raise ValueError(f"{self.kind} faults need a target pe >= 0")
 
 
 class SpeedProfile:
@@ -130,6 +185,7 @@ class PerturbationScenario:
         name: str,
         profiles: Sequence[SpeedProfile],
         delay_calc_s: float = 0.0,
+        faults: Sequence[FaultEvent] = (),
     ):
         if not profiles:
             raise ValueError("need at least one PE profile")
@@ -138,6 +194,15 @@ class PerturbationScenario:
         self.name = name
         self.profiles = tuple(profiles)
         self.delay_calc_s = float(delay_calc_s)
+        self.faults = tuple(faults)
+        for f in self.faults:
+            if not isinstance(f, FaultEvent):
+                raise TypeError(f"faults must be FaultEvents, got {type(f).__name__}")
+            if f.kind != "coordinator_kill" and f.pe >= len(self.profiles):
+                raise ValueError(
+                    f"fault targets pe {f.pe} but the scenario has only "
+                    f"{len(self.profiles)} PE profiles"
+                )
         P = len(self.profiles)
         kmax = max(len(p.times) for p in self.profiles)
         # +inf padding: padded breakpoints never count as <= t, and the speed
@@ -154,9 +219,37 @@ class PerturbationScenario:
 
     def __repr__(self):
         kind = "static" if self.static else "time-varying"
+        fstr = f", {len(self.faults)} fault(s)" if self.faults else ""
         return (
             f"PerturbationScenario({self.name!r}, P={self.P}, {kind}, "
-            f"delay={self.delay_calc_s * 1e6:.0f}us)"
+            f"delay={self.delay_calc_s * 1e6:.0f}us{fstr})"
+        )
+
+    @property
+    def has_faults(self) -> bool:
+        return bool(self.faults)
+
+    def worker_faults(self, pe: Optional[int] = None) -> Tuple[FaultEvent, ...]:
+        """Faults targeting worker PEs (all of them, or just PE ``pe``)."""
+        return tuple(
+            f
+            for f in self.faults
+            if f.kind != "coordinator_kill" and (pe is None or f.pe == pe)
+        )
+
+    def coordinator_faults(self) -> Tuple[FaultEvent, ...]:
+        return tuple(f for f in self.faults if f.kind == "coordinator_kill")
+
+    def with_faults(
+        self, *faults: FaultEvent, name: Optional[str] = None
+    ) -> "PerturbationScenario":
+        """A copy with ``faults`` appended — the fault family composes with
+        whatever speed/delay families this scenario already carries."""
+        return PerturbationScenario(
+            name if name is not None else self.name,
+            self.profiles,
+            self.delay_calc_s,
+            faults=self.faults + faults,
         )
 
     @property
@@ -462,4 +555,34 @@ def mixed_suite(P: int, horizon_s: float) -> List[PerturbationScenario]:
             delay_calc_s=1e-5,
             name="correlated",
         ),
+    ]
+
+
+def fault_suite(P: int, horizon_s: float) -> List[PerturbationScenario]:
+    """The chaos acceptance suite: one scenario per fault kind, each composed
+    with at least one slowdown family (speed heterogeneity or calculation
+    delay), scaled to a run of roughly ``horizon_s`` seconds.  Fault times
+    sit early enough in the run that detection + recovery happen inside it.
+    """
+    if P < 2:
+        raise ValueError("fault scenarios need P >= 2 (a survivor must remain)")
+    h = float(horizon_s)
+    return [
+        # a statically slow PE *and* a mid-run worker crash
+        PerturbationScenario.variable(
+            P, slow_pes=[P - 1], factor=0.5, name="crashy"
+        ).with_faults(FaultEvent("crash", t=0.25 * h, pe=1)),
+        # a calculation delay *and* a worker that silently stops claiming
+        PerturbationScenario.constant(
+            P, delay_calc_s=1e-4, name="hangy"
+        ).with_faults(FaultEvent("hang", t=0.25 * h, pe=min(2, P - 1))),
+        # a bursty slowdown *and* a transient pause on another PE
+        PerturbationScenario.bursty(
+            P, pe=1, windows=[(0.2 * h, 0.6 * h)], factor=0.5, name="stally"
+        ).with_faults(FaultEvent("stall", t=0.2 * h, pe=0, duration_s=0.25 * h)),
+        # a calculation delay *and* the coordinator dying mid-run — the
+        # paper's decentralization argument restated as a survival property
+        PerturbationScenario.constant(
+            P, delay_calc_s=1e-4, name="coordinator_down"
+        ).with_faults(FaultEvent("coordinator_kill", t=0.3 * h)),
     ]

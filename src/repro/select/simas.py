@@ -225,6 +225,8 @@ class SelectingSource(ChunkSource):
 
     def claim(self, worker: int = 0) -> Optional[Chunk]:
         with self._lock:
+            if self._consumed >= self.params.N:
+                return None  # drained (possibly via fast_forward to lp == N)
             c = self._inner.claim(worker)
             if c is None:
                 return None
@@ -249,6 +251,24 @@ class SelectingSource(ChunkSource):
 
     def drained(self) -> bool:
         return self._consumed >= self.params.N
+
+    def fast_forward(self, step: int, lp: int, prev_raw: float = 0.0) -> None:
+        """Resume-after-restart re-seed (see ``CriticalSectionSource``): the
+        inner StaticSource is rebuilt over exactly the un-served remainder —
+        the same structural move ``_reselect`` makes, so coverage stays
+        tiling-exact.  Estimator state restarts cold and re-learns from
+        subsequent reports (``prev_raw`` is ignored: the remainder rebuild
+        restarts the closed-form recursion, as at every re-selection)."""
+        with self._lock:
+            self._step = int(step)
+            self._consumed = int(lp)
+            self._base = int(lp)
+            remaining = self.params.N - int(lp)
+            if remaining > 0:
+                self._inner = StaticSource.build(
+                    self.technique, dataclasses.replace(self.params, N=remaining)
+                )
+            self._next_reselect = self._step + self._interval
 
     @property
     def claimed(self) -> int:

@@ -6,7 +6,13 @@ this as the per-test ceiling for everything else).
 The ``conformance`` marker gates the full cross-engine grid
 (tests/test_conformance.py): it spawns real worker processes per cell, so
 tier-1 runs only the unmarked smoke subset and the full grid runs in CI's
-dedicated conformance job (``--conformance`` or ``RUN_CONFORMANCE=1``)."""
+dedicated conformance job (``--conformance`` or ``RUN_CONFORMANCE=1``).
+
+The ``chaos`` marker gates the fault-scenario survival grid
+(tests/test_chaos_conformance.py) and the seeded fault-schedule fuzz suite
+(tests/test_chaos_fuzz.py) the same way (``--chaos`` / ``RUN_CHAOS=1``):
+every cell SIGKILLs real processes and waits out kill/respawn latency, so
+tier-1 keeps only the unmarked smoke subset."""
 
 import os
 import signal
@@ -24,18 +30,34 @@ def pytest_addoption(parser):
         help="run the full cross-engine conformance grid (slow: spawns "
         "worker processes per cell); RUN_CONFORMANCE=1 does the same",
     )
+    parser.addoption(
+        "--chaos",
+        action="store_true",
+        default=False,
+        help="run the chaos fault-scenario grid (slow: kills and respawns "
+        "real processes per cell); RUN_CHAOS=1 does the same",
+    )
+
+
+def _gate_enabled(config, option: str, env_var: str) -> bool:
+    env = os.environ.get(env_var, "").strip().lower()
+    return config.getoption(option) or env not in ("", "0", "false", "no")
 
 
 def pytest_collection_modifyitems(config, items):
-    env = os.environ.get("RUN_CONFORMANCE", "").strip().lower()
-    if config.getoption("--conformance") or env not in ("", "0", "false", "no"):
-        return
-    skip = pytest.mark.skip(
-        reason="full conformance grid: pass --conformance or RUN_CONFORMANCE=1"
-    )
-    for item in items:
-        if "conformance" in item.keywords:
-            item.add_marker(skip)
+    gates = [
+        ("conformance", "--conformance", "RUN_CONFORMANCE"),
+        ("chaos", "--chaos", "RUN_CHAOS"),
+    ]
+    for marker, option, env_var in gates:
+        if _gate_enabled(config, option, env_var):
+            continue
+        skip = pytest.mark.skip(
+            reason=f"full {marker} grid: pass {option} or {env_var}=1"
+        )
+        for item in items:
+            if marker in item.keywords:
+                item.add_marker(skip)
 
 
 @pytest.fixture(autouse=True)

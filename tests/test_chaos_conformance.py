@@ -1,0 +1,256 @@
+"""Chaos conformance: every fault scenario must be *survivable*, exactly.
+
+The survival contract, asserted per cell of the fault grid:
+
+* **Exact coverage** — ``executed_ranges()`` tiles [0, N) with no gap and no
+  overlap, no matter what was killed when.
+* **Exactly-once records** — scheduling steps are unique across records
+  (gap-repair records carry step -1 and are excluded: they are ranges the
+  scheduler never successfully assigned).
+* **No manual intervention** — ``DistributedExecutor.run`` returns by
+  itself: detection, reclamation, respawn, and coordinator restart are all
+  internal.
+* **Fault actually fired** — each cell asserts the failure evidence for its
+  fault type (a died/hung entry in ``failures``, a supervisor restart, a
+  fired flag), so a scenario that silently stopped injecting cannot rot the
+  suite green.
+
+Chunk-size-sequence identity is deliberately NOT asserted under faults: a
+restarted coordinator fast-forwards a fresh recursion and a reclaimed chunk
+re-executes under a parent record — coverage and exactly-once survive,
+byte-identical schedules do not (DESIGN.md Sec. 12).
+
+The ``chaos`` marker gates the full grid (``--chaos`` / ``RUN_CHAOS=1`` —
+each cell SIGKILLs real processes and waits out kill/respawn latency); the
+unmarked smoke subset keeps one crash cell and the thread-executor guard in
+tier-1.  The capstone test restates the paper's argument as a survival
+property: under coordinator faults DCA (no coordinator at all) must beat
+CCA (supervised foreman) by more than it does fault-free.
+"""
+
+import functools
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.executor import SelfSchedulingExecutor
+from repro.core.techniques import DLSParams
+from repro.dist import DistributedExecutor, ForemanSource
+from repro.dist.shm import attach_block, create_block, int64_field
+from repro.select import FaultEvent, PerturbationScenario, fault_suite
+
+pytestmark = pytest.mark.dist  # SIGALRM hard deadline via tests/conftest.py
+
+N, W = 3000, 4
+HORIZON_S = 1.0  # fault_suite event times scale with this
+ITER_SLEEP_S = 1e-3  # ~3s of serial work => faults land mid-run
+
+
+def _sleepy_hit(name, n, per_iter_s, lo, hi):
+    """Workload: mark the shared hit array, then sleep per-iteration cost so
+    the run lasts long enough for timed faults to fire mid-loop."""
+    shm = attach_block(name)
+    v = int64_field(shm, 0, n)
+    v[lo:hi] += 1  # ranges are disjoint per run: no cross-process race
+    del v
+    shm.close()
+    time.sleep((hi - lo) * per_iter_s)
+
+
+@pytest.fixture()
+def hits_block():
+    class _Block:
+        def __init__(self):
+            self.shm = None
+            self.n = 0
+
+        def alloc(self, n):
+            self.n = n
+            self.shm = create_block(8 * n)
+            return self
+
+        @property
+        def counts(self):
+            return int64_field(self.shm, 0, self.n)
+
+        @property
+        def name(self):
+            return self.shm.name
+
+    b = _Block()
+    yield b
+    if b.shm is not None:
+        b.shm.close()
+        b.shm.unlink()
+
+
+def _scenarios():
+    return {s.name: s for s in fault_suite(W, horizon_s=HORIZON_S)}
+
+
+def _assert_survival(ex, n):
+    rng = ex.executed_ranges()
+    assert rng.shape[0] > 0
+    assert rng[0, 0] == 0 and rng[-1, 1] == n
+    assert (rng[1:, 0] == rng[:-1, 1]).all(), "gap/overlap in executed ranges"
+    steps = [r.step for r in ex.records if r.step >= 0]
+    assert len(steps) == len(set(steps)), "a scheduling step was recorded twice"
+
+
+def _run_cell(scenario, mode, hits_block, tech="fac", respawn=True):
+    hits_block.alloc(N)
+    fn = functools.partial(_sleepy_hit, hits_block.name, N, ITER_SLEEP_S)
+    with DistributedExecutor(tech, DLSParams(N=N, P=W), mode=mode,
+                             scenario=scenario) as ex:
+        t = ex.run(fn, W, join_timeout=90, heartbeat_timeout_s=1.0,
+                   respawn=respawn)
+        _assert_survival(ex, N)
+        counts = np.array(hits_block.counts)
+        assert (counts >= 1).all(), "an iteration range was never executed"
+        return ex, t
+
+
+# ---------------------------------------------------------------------------
+# The full fault grid: every fault family x both process sources.  Every
+# fault_suite scenario composes its fault with a slowdown/delay family
+# (crashy: variable slowdown; hangy/coordinator_down: calc delay; stally:
+# bursty slowdown), so each cell exercises faults *and* perturbation.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_worker_crash_is_survived(mode, hits_block):
+    ex, _ = _run_cell(_scenarios()["crashy"], mode, hits_block)
+    assert any(f["kind"] == "died" for f in ex.failures), "crash never fired"
+    assert ex.respawns >= 1, "replacement worker must be spawned"
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_worker_hang_is_detected_by_heartbeat(mode, hits_block):
+    t0 = time.perf_counter()
+    ex, _ = _run_cell(_scenarios()["hangy"], mode, hits_block)
+    assert any(f["kind"] == "hung" for f in ex.failures), (
+        "the hang must be caught by heartbeat staleness, not the watchdog"
+    )
+    # live detection: well inside the 90s join watchdog
+    assert time.perf_counter() - t0 < 45
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_worker_stall_resumes_without_false_kill(mode, hits_block):
+    ex, _ = _run_cell(_scenarios()["stally"], mode, hits_block)
+    # a stalled worker ticks its heartbeat while paused: alive-but-slow must
+    # NOT be treated as dead (no kills, no respawns, no reclaims)
+    assert ex.failures == []
+    assert ex.respawns == 0
+
+
+@pytest.mark.chaos
+def test_coordinator_kill_is_survived_by_supervised_foreman(hits_block):
+    ex, _ = _run_cell(_scenarios()["coordinator_down"], "cca", hits_block)
+    assert isinstance(ex.source, ForemanSource)
+    assert ex.source._supervised, "coordinator faults must auto-enable supervision"
+    assert ex.source.restarts >= 1, "the supervisor must have restarted the foreman"
+
+
+@pytest.mark.chaos
+def test_coordinator_kill_is_a_noop_for_dca(hits_block):
+    """The paper's resilience pitch as an event: DCA has no coordinator to
+    lose, so the same fault schedule costs it nothing."""
+    ex, _ = _run_cell(_scenarios()["coordinator_down"], "dca", hits_block)
+    assert ex.failures == [] and ex.respawns == 0
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_composed_crash_plus_hang_under_slowdown(mode, hits_block):
+    """Fault families compose: one scenario carrying a crash AND a hang on
+    different PEs, on top of a variable slowdown."""
+    scen = PerturbationScenario.variable(
+        W, slow_pes=[3], factor=0.5, name="mayhem"
+    ).with_faults(
+        FaultEvent("crash", t=0.2 * HORIZON_S, pe=1),
+        FaultEvent("hang", t=0.3 * HORIZON_S, pe=2),
+    )
+    ex, _ = _run_cell(scen, mode, hits_block)
+    kinds = sorted(f["kind"] for f in ex.failures)
+    assert kinds == ["died", "hung"], f"both faults must fire, got {kinds}"
+
+
+@pytest.mark.chaos
+def test_dca_beats_cca_by_more_under_coordinator_faults(hits_block):
+    """The capstone: coordinator faults inflate CCA's makespan (detection +
+    restart + reconnect, paid per kill) but cannot touch DCA, which has
+    nothing to lose — the paper's decentralization argument restated as a
+    survival property.  Both inflations must also be *bounded* (the run
+    completes in bounded time, not just eventually).
+
+    Five kills amplify CCA's recovery cost well above scheduler noise (one
+    kill costs ~2% of the run, inside run-to-run jitter), and each of the
+    four (mode x faulted/clean) makespans is the best of two runs."""
+    base = PerturbationScenario.constant(W, delay_calc_s=1e-4, name="clean")
+    scen = base.with_faults(
+        *[
+            FaultEvent("coordinator_kill", t=f * HORIZON_S)
+            for f in (0.1, 0.2, 0.3, 0.4, 0.5)
+        ],
+        name="coordinator_storm",
+    )
+
+    def best_of_two(scenario, mode):
+        times = []
+        for _ in range(2):
+            ex, t = _run_cell(scen if scenario == "faulted" else base, mode,
+                              hits_block)
+            times.append(t)
+            hits_block.shm.close()
+            hits_block.shm.unlink()
+            hits_block.shm = None
+            if scenario == "faulted" and mode == "cca":
+                assert ex.source.restarts >= 3, "most kills must have landed"
+        return min(times)
+
+    t = {
+        (mode, kind): best_of_two(kind, mode)
+        for mode in ("dca", "cca")
+        for kind in ("faulted", "clean")
+    }
+    infl_dca = t["dca", "faulted"] / t["dca", "clean"]
+    infl_cca = t["cca", "faulted"] / t["cca", "clean"]
+    assert infl_dca < infl_cca, (
+        f"DCA inflation {infl_dca:.2f}x must undercut CCA {infl_cca:.2f}x"
+    )
+    assert infl_cca < 5.0, "recovery must be bounded, not merely eventual"
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 smoke subset (unmarked): one crash cell + the thread-executor guard
+# ---------------------------------------------------------------------------
+
+
+def test_smoke_crash_fault_dca(hits_block):
+    """One unmarked survival cell so tier-1 exercises the injection path."""
+    scen = PerturbationScenario.constant(W, name="smoke_crash").with_faults(
+        FaultEvent("crash", t=0.05, pe=1)
+    )
+    hits_block.alloc(600)
+    fn = functools.partial(_sleepy_hit, hits_block.name, 600, 1e-3)
+    with DistributedExecutor("fac", DLSParams(N=600, P=W), mode="dca",
+                             scenario=scen) as ex:
+        ex.run(fn, W, join_timeout=60, respawn=True)
+        _assert_survival(ex, 600)
+    assert any(f["kind"] == "died" for f in ex.failures)
+
+
+def test_thread_executor_rejects_fault_scenarios():
+    """Crash faults SIGKILL the worker's *process*; under threads that is
+    the whole executor — fault scenarios must be refused, not half-run."""
+    scen = PerturbationScenario.constant(2, name="x").with_faults(
+        FaultEvent("crash", t=0.1, pe=0)
+    )
+    with pytest.raises(ValueError, match="process-level workers"):
+        SelfSchedulingExecutor("fac", DLSParams(N=100, P=2), scenario=scen)

@@ -1,0 +1,204 @@
+"""Seeded chaos fuzz: random fault schedules vs. both process sources.
+
+Each draw builds a random kill/hang schedule from a seeded PRNG — a fault
+*kind* (SIGKILL or hang-until-watchdog), a *boundary* (just after ``claim``
+returned, mid-``execute``, or just before ``report`` commits), a victim
+step/iteration, and a scheduling technique — and runs it through
+``DistributedExecutor`` against both the shared-memory (DCA) and foreman
+(CCA) sources.  The invariants checked per draw are the same two that the
+whole PR hangs on:
+
+* **exact cover** — executed ranges tile [0, N) with no gap/overlap;
+* **exactly-once records** — no scheduling step recorded twice (repair
+  records, step -1, excluded).
+
+The boundary wrappers are picklable module-level classes (the worker
+processes re-import this module), guarded by flag files so each fault fires
+at most once per draw.  Seeds are fixed, so a failing draw reproduces with
+``pytest tests/test_chaos_fuzz.py -k <seed> --chaos``.
+
+Gated behind the ``chaos`` marker (``--chaos`` / ``RUN_CHAOS=1``): every
+draw kills at least one real process and pays watchdog latency.
+"""
+
+import functools
+import os
+import random
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.techniques import DLSParams
+from repro.dist import DistributedExecutor
+from repro.dist.shm import attach_block, create_block, int64_field
+
+pytestmark = [pytest.mark.dist, pytest.mark.chaos]
+
+TECHNIQUES = ("ss", "gss", "fac", "tss")
+BOUNDARIES = ("claim", "execute", "commit")
+KINDS = ("kill", "hang")
+
+
+def _fire(flag, kind):
+    """At-most-once fault at the current point in the worker process."""
+    if os.path.exists(flag):
+        return
+    open(flag, "w").close()
+    if kind == "kill":
+        os.kill(os.getpid(), signal.SIGKILL)
+    else:  # hang until the parent's watchdog terminates us
+        time.sleep(300)
+
+
+class _FaultAtClaim:
+    """Kill/hang right after the inner claim returned: the shared counter
+    (or foreman recursion) has advanced but no lease exists yet — the chunk
+    is lost unless the parent repairs the coverage gap."""
+
+    def __init__(self, inner, step, kind, flag):
+        self.inner = inner
+        self.step = step
+        self.kind = kind
+        self.flag = flag
+
+    @property
+    def serialized(self):
+        return self.inner.serialized
+
+    @property
+    def injects_delay(self):
+        return getattr(self.inner, "injects_delay", False)
+
+    def claim(self, worker=0):
+        c = self.inner.claim(worker)
+        if c is not None and c.step >= self.step:
+            _fire(self.flag, self.kind)
+        return c
+
+    def report(self, chunk, elapsed, overhead=0.0):
+        self.inner.report(chunk, elapsed, overhead)
+
+    def drained(self):
+        return self.inner.drained()
+
+    def close(self):
+        self.inner.close()
+
+
+class _FaultAtCommit(_FaultAtClaim):
+    """Kill/hang inside report(), i.e. after execution but before the worker
+    commits its record ring entry and releases the lease: recovery must
+    re-execute under the lease (at-least-once) while the records still tile
+    [0, N) exactly once."""
+
+    def claim(self, worker=0):
+        return self.inner.claim(worker)
+
+    def report(self, chunk, elapsed, overhead=0.0):
+        if chunk.step >= self.step:
+            _fire(self.flag, self.kind)
+        self.inner.report(chunk, elapsed, overhead)
+
+
+def _fault_in_execute(name, n, flag, kind, at, lo, hi):
+    """Kill/hang mid-execute: lease held, record not committed — the classic
+    reclaim-and-re-execute window."""
+    if lo <= at < hi:
+        _fire(flag, kind)
+    shm = attach_block(name)
+    v = int64_field(shm, 0, n)
+    v[lo:hi] += 1
+    del v
+    shm.close()
+
+
+def _plain_hit(name, n, lo, hi):
+    shm = attach_block(name)
+    v = int64_field(shm, 0, n)
+    v[lo:hi] += 1
+    del v
+    shm.close()
+
+
+def _assert_invariants(ex, n, counts):
+    rng = ex.executed_ranges()
+    assert rng.shape[0] > 0
+    assert rng[0, 0] == 0 and rng[-1, 1] == n, "ranges must span [0, N)"
+    assert (rng[1:, 0] == rng[:-1, 1]).all(), "gap/overlap in executed ranges"
+    steps = [r.step for r in ex.records if r.step >= 0]
+    assert len(steps) == len(set(steps)), "a scheduling step was recorded twice"
+    assert (counts >= 1).all(), "an iteration was never executed"
+
+
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+@pytest.mark.parametrize("seed", range(8))
+def test_random_fault_schedule_survives(seed, mode, tmp_path):
+    rng = random.Random(f"chaos:{seed}:{mode}")
+    n = rng.choice((800, 1500, 2500))
+    w = rng.choice((2, 4))
+    tech = rng.choice(TECHNIQUES)
+    boundary = rng.choice(BOUNDARIES)
+    kind = rng.choice(KINDS)
+    victim_step = rng.randrange(0, 6)
+    victim_iter = rng.randrange(0, n)
+    flag = str(tmp_path / f"fired-{seed}-{mode}")
+
+    shm = create_block(8 * n)
+    try:
+        if boundary == "execute":
+            fn = functools.partial(
+                _fault_in_execute, shm.name, n, flag, kind, victim_iter
+            )
+            wrap = None
+        else:
+            fn = functools.partial(_plain_hit, shm.name, n)
+            wrap_cls = _FaultAtClaim if boundary == "claim" else _FaultAtCommit
+            wrap = functools.partial(
+                wrap_cls, step=victim_step, kind=kind, flag=flag
+            )
+
+        ex = DistributedExecutor(tech, DLSParams(N=n, P=w), mode=mode)
+        if wrap is not None:
+            ex.source = wrap(ex.source)
+        try:
+            # hangs are released by the join watchdog; keep it tight so a
+            # hang draw costs ~8s, not the SIGALRM budget
+            ex.run(fn, w, join_timeout=8, respawn=(kind == "kill"))
+            counts = np.array(int64_field(shm, 0, n))
+            _assert_invariants(ex, n, counts)
+            assert os.path.exists(flag), (
+                f"draw(seed={seed}) never fired its fault "
+                f"({kind}@{boundary}, step={victim_step}, iter={victim_iter})"
+            )
+        finally:
+            ex.close()
+    finally:
+        shm.close()
+        shm.unlink()
+
+
+@pytest.mark.parametrize("mode", ["dca", "cca"])
+def test_repeated_claim_kills_never_double_record(mode, tmp_path):
+    """Adversarial repeat: a kill at the claim boundary on several draws of
+    the same source — the loss window where the counter advanced but no
+    lease exists.  Exactly-once must hold on every draw."""
+    for trial in range(3):
+        n = 1000
+        flag = str(tmp_path / f"k{mode}{trial}")
+        shm = create_block(8 * n)
+        try:
+            fn = functools.partial(_plain_hit, shm.name, n)
+            ex = DistributedExecutor("fac", DLSParams(N=n, P=4), mode=mode)
+            ex.source = _FaultAtClaim(ex.source, step=trial, kind="kill",
+                                      flag=flag)
+            try:
+                ex.run(fn, 4, join_timeout=60, respawn=True)
+                counts = np.array(int64_field(shm, 0, n))
+                _assert_invariants(ex, n, counts)
+            finally:
+                ex.close()
+        finally:
+            shm.close()
+            shm.unlink()

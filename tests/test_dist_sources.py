@@ -236,3 +236,68 @@ def test_shared_static_tables_are_read_not_copied():
         sched = src.materialize()
         assert np.array_equal(src._lo_view, sched.offsets)
         assert np.array_equal(src._hi_view, sched.offsets + sched.sizes)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator loss: typed error unsupervised, transparent healing supervised
+# ---------------------------------------------------------------------------
+
+
+def test_unsupervised_foreman_death_raises_typed_error():
+    """A dead coordinator must surface as CoordinatorLostError — a typed,
+    catchable symptom — not an opaque EOFError/ConnectionRefusedError, and
+    it must NOT be an OSError (generic cleanup paths would swallow it)."""
+    import os
+    import signal
+    import time
+
+    from repro.dist import CoordinatorLostError
+
+    params = DLSParams(N=2000, P=4)
+    src = process_source_for("fac", params, "cca")
+    try:
+        assert src.claim(0) is not None
+        os.kill(src.coordinator_pid, signal.SIGKILL)
+        time.sleep(0.1)
+        with pytest.raises(CoordinatorLostError):
+            for _ in range(10):  # first symptom may lag the kill
+                src.claim(0)
+                time.sleep(0.05)
+        assert not issubclass(CoordinatorLostError, OSError)
+    finally:
+        src.close()
+
+
+def test_supervised_foreman_restarts_and_serves_remainder():
+    """Supervision heals the coordinator in place: after a SIGKILL the
+    supervisor respawns it, the replacement fast-forwards from the shared
+    progress block, and the claim stream continues with no step served
+    twice and no range lost (at most the in-flight chunk, repaired by the
+    executor — none is in flight here)."""
+    import os
+    import signal
+    import time
+
+    N = 2000
+    params = DLSParams(N=N, P=4)
+    src = process_source_for("fac", params, "cca", supervise=True)
+    try:
+        got = []
+        for _ in range(5):
+            c = src.claim(0)
+            got.append(c)
+            src.report(c, 0.001)
+        os.kill(src.coordinator_pid, signal.SIGKILL)
+        # drain the remainder straight through the healing window
+        while True:
+            c = src.claim(0)
+            if c is None:
+                break
+            got.append(c)
+            src.report(c, 0.001)
+        assert src.restarts >= 1, "the supervisor must have restarted"
+        steps = [c.step for c in got]
+        assert len(steps) == len(set(steps)), "a step was served twice"
+        _assert_tiles([(c.lo, c.hi) for c in got], N)
+    finally:
+        src.close()

@@ -1,12 +1,17 @@
 """FaultTolerantRunner recovery path: replayed steps must not duplicate
 metric rows (the replay-history bugfix), and recovery accounting stays exact.
+Plus the shared BackoffPolicy (also the ForemanSource retry policy): the
+sleep schedule is pinned so a refactor cannot silently change retry timing.
 """
+
+import dataclasses
+import pickle
 
 import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointStore
-from repro.runtime.failure import FaultInjector, FaultTolerantRunner
+from repro.runtime.failure import BackoffPolicy, FaultInjector, FaultTolerantRunner
 
 
 def _make_runner(tmp_path, fail_at, every=4, max_retries=3):
@@ -72,3 +77,80 @@ def test_budget_exhaustion_still_raises(tmp_path):
     runner.injector = AlwaysFail()
     with pytest.raises(RuntimeError, match="persistent"):
         runner.run(3, dict(template))
+
+
+# ---------------------------------------------------------------------------
+# BackoffPolicy: one policy for runner retries and foreman reconnects
+# ---------------------------------------------------------------------------
+
+
+def test_backoff_schedule_is_pinned():
+    """Exponential-with-cap, no jitter: the exact schedule is part of the
+    recovery-latency contract (DESIGN.md Sec. 12)."""
+    pol = BackoffPolicy(base_s=0.01, factor=2.0, cap_s=0.05)
+    assert pol.schedule(6) == pytest.approx([0.01, 0.02, 0.04, 0.05, 0.05, 0.05])
+    assert pol.delay(1) == pytest.approx(0.01)
+    with pytest.raises(ValueError):
+        pol.delay(0)
+
+
+def test_backoff_jitter_is_deterministic_and_bounded():
+    pol = BackoffPolicy(base_s=0.01, factor=2.0, cap_s=1.0, jitter=0.5, seed=7)
+    a = pol.schedule(8)
+    b = pol.schedule(8)
+    assert a == b, "same seed => same jittered schedule"
+    for k, d in enumerate(a, start=1):
+        pure = min(0.01 * 2.0 ** (k - 1), 1.0)
+        assert pure * 0.5 <= d <= pure * 1.5
+    assert a != BackoffPolicy(
+        base_s=0.01, factor=2.0, cap_s=1.0, jitter=0.5, seed=8
+    ).schedule(8), "different seed => different jitter"
+
+
+def test_backoff_validation_and_pickle():
+    for bad in (
+        dict(base_s=-1.0),
+        dict(factor=0.5),
+        dict(cap_s=-0.1),
+        dict(jitter=1.0),
+        dict(jitter=-0.2),
+    ):
+        with pytest.raises(ValueError):
+            BackoffPolicy(**bad)
+    pol = BackoffPolicy(base_s=0.02, jitter=0.25, seed=3)
+    clone = pickle.loads(pickle.dumps(pol))  # crosses into worker processes
+    assert clone == pol and clone.schedule(5) == pol.schedule(5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        pol.base_s = 1.0
+
+
+class _FailNTimes:
+    """Fails the same step repeatedly — consecutive retries, so the backoff
+    escalates (FaultInjector trips each step once, which always resets)."""
+
+    def __init__(self, step, times):
+        self.step = step
+        self.left = times
+
+    def check(self, step):
+        if step == self.step and self.left > 0:
+            self.left -= 1
+            raise RuntimeError("flaky node")
+
+
+def test_runner_retries_sleep_the_policy_schedule(tmp_path):
+    """The runner's retry loop must sleep exactly policy.delay(1..k) — not
+    the old hard-coded pause — and escalate across consecutive retries of
+    the same step."""
+    slept = []
+    runner, template = _make_runner(tmp_path, fail_at=(), every=1)
+    runner.injector = _FailNTimes(step=2, times=2)
+    runner.backoff = BackoffPolicy(base_s=0.125, factor=2.0, cap_s=10.0)
+    runner._sleep = slept.append
+    state, hist = runner.run(5, dict(template))
+    assert runner.recoveries == 2
+    assert slept == pytest.approx([0.125, 0.25]), (
+        "retry k must sleep policy.delay(k)"
+    )
+    assert [m["step"] for m in hist] == list(range(5))
+    assert state["w"][0] == pytest.approx(sum(range(1, 6)))

@@ -367,3 +367,86 @@ def test_engines_identical_with_breakpoints_on_assignment_times(costs):
             simulate(cfg, costs), simulate_fast(cfg, costs),
             f"edge-breakpoints/{approach}",
         )
+
+
+# ---------------------------------------------------------------------------
+# Fault family: timed fault events composing with the speed/delay families
+# ---------------------------------------------------------------------------
+
+
+def test_fault_event_validation():
+    from repro.select.scenarios import FaultEvent
+
+    FaultEvent("crash", t=1.0, pe=0)  # well-formed
+    FaultEvent("coordinator_kill", t=1.0)  # pe not required
+    FaultEvent("stall", t=0.5, pe=2, duration_s=0.5)
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("explode", t=1.0, pe=0)
+    with pytest.raises(ValueError, match="t must be >= 0"):
+        FaultEvent("crash", t=-0.1, pe=0)
+    with pytest.raises(ValueError, match="duration_s > 0"):
+        FaultEvent("stall", t=1.0, pe=0)
+    with pytest.raises(ValueError, match="only applies to stall"):
+        FaultEvent("crash", t=1.0, pe=0, duration_s=2.0)
+    with pytest.raises(ValueError, match="pe >= 0"):
+        FaultEvent("hang", t=1.0)
+    with pytest.raises(Exception):  # frozen dataclass
+        FaultEvent("crash", t=1.0, pe=0).t = 2.0
+
+
+def test_with_faults_composes_and_filters():
+    from repro.select.scenarios import FaultEvent
+
+    base = PerturbationScenario.variable(
+        4, slow_pes=[3], factor=0.5, name="hetero"
+    )
+    assert not base.has_faults and base.worker_faults() == ()
+    scen = base.with_faults(
+        FaultEvent("crash", t=0.2, pe=1),
+        FaultEvent("hang", t=0.3, pe=2),
+        FaultEvent("coordinator_kill", t=0.4),
+        name="hetero+faults",
+    )
+    # the fault axis composes: speed profiles and delay are untouched
+    assert scen.has_faults and not base.has_faults
+    assert scen.speed_at(3, 0.0) == base.speed_at(3, 0.0) == 0.5
+    assert [f.kind for f in scen.worker_faults()] == ["crash", "hang"]
+    assert [f.kind for f in scen.worker_faults(pe=1)] == ["crash"]
+    assert scen.worker_faults(pe=0) == ()
+    assert [f.kind for f in scen.coordinator_faults()] == ["coordinator_kill"]
+    # and with_faults chains (appends, not replaces)
+    again = scen.with_faults(FaultEvent("stall", t=0.5, pe=0, duration_s=0.1))
+    assert len(again.faults) == 4
+
+
+def test_fault_scenarios_pickle_roundtrip():
+    """Scenarios cross into worker processes; the fault tuple must survive."""
+    import pickle
+
+    from repro.select.scenarios import fault_suite
+
+    for scen in fault_suite(4, horizon_s=2.0):
+        clone = pickle.loads(pickle.dumps(scen))
+        assert clone.faults == scen.faults
+        assert clone.has_faults
+
+
+def test_fault_suite_covers_every_kind_with_a_slowdown():
+    from repro.select.scenarios import FAULT_KINDS, fault_suite
+
+    suite = fault_suite(4, horizon_s=2.0)
+    kinds = {f.kind for s in suite for f in s.faults}
+    assert kinds == set(FAULT_KINDS), "every fault kind must appear"
+    for scen in suite:
+        assert scen.has_faults
+        # each scenario composes its fault with a slowdown/delay family
+        perturbed = (
+            scen.delay_calc_s > 0
+            or not scen.static
+            or any(scen.speed_at(pe, 0.5) != 1.0 for pe in range(scen.P))
+        )
+        assert perturbed, f"{scen.name} carries no slowdown family"
+        for f in scen.faults:
+            assert 0 <= f.t <= 2.0, "fault must land inside the horizon"
+    with pytest.raises(ValueError, match="P >= 2"):
+        fault_suite(1, horizon_s=1.0)

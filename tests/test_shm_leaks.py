@@ -1,0 +1,144 @@
+"""The shm leak registry: no /dev/shm segment outlives its story.
+
+Attachers never unlink (bpo-38119, see dist/shm.py), so the only unlinker
+is the creator — and a SIGKILLed creator (exactly what chaos crash faults
+inject) used to leak its segments forever.  ``create_block`` now records
+every segment in a pid-guarded registry swept at interpreter exit;
+``unlink_block`` is the orderly paired release; ``adopt_block`` lets a
+supervisor inherit cleanup for a segment whose creator it may kill.
+
+The subprocess tests use real interpreters (multiprocessing children exit
+via ``os._exit`` and skip atexit, which would test nothing).
+"""
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+from repro.dist.shm import (
+    adopt_block,
+    attach_block,
+    cleanup_registry,
+    create_block,
+    registered_blocks,
+    unlink_block,
+)
+
+
+def _leaked(name):
+    try:
+        seg = attach_block(name)
+    except FileNotFoundError:
+        return False
+    seg.close()
+    return True
+
+
+def test_create_registers_and_unlink_deregisters():
+    shm = create_block(64)
+    name = shm.name
+    assert registered_blocks().get(name) == os.getpid()
+    unlink_block(shm)
+    assert name not in registered_blocks()
+    assert not _leaked(name)
+    # idempotent: a second release of an already-unlinked segment is a no-op
+    shm2 = create_block(64)
+    unlink_block(shm2)
+    unlink_block(shm2)
+
+
+def test_cleanup_registry_sweeps_only_this_pids_entries():
+    shm = create_block(64)
+    name = shm.name
+    # a fork-inherited entry owned by some other pid must survive the sweep
+    foreign = f"{name}-foreign"
+    registered = registered_blocks()
+    assert registered[name] == os.getpid()
+    from repro.dist import shm as shm_mod
+
+    shm_mod._REGISTRY[foreign] = os.getpid() + 1
+    try:
+        shm.close()
+        assert cleanup_registry() == 1
+        assert not _leaked(name)
+        assert foreign in registered_blocks(), "foreign-pid entry must survive"
+    finally:
+        shm_mod._REGISTRY.pop(foreign, None)
+
+
+_CHILD = textwrap.dedent("""
+    import sys, time
+    # silence the stdlib resource tracker: in the chaos case the whole
+    # process group dies (tracker daemon included), so the only cleanup
+    # left standing is the repo's own registry — which is what we test
+    from multiprocessing import resource_tracker
+    resource_tracker.register = lambda *a, **k: None
+    from repro.dist.shm import create_block
+    shm = create_block(128)
+    print(shm.name, flush=True)
+    if "--linger" in sys.argv:
+        time.sleep(60)   # parent SIGKILLs us here: atexit never runs
+    # normal exit: the atexit sweep reclaims the segment
+""")
+
+
+def _spawn_creator(*argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.getcwd(), "src"), env.get("PYTHONPATH")) if p
+    )
+    return subprocess.Popen(
+        [sys.executable, "-c", _CHILD, *argv],
+        stdout=subprocess.PIPE,
+        env=env,
+        text=True,
+    )
+
+
+def test_orderly_creator_exit_leaks_nothing():
+    proc = _spawn_creator()
+    name = proc.stdout.readline().strip()
+    proc.wait(timeout=30)
+    assert proc.returncode == 0
+    assert not _leaked(name), "atexit sweep must unlink on normal exit"
+
+
+def test_sigkilled_creator_leak_is_reclaimed_by_adopter():
+    """The chaos case: SIGKILL skips every cleanup path in the creator, so
+    the segment leaks — until a supervisor that adopted it sweeps up."""
+    proc = _spawn_creator("--linger")
+    name = proc.stdout.readline().strip()
+    os.kill(proc.pid, signal.SIGKILL)
+    proc.wait(timeout=30)
+    # the kill left the segment behind...
+    assert _leaked(name), "SIGKILL must leak (that is the failure mode)"
+    # ...and the adopting supervisor reclaims it
+    adopt_block(name)
+    assert cleanup_registry() >= 1
+    assert not _leaked(name)
+
+
+def test_foreman_progress_block_survives_close_paths():
+    """ForemanSource's supervisor progress block goes through unlink_block:
+    after close() nothing of it remains registered or attachable."""
+    from repro.core.techniques import DLSParams
+    from repro.dist.sources import process_source_for
+
+    src = process_source_for(
+        "fac", DLSParams(N=200, P=2), "cca", supervise=True
+    )
+    prog_name = src._progress_shm.name
+    assert registered_blocks().get(prog_name) == os.getpid()
+    # drain a couple of chunks so the coordinator has actually served
+    c = src.claim(0)
+    assert c is not None
+    src.report(c, 0.001)
+    src.close()
+    deadline = time.monotonic() + 5
+    while _leaked(prog_name) and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert not _leaked(prog_name)
+    assert prog_name not in registered_blocks()
