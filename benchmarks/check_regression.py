@@ -9,10 +9,16 @@ signal.  Metadata strings (platform, python) are ignored; ``derived``
 strings are compared exactly under ``--derived-exact`` (they encode
 deterministic outputs like chunk counts).
 
+``--require-true KEY`` additionally asserts a headline boolean (for
+example ``dca_beats_cca_all_counts`` in BENCH_dist_scaling.json) exists in
+the fresh run and is true everywhere it appears — machine-independent
+claims stay gated even when every timing leaf is skipped.
+
 Exit status 0 == no regression.  Used by the CI bench-gate job.
 
 Run:  python benchmarks/check_regression.py fresh.json BENCH_committed.json \
-          [--tolerance 3.0] [--min-value 5.0] [--derived-exact]
+          [--tolerance 3.0] [--min-value 5.0] [--derived-exact] \
+          [--skip KEY] [--require-true KEY]
 """
 
 import argparse
@@ -45,6 +51,11 @@ def main() -> int:
                     help="require 'derived' strings to match exactly")
     ap.add_argument("--skip", action="append", default=[], metavar="KEY",
                     help="leaf key names to exclude (e.g. machine wall times)")
+    ap.add_argument("--require-true", action="append", default=[],
+                    metavar="KEY", dest="require_true",
+                    help="leaf key that must exist in the fresh run and be "
+                    "boolean true everywhere it appears (headline claims "
+                    "like dca_beats_cca_all_counts)")
     args = ap.parse_args()
 
     with open(args.fresh) as f:
@@ -81,6 +92,15 @@ def main() -> int:
                 f"{path}: {have:.2f} vs committed {want:.2f} "
                 f"(>{args.tolerance:.1f}x regression)"
             )
+
+    for key in args.require_true:
+        hits = [(p, v) for p, v in fresh.items()
+                if p.rsplit(".", 1)[-1] == key]
+        if not hits:
+            failures.append(f"--require-true {key}: no such leaf in fresh run")
+        for path, v in hits:
+            if v is not True:
+                failures.append(f"{path}: required true, got {v!r}")
 
     print(f"# compared {compared} numeric leaves "
           f"({len(committed)} committed, {len(fresh)} fresh)")

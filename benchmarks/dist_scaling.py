@@ -1,0 +1,244 @@
+"""Distributed scaling: claims/s and makespan vs worker count x transport.
+
+Three network transports from ``repro.net``, swept over worker counts:
+
+* ``dca``  — ``RemoteCounterSource``: one fetch-and-add RPC per claim, chunk
+  resolved from local closed-form tables (the paper's RMA fetch-and-add
+  DCA, on TCP).  The per-claim chunk-calculation delay is paid
+  *concurrently*, in the claimer.
+* ``cca``  — ``NetworkForemanSource``: calculate-then-reply round-trip; the
+  chunk-calculation delay is serialized inside the foreman's critical
+  section (the paper's centralized baseline, on TCP).
+* ``tree`` — ``NodeMasterTree`` over 4 simulated nodes: per-node masters
+  claim global batches over TCP and re-serve them through shared memory,
+  so workers stay off the network on the common claim path.
+
+Two measurements per (transport, worker count) cell:
+
+* **claims/s** — thread claimers draining a fixed-step schedule ("ss",
+  ~2000 steps): pure scheduling throughput, the quantity the paper's h/sigma
+  overhead model is about.  The headline boolean
+  ``dca_beats_cca_all_counts`` asserts the decentralized claim path wins at
+  every swept count.
+* **makespan_s** — real worker *processes* through ``SimulatedCluster`` /
+  ``DistributedExecutor`` with a sleep-bound workload (this host schedules
+  sleeps, not FLOPs, so counts up to 64 are honest).  The boolean
+  ``tree_sustains_64_workers`` asserts the 4-node tree completes a
+  64-worker run with exact coverage.
+
+Wall-clock leaves (``*_s``, ``claims_per_s``) are machine-scheduling time:
+the CI gate skips them and checks the deterministic leaves plus the two
+booleans via ``check_regression.py --require-true`` (bench-gate job).
+
+Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/dist_scaling.py \
+          [--json out.json] [--quick]
+
+The committed snapshot is BENCH_dist_scaling.json.
+"""
+
+import argparse
+import functools
+import json
+import os
+import platform
+import sys
+import threading
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+from repro.core.techniques import DLSParams
+from repro.net import NodeMasterTree, SimulatedCluster, net_source_for
+
+N_NODES = 4
+CALC_DELAY_S = 1e-4  # per-chunk calculation cost (serialized under CCA)
+CLAIM_STEPS = 2000  # fixed step count per claims/s cell
+ITER_S = 1e-4  # makespan workload: sleep-bound per-iteration cost
+MAKESPAN_N = 3200
+MIN_CHUNK = 4
+
+
+def _work(per_iter_s, lo, hi):
+    time.sleep((hi - lo) * per_iter_s)
+
+
+# ---------------------------------------------------------------------------
+# claims/s: thread claimers against one networked source (or tree board)
+# ---------------------------------------------------------------------------
+
+
+def _drain_threads(claim, n_threads, concurrent_delay_s):
+    """Drain ``claim(worker)`` from ``n_threads`` claimers; return
+    (chunks, wall_s).  ``concurrent_delay_s`` models the DCA-side chunk
+    calculation: each claimer pays it locally, in parallel."""
+    counts = [0] * n_threads
+
+    def run(wid):
+        while True:
+            c = claim(wid)
+            if c is None:
+                return
+            counts[wid] += 1
+            if concurrent_delay_s:
+                time.sleep(concurrent_delay_s)
+
+    threads = [threading.Thread(target=run, args=(w,)) for w in range(n_threads)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return sum(counts), time.perf_counter() - t0
+
+
+def _claims_cell(transport, workers):
+    n = CLAIM_STEPS * 2  # "ss" with min_chunk=2 -> exactly CLAIM_STEPS steps
+    params = DLSParams(N=n, P=workers, min_chunk=2)
+    if transport == "cca":
+        src = net_source_for("ss", params, "cca", calc_delay_s=CALC_DELAY_S)
+        try:
+            served, wall = _drain_threads(src.claim, workers, 0.0)
+        finally:
+            src.close()
+    elif transport == "dca":
+        src = net_source_for("ss", params, "dca")
+        try:
+            served, wall = _drain_threads(src.claim, workers, CALC_DELAY_S)
+        finally:
+            src.close()
+    else:  # tree: 4 node boards fed by masters, workers claim via shm
+        # coarse global batches (fsc, floored at 128 iterations) keep the
+        # masters' TCP traffic to a few dozen RPCs; "ss" locally subdivides
+        gsrc = net_source_for(
+            "fsc", DLSParams(N=n, P=N_NODES, min_chunk=128), "dca"
+        )
+        trees = [
+            NodeMasterTree(gsrc, node_id=k, local_workers=max(workers // N_NODES, 1),
+                           local_technique="ss", min_chunk=2, N=n)
+            for k in range(N_NODES)
+        ]
+        wpn = max(workers // N_NODES, 1)
+
+        def claim(wid):
+            return trees[(wid // wpn) % N_NODES].claim(wid)
+
+        try:
+            served, wall = _drain_threads(claim, workers, CALC_DELAY_S)
+        finally:
+            for t in trees:
+                t.close()
+            gsrc.close()
+    return {
+        "name": f"{transport}-w{workers}",
+        "transport": transport,
+        "workers": workers,
+        "steps_served": served,
+        "wall_s": round(wall, 4),
+        "claims_per_s": round(served / wall, 1),
+    }
+
+
+# ---------------------------------------------------------------------------
+# makespan: real worker processes through SimulatedCluster
+# ---------------------------------------------------------------------------
+
+
+def _makespan_cell(transport, workers):
+    params = DLSParams(N=MAKESPAN_N, P=workers, min_chunk=MIN_CHUNK)
+    fn = functools.partial(_work, ITER_S)
+    with SimulatedCluster(
+        "fsc", params,
+        n_nodes=N_NODES, workers_per_node=workers // N_NODES,
+        transport=transport,
+        mode="cca" if transport == "cca" else "auto",
+        link_latency_s=0.0,
+    ) as cl:
+        res = cl.run(fn, join_timeout=180, heartbeat_timeout_s=30.0)
+    assert res.covers_exactly(MAKESPAN_N), (
+        f"{transport}/{workers}: coverage broke ({res.executed}/{MAKESPAN_N})"
+    )
+    return {
+        "name": f"{transport}-w{workers}",
+        "transport": transport,
+        "workers": workers,
+        "makespan_s": round(res.wall_s, 4),
+        "n_chunks": res.n_chunks,
+        "covered": True,
+        "serial_work_s": round(MAKESPAN_N * ITER_S, 4),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="OUT")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (CI smoke): counts 4/8, skip 32/64")
+    args = ap.parse_args()
+
+    claim_counts = [4, 8] if args.quick else [4, 8, 16, 32, 64]
+    makespan_counts = [8] if args.quick else [8, 16, 32, 64]
+
+    claims = []
+    for workers in claim_counts:
+        for transport in ("dca", "cca", "tree"):
+            cell = _claims_cell(transport, workers)
+            claims.append(cell)
+            print(f"claims  {transport:4s} W={workers:<3d} "
+                  f"{cell['claims_per_s']:>9.1f}/s  wall={cell['wall_s']:.3f}s")
+
+    makespans = []
+    for workers in makespan_counts:
+        for transport in ("dca", "cca", "tree"):
+            cell = _makespan_cell(transport, workers)
+            makespans.append(cell)
+            print(f"makespan {transport:4s} W={workers:<3d} "
+                  f"{cell['makespan_s']:.3f}s  chunks={cell['n_chunks']}")
+
+    by_claims = {(c["transport"], c["workers"]): c for c in claims}
+    dca_beats_cca = all(
+        by_claims["dca", w]["claims_per_s"] > by_claims["cca", w]["claims_per_s"]
+        for w in claim_counts
+    )
+    tree_64 = any(
+        m["transport"] == "tree" and m["workers"] >= 64 and m["covered"]
+        for m in makespans
+    )
+    headline = {
+        "dca_beats_cca_all_counts": bool(dca_beats_cca),
+        "tree_sustains_64_workers": bool(tree_64),
+        "n_nodes": N_NODES,
+        "worker_counts": claim_counts,
+    }
+    print(f"headline: {headline}")
+
+    doc = {
+        "meta": {
+            "bench": "dist_scaling",
+            "calc_delay_s": CALC_DELAY_S,
+            "claim_steps": CLAIM_STEPS,
+            "makespan_N": MAKESPAN_N,
+            "iter_s": ITER_S,
+            "min_chunk": MIN_CHUNK,
+            "n_nodes": N_NODES,
+            "quick": args.quick,
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+        },
+        "claims": claims,
+        "makespans": makespans,
+        "headline": headline,
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    if not dca_beats_cca or not tree_64:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

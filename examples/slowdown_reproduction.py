@@ -5,6 +5,7 @@ Run:  PYTHONPATH=src python examples/slowdown_reproduction.py [--full|--smoke]
       PYTHONPATH=src python examples/slowdown_reproduction.py --processes [--smoke]
       PYTHONPATH=src python examples/slowdown_reproduction.py --processes \
           --scenario bursty [--smoke]
+      PYTHONPATH=src python examples/slowdown_reproduction.py --hosts 4 [--smoke]
 
 --full uses the paper's exact scale (262,144 iterations, 256 ranks); default
 is 4x reduced; --smoke is a fast CI-sized run.  Expect: ~equal at 0/10us;
@@ -38,6 +39,14 @@ coordinator while DCA shrugs (nothing to kill).  Try:
 
     PYTHONPATH=src python examples/slowdown_reproduction.py \
         --processes --scenario crashy --smoke
+
+--hosts N simulates a multi-host run on loopback (``repro.net``): N nodes
+of worker processes, per-link TCP latency, three transports side by side —
+remote-counter DCA (one fetch-and-add RPC per claim), network-foreman CCA
+(calculate-then-reply round-trip), and the node-master tree (per-node
+masters claim coarse global batches over TCP and re-serve them through
+shared memory, keeping workers off the network on the common path).  On a
+real cluster the same sources take ``host=`` for a non-loopback bind.
 """
 
 import argparse
@@ -182,6 +191,35 @@ def run_processes(n: int, workers: int, iter_cost_s: float, delays,
         notes.clear()
 
 
+def run_cluster(n: int, hosts: int, workers_per_node: int, iter_cost_s: float,
+                link_latency_s: float = 1e-3):
+    """Multi-host simulation on loopback: N nodes x W workers per node,
+    per-link TCP latency, all three repro.net transports side by side."""
+    from repro.net import SimulatedCluster
+
+    workers = hosts * workers_per_node
+    print(f"\n=== simulated cluster (N={n}, {hosts} nodes x "
+          f"{workers_per_node} workers, link={link_latency_s * 1e3:.1f}ms, "
+          f"{iter_cost_s * 1e6:.0f}us/iter) — wall seconds ===")
+    print(f"{'technique':9s} " + "".join(
+        t.rjust(13) for t in ("dca", "cca", "tree")))
+    fn = functools.partial(_sleep_work, iter_cost_s)
+    for tech in ("ss", "fsc", "fac"):
+        row = f"{tech:9s} "
+        for transport in ("dca", "cca", "tree"):
+            params = DLSParams(N=n, P=workers, min_chunk=4)
+            with SimulatedCluster(
+                tech, params, n_nodes=hosts,
+                workers_per_node=workers_per_node, transport=transport,
+                mode="cca" if transport == "cca" else "auto",
+                link_latency_s=link_latency_s,
+            ) as cl:
+                res = cl.run(fn, join_timeout=600)
+            assert res.covers_exactly(n)  # coverage, always
+            row += f"{res.wall_s:13.3f}"
+        print(row)
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -197,10 +235,28 @@ if __name__ == "__main__":
                          "under --processes); the chaos families "
                          f"{FAULT_SCENARIOS} kill/hang/stall real processes "
                          "and require --processes")
+    ap.add_argument("--hosts", type=int, default=None, metavar="N",
+                    help="simulate a multi-host run on loopback (repro.net): "
+                         "N nodes of worker processes with per-link TCP "
+                         "latency, comparing the remote-counter DCA, "
+                         "network-foreman CCA and node-master tree transports")
     args = ap.parse_args()
     if args.scenario in FAULT_SCENARIOS and not args.processes:
         ap.error(f"--scenario {args.scenario} injects real process faults; "
                  "it requires --processes")
+    if args.hosts is not None:
+        if args.hosts < 1:
+            ap.error("--hosts must be >= 1")
+        if args.smoke:
+            run_cluster(n=2_000, hosts=args.hosts, workers_per_node=2,
+                        iter_cost_s=2e-5)
+        elif args.full:
+            run_cluster(n=65_536, hosts=args.hosts, workers_per_node=8,
+                        iter_cost_s=5e-5)
+        else:
+            run_cluster(n=8_192, hosts=args.hosts, workers_per_node=4,
+                        iter_cost_s=5e-5)
+        raise SystemExit(0)
     if args.processes:
         if args.smoke:
             run_processes(n=2_000, workers=4, iter_cost_s=2e-5,

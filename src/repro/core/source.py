@@ -80,10 +80,32 @@ __all__ = [
     "resolve_mode",
     "materialize",
     "ModeDowngradeWarning",
+    "PlacementError",
+    "PLACEMENTS",
 ]
 
 
 MODES = ("auto", "dca", "cca", "adaptive", "dca_sync")
+PLACEMENTS = ("thread", "process", "net")
+
+
+class PlacementError(ValueError):
+    """Unknown or unsupported ``placement``.
+
+    Typed (not a bare ``KeyError``/``AttributeError`` from a dispatch table)
+    so config errors fail with the full menu: with three placements a typo
+    like ``"processes"`` deserves "here is what exists", not a stack trace
+    from the middle of a factory.
+    """
+
+    def __init__(self, placement):
+        super().__init__(
+            f"unknown placement {placement!r}: valid placements are "
+            "'thread' (in-process backends), 'process' (shared-memory DCA / "
+            "foreman CCA, repro.dist), and 'net' (TCP remote-counter DCA / "
+            "network-foreman CCA, repro.net)"
+        )
+        self.placement = placement
 
 
 class ModeDowngradeWarning(UserWarning):
@@ -207,7 +229,10 @@ class ScheduleSpec:
     ``placement`` picks the claim substrate: ``"thread"`` (default) builds the
     in-process backends; ``"process"`` builds their cross-process analogues
     from repro.dist — shared-memory tables + shared counter for DCA, a
-    foreman coordinator process for CCA/adaptive/select (DESIGN.md Sec. 10).
+    foreman coordinator process for CCA/adaptive/select (DESIGN.md Sec. 10);
+    ``"net"`` builds the networked analogues from repro.net — a remote
+    fetch-and-add counter for DCA, a TCP network foreman for the rest
+    (DESIGN.md Sec. 13).  Anything else raises ``PlacementError``.
 
     ``scenario`` (a ``PerturbationScenario``, select/scenarios.py) makes the
     built source scenario-driven: its calculation delay is injected with the
@@ -230,10 +255,8 @@ class ScheduleSpec:
     scenario: Optional[object] = None
 
     def __post_init__(self):
-        if self.placement not in ("thread", "process"):
-            raise ValueError(
-                f"placement must be 'thread' or 'process', got {self.placement!r}"
-            )
+        if self.placement not in PLACEMENTS:
+            raise PlacementError(self.placement)
 
     def to_params(self, N: Optional[int] = None, P: Optional[int] = None) -> DLSParams:
         if self.params is not None and N is None and P is None:
@@ -767,6 +790,8 @@ def make_source(spec: ScheduleSpec, **kw) -> ChunkSource:
 
 
 def _make_source_base(spec: ScheduleSpec, **kw) -> ChunkSource:
+    if spec.placement not in PLACEMENTS:  # defensive: __post_init__ bypassed
+        raise PlacementError(spec.placement)
     if spec.placement == "process":
         from repro.dist.sources import process_source_for  # deferred: dist imports core
 
@@ -776,6 +801,16 @@ def _make_source_base(spec: ScheduleSpec, **kw) -> ChunkSource:
                 "compose a ForemanSource-backed global level explicitly"
             )
         return process_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
+    if spec.placement == "net":
+        from repro.net.sources import net_source_for  # deferred: net imports core
+
+        if spec.levels:
+            raise NotImplementedError(
+                "hierarchical + placement='net' is not supported yet; use "
+                "repro.net.SimulatedCluster(transport='tree') for the "
+                "node-master tree"
+            )
+        return net_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
     if spec.levels:
         if len(spec.levels) < 2:
             raise ValueError("hierarchy needs >= 2 levels: ((tech, P), ...)")

@@ -46,11 +46,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.executor import ChunkRecord, _resolve_scenario
-from repro.core.source import ChunkSource
+from repro.core.source import ChunkSource, PlacementError
 from repro.core.techniques import DLSParams, auto_technique, get_technique
 
 from .shm import attach_block, create_block, default_context, int64_field, unlink_block
-from .sources import CoordinatorLostError, ForemanSource, process_source_for
+from .sources import CoordinatorLostError, process_source_for
 
 __all__ = ["DistributedExecutor"]
 
@@ -154,8 +154,12 @@ class DistributedExecutor:
 
     ``mode`` follows ``resolve_mode``: effective ``dca`` claims from shared
     memory (SharedStaticSource), everything else round-trips a foreman
-    process.  ``fn`` must be picklable under the chosen start method (any
-    callable under fork; a module-level callable/partial under spawn).
+    process.  ``placement`` picks the claim substrate when the executor
+    builds its own source: ``"process"`` (default, repro.dist — one host)
+    or ``"net"`` (repro.net — remote counter / network foreman over TCP);
+    anything else raises ``PlacementError``.  ``fn`` must be picklable
+    under the chosen start method (any callable under fork; a module-level
+    callable/partial under spawn).
     """
 
     def __init__(
@@ -168,6 +172,7 @@ class DistributedExecutor:
         start_method: Optional[str] = None,
         record_capacity: Optional[int] = None,
         scenario=None,
+        placement: str = "process",
     ):
         self.technique = auto_technique() if technique == "auto" else get_technique(technique)
         self.params = params
@@ -178,12 +183,17 @@ class DistributedExecutor:
         has_coord_faults = self.scenario is not None and bool(
             getattr(self.scenario, "coordinator_faults", lambda: ())()
         )
+        if placement not in ("process", "net"):
+            raise PlacementError(placement)
         if source is not None:
-            if has_coord_faults and isinstance(source, ForemanSource) and not source._supervised:
+            # duck-typed: every coordinator-backed source (local foreman,
+            # network foreman, remote counter) carries ``_supervised``;
+            # coordinator-free DCA sources don't and need no supervision
+            if has_coord_faults and getattr(source, "_supervised", None) is False:
                 raise ValueError(
-                    "scenario injects coordinator_kill but the ForemanSource "
-                    "was built without supervise=True; the kill would strand "
-                    "every worker"
+                    f"scenario injects coordinator_kill but the "
+                    f"{type(source).__name__} was built without "
+                    "supervise=True; the kill would strand every worker"
                 )
             if self.calc_delay_s and source.serialized:
                 # same rule as the thread executor: a serialized source pays
@@ -202,7 +212,13 @@ class DistributedExecutor:
             # coordinator faults in the scenario auto-enable the foreman
             # supervisor: the scenario *promises* to kill the coordinator,
             # so an unsupervised one would deadlock the run by construction
-            self.source = process_source_for(
+            if placement == "net":
+                from repro.net.sources import net_source_for  # net imports dist
+
+                build = net_source_for
+            else:
+                build = process_source_for
+            self.source = build(
                 technique, params, mode, calc_delay_s=self.calc_delay_s, ctx=self._ctx,
                 supervise=has_coord_faults,
             )

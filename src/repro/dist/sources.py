@@ -30,7 +30,6 @@ import os
 import tempfile
 import threading
 import time
-import uuid
 import warnings
 from multiprocessing.connection import Client, Listener
 from typing import Optional
@@ -343,9 +342,13 @@ class ForemanSource(ChunkSource):
             base_s=0.005, factor=2.0, cap_s=0.25
         )
         self._deadline_s = float(deadline_s)
-        self._address = os.path.join(
-            tempfile.gettempdir(), f"repro-foreman-{os.getpid()}-{uuid.uuid4().hex[:8]}.sock"
-        )
+        # a private mkdtemp directory per instance: the kernel guarantees the
+        # directory is fresh, so two foremen can never collide on a socket
+        # path no matter how many spin up in the same pid/second (pid+uuid
+        # prefixes only made collisions unlikely), and close() can reclaim
+        # the whole directory instead of guessing at stale .sock files
+        self._sockdir = tempfile.mkdtemp(prefix="repro-foreman-")
+        self._address = os.path.join(self._sockdir, "foreman.sock")
         self._owner = True
         self._conn = None
         self._conn_pid = None
@@ -530,6 +533,10 @@ class ForemanSource(ChunkSource):
         try:
             os.unlink(self._address)
         except FileNotFoundError:  # pragma: no cover
+            pass
+        try:
+            os.rmdir(self._sockdir)
+        except OSError:  # pragma: no cover - already gone / never created
             pass
 
     def __enter__(self):

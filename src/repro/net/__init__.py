@@ -1,0 +1,50 @@
+"""repro.net — a network transport for ChunkSource and a node-master tree.
+
+``repro.dist`` stops at one host (shared memory + AF_UNIX); this package
+takes the same ``ChunkSource`` protocol across machine boundaries:
+
+* ``transport``  — length-prefixed struct-framed TCP: deadline-aware
+  request/reply, one-way reports, ``BackoffPolicy``-driven reconnect, a
+  thread-per-connection server, and per-link injected latency.
+* ``sources``    — ``RemoteCounterSource`` (DCA: one fetch-and-add RPC
+  against a lock-free counter server — the RMA analogue, arXiv:1901.02773)
+  and ``NetworkForemanSource`` (CCA: a coordinator process serving the
+  recursion over TCP), plus ``net_source_for`` (placement="net").
+* ``tree``       — ``NodeMasterTree``: one global networked source,
+  per-node master processes claiming *batches* of contiguous iterations
+  over TCP and re-serving them intra-node through shared memory, so
+  workers claim locally at ~µs and never touch the network on the common
+  path (the MPI+MPI two-level composition, arXiv:1903.09510).
+* ``cluster``    — ``SimulatedCluster``: N node-processes x W
+  worker-processes on loopback with per-link injected latency, so
+  "hundreds of workers across hosts" run on one box.
+
+See DESIGN.md Sec. 13.
+"""
+
+from .cluster import ClusterResult, SimulatedCluster
+from .sources import NetworkForemanSource, RemoteCounterSource, net_source_for
+from .transport import (
+    NetClient,
+    NetServer,
+    RemoteError,
+    TAGS,
+    pack_body,
+    unpack_body,
+)
+from .tree import NodeMasterTree
+
+__all__ = [
+    "NetClient",
+    "NetServer",
+    "RemoteError",
+    "TAGS",
+    "pack_body",
+    "unpack_body",
+    "RemoteCounterSource",
+    "NetworkForemanSource",
+    "net_source_for",
+    "NodeMasterTree",
+    "SimulatedCluster",
+    "ClusterResult",
+]

@@ -1,0 +1,204 @@
+"""SimulatedCluster — N nodes x W workers on loopback, latency included.
+
+One box stands in for a cluster: every "host boundary" is a real process
+boundary plus a loopback TCP link with injected per-link latency
+(``NetClient(link_latency_s=...)`` sleeps half on send, half on receive —
+a symmetric propagation delay).  Three transports map to the paper's
+design space:
+
+* ``"dca"``  — every worker claims straight from the remote counter
+  (one fetch-and-add RPC per chunk, chunk calculation local).
+* ``"cca"``  — every worker round-trips the network foreman (claim
+  calculation serialized in the coordinator, plus the wire).
+* ``"tree"`` — per-node masters batch-refill over TCP and re-serve
+  through shared memory (workers never touch the network).
+
+Execution runs through ``DistributedExecutor`` with the networked source
+plugged in, so PR 6's failure machinery — heartbeat liveness, lease
+reclamation, degraded finish with gap repair — holds for networked workers
+without modification; the conformance suite leans on exactly that.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.core.source import ChunkSource
+from repro.core.techniques import DLSParams
+from repro.dist.executor import DistributedExecutor
+from repro.dist.shm import default_context
+
+from .sources import net_source_for
+from .tree import NodeMasterTree
+
+__all__ = ["SimulatedCluster", "ClusterResult", "TRANSPORTS"]
+
+TRANSPORTS = ("dca", "cca", "tree")
+
+
+class _NodeRouter(ChunkSource):
+    """Route each worker's claims to its node's tree board.
+
+    Workers ``[k*W, (k+1)*W)`` belong to node ``k`` — the same grouping
+    ``HierarchicalSource`` uses, here across process *and* simulated host
+    boundaries.  Pickles by pickling the trees (board attachments).
+    """
+
+    serialized = False
+
+    def __init__(self, trees: List[NodeMasterTree], workers_per_node: int):
+        self._trees = trees
+        self._wpn = workers_per_node
+
+    def claim(self, worker: int = 0):
+        return self._trees[(worker // self._wpn) % len(self._trees)].claim(worker)
+
+    def drained(self) -> bool:
+        return all(t.drained() for t in self._trees)
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """One cluster run: timing plus the executor's verification views."""
+
+    transport: str
+    technique: str
+    n_nodes: int
+    workers_per_node: int
+    wall_s: float
+    n_chunks: int
+    reclaimed: int
+    executed: np.ndarray  # sorted (lo, hi) pairs
+    chunk_sizes: np.ndarray  # sizes in scheduling-step order
+
+    @property
+    def n_workers(self) -> int:
+        return self.n_nodes * self.workers_per_node
+
+    def covers_exactly(self, N: int) -> bool:
+        """Exact cover of [0, N): contiguous, gap-free, overlap-free."""
+        if self.executed.size == 0:
+            return N == 0
+        los, his = self.executed[:, 0], self.executed[:, 1]
+        return bool(
+            los[0] == 0 and his[-1] == N and (los[1:] == his[:-1]).all()
+        )
+
+
+class SimulatedCluster:
+    """A one-shot multi-host run: build topology, ``run()``, ``close()``.
+
+    ``params.P`` is the *total* worker count and must equal
+    ``n_nodes * workers_per_node``.  For ``transport="tree"`` the global
+    source schedules over ``P=n_nodes`` (one global PE per node — each
+    global chunk is a node batch) and each node subdivides its batches for
+    ``workers_per_node`` local claimers under ``local_technique``.
+    """
+
+    def __init__(
+        self,
+        technique: str,
+        params: DLSParams,
+        *,
+        n_nodes: int = 4,
+        workers_per_node: int = 4,
+        transport: str = "tree",
+        mode: str = "auto",
+        local_technique: str = "ss",
+        link_latency_s: float = 0.0,
+        start_method: Optional[str] = None,
+        supervise: bool = False,
+        master_timeout_s: float = 10.0,
+    ):
+        if transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS}, got {transport!r}")
+        if params.P != n_nodes * workers_per_node:
+            raise ValueError(
+                f"params.P ({params.P}) must equal n_nodes*workers_per_node "
+                f"({n_nodes}*{workers_per_node}={n_nodes * workers_per_node})"
+            )
+        self.technique = technique
+        self.params = params
+        self.transport = transport
+        self.n_nodes = n_nodes
+        self.workers_per_node = workers_per_node
+        self._ctx = default_context(start_method)
+        self._trees: List[NodeMasterTree] = []
+        if transport == "tree":
+            gparams = dataclasses.replace(params, P=n_nodes)
+            self.global_source = net_source_for(
+                technique, gparams, mode, ctx=self._ctx, supervise=supervise,
+                link_latency_s=link_latency_s, warn=False,
+            )
+            self._trees = [
+                NodeMasterTree(
+                    self.global_source,
+                    node_id=k,
+                    local_workers=workers_per_node,
+                    local_technique=local_technique,
+                    min_chunk=params.min_chunk,
+                    N=params.N,
+                    ctx=self._ctx,
+                    master_timeout_s=master_timeout_s,
+                )
+                for k in range(n_nodes)
+            ]
+            self.source: ChunkSource = _NodeRouter(self._trees, workers_per_node)
+        else:
+            forced = {"dca": "dca", "cca": "cca"}[transport]
+            self.global_source = net_source_for(
+                technique, params, forced, ctx=self._ctx, supervise=supervise,
+                link_latency_s=link_latency_s, warn=False,
+            )
+            self.source = self.global_source
+        self._executor = DistributedExecutor(
+            technique, params, source=self.source,
+            start_method=start_method,
+        )
+
+    @property
+    def executor(self) -> DistributedExecutor:
+        return self._executor
+
+    def run(
+        self,
+        fn: Callable[[int, int], None],
+        *,
+        heartbeat_timeout_s: Optional[float] = None,
+        join_timeout: Optional[float] = None,
+    ) -> ClusterResult:
+        wall = self._executor.run(
+            fn,
+            n_workers=self.n_nodes * self.workers_per_node,
+            heartbeat_timeout_s=heartbeat_timeout_s,
+            join_timeout=join_timeout,
+        )
+        return ClusterResult(
+            transport=self.transport,
+            technique=self.technique,
+            n_nodes=self.n_nodes,
+            workers_per_node=self.workers_per_node,
+            wall_s=wall,
+            n_chunks=len(self._executor.records),
+            reclaimed=len(self._executor.reclaimed),
+            executed=self._executor.executed_ranges(),
+            chunk_sizes=self._executor.chunk_size_sequence(),
+        )
+
+    def close(self):
+        for t in self._trees:
+            t.close()  # masters exit on global drain; join + unlink boards
+        self._trees = []
+        if getattr(self, "global_source", None) is not None:
+            self.global_source.close()
+            self.global_source = None
+        self._executor.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

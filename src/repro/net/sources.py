@@ -1,0 +1,666 @@
+"""Networked ChunkSource backends: remote-counter DCA vs network-foreman CCA.
+
+The two ``repro.dist`` placements, taken across a machine boundary:
+
+* ``RemoteCounterSource`` — the DCA path over the network.  The chunk
+  *calculation* stays entirely local: every process rebuilds the same
+  closed-form offset/size tables from ``(technique, params)`` (they are
+  deterministic — the paper's whole point), so a claim is **one**
+  fetch-and-add RPC against a lock-free counter server (an
+  ``itertools.count`` bump — no inner source, no recursion, no lock on the
+  claim path).  This is the RMA analogue of arXiv:1901.02773 with the
+  ``MPI_Fetch_and_op`` window host played by a trivial TCP counter server:
+  the server executes no scheduler code, exactly like a passive RMA target.
+* ``NetworkForemanSource`` — the CCA baseline over the network.  A
+  coordinator process hosts the recursion (any thread-level source) and
+  serves claims over framed TCP; every chunk costs a request/reply
+  round-trip through the coordinator *plus* its critical section — the
+  centralized bottleneck, now with wire latency on top.
+
+Both speak the ``transport`` wire protocol and share the coordinator
+lifecycle of ``ForemanSource`` (dist/sources.py): ``supervise=True`` adds
+a shared-memory progress block written *before* every reply (at-most-once
+serve; at most one in-flight chunk lost per kill, repaired as a coverage
+gap by the executor) and an owner-side supervisor thread that restarts a
+dead server **on the same port** — clients just reconnect-and-retry
+through their ``BackoffPolicy``.  Unsupervised, the first dead-server
+symptom raises the same typed ``CoordinatorLostError`` as the local
+foreman, so every caller's failure handling carries over unchanged.
+
+Both sources also host the tree's step-block allocator (``alloc_steps``):
+a second fetch-and-add counter the node masters use to assign globally
+unique scheduling-step ids to their batches, off the workers' claim path.
+
+``net_source_for`` is the placement="net" analogue of
+``process_source_for``.  See DESIGN.md Sec. 13.
+"""
+
+from __future__ import annotations
+
+import functools
+import itertools
+import logging
+import os
+import threading
+import warnings
+from typing import Optional, Tuple
+
+from repro.core.schedule import Schedule, build_schedule_dca
+from repro.core.source import (
+    Chunk,
+    ChunkSource,
+    ModeDowngradeWarning,
+    resolve_mode,
+    source_for,
+)
+from repro.core.techniques import DLSParams
+from repro.dist.shm import (
+    attach_block,
+    create_block,
+    default_context,
+    float64_field,
+    int64_field,
+    unlink_block,
+)
+from repro.dist.sources import CoordinatorLostError
+from repro.runtime.failure import BackoffPolicy
+
+from .transport import (
+    OP_CLAIM,
+    OP_FADD,
+    OP_PING,
+    OP_READ,
+    OP_REPORT,
+    OP_SHUTDOWN,
+    OP_STAT,
+    RE_CHUNK,
+    RE_INT,
+    RE_NONE,
+    RE_STAT,
+    NetClient,
+    NetServer,
+    StopServer,
+)
+
+__all__ = [
+    "RemoteCounterSource",
+    "NetworkForemanSource",
+    "net_source_for",
+    "CounterIndex",
+]
+
+log = logging.getLogger(__name__)
+
+
+class CounterIndex:
+    """Well-known counter slots on a chunk server (``OP_FADD``/``OP_READ``)."""
+
+    CLAIM = 0  # the DCA step counter (bounded at num_steps)
+    STEPS = 1  # the tree's step-block allocator (unbounded)
+
+
+# net progress block (written by the serving coordinator before each reply,
+# read by a supervised replacement at startup):
+#   int64   [0]   served    — chunks/steps handed out (== next step)
+#   int64   [8]   lp        — highest iteration bound served (foreman only)
+#   int64   [16]  gen       — coordinator generation (bumped per restart)
+#   int64   [24]  alloc     — step-block allocator high-water mark
+#   float64 [32]  prev_raw  — recursion previous-chunk state (foreman only)
+_NET_PROGRESS_BYTES = 40
+
+
+def _chunk_server_main(port_conn, host, port, inner_factory, calc_delay_s,
+                       bound, progress_name):
+    """Coordinator main: serve claims and counters over framed TCP.
+
+    With ``inner_factory`` this is the network foreman (CCA: the recursion
+    lives here); without it, the lock-free counter server (DCA: just two
+    fetch-and-add counters — claim steps and the tree's step-block
+    allocator — no scheduler state at all).  ``bound`` caps the claim
+    counter at ``num_steps`` so ``claimed`` is exact from every process.
+
+    With a progress block, every served claim/step is recorded in shared
+    memory *before* its reply leaves — at-most-once serve: a kill between
+    the progress write and the reply loses that chunk (a coverage gap the
+    executor repairs) but the replacement, fast-forwarding from
+    ``(served, lp, alloc, prev_raw)``, can never double-serve a range or
+    re-issue a step-block.
+    """
+    inner = inner_factory() if inner_factory is not None else None
+    if inner is not None and calc_delay_s and hasattr(inner, "calc_delay_s"):
+        inner.calc_delay_s = calc_delay_s
+    prog = prog_i = prog_f = None
+    prog_lock = threading.Lock()
+    served0 = alloc0 = gen = 0
+    if progress_name is not None:
+        prog = attach_block(progress_name)
+        prog_i = int64_field(prog, 0, 4)
+        prog_f = float64_field(prog, 32, 1)
+        served0, lp, gen, alloc0 = (int(prog_i[i]) for i in range(4))
+        if inner is not None and served0 > 0 and hasattr(inner, "fast_forward"):
+            inner.fast_forward(served0, lp, float(prog_f[0]))
+    claim_ctr = itertools.count(served0)  # next() is an atomic fetch-and-add
+    alloc_lock = threading.Lock()
+    alloc = [alloc0]
+
+    def counter_claimed() -> int:
+        peek = claim_ctr.__reduce__()[1][0]  # read without consuming
+        return min(peek, bound) if bound is not None else peek
+
+    def handler(tag: int, vals: Tuple):
+        if tag == OP_FADD:
+            idx, amount = int(vals[0]), int(vals[1])
+            if idx == CounterIndex.CLAIM:
+                step = next(claim_ctr)  # the lock-free claim path
+                if bound is not None and step >= bound:
+                    return (RE_INT, (-1,))
+                if prog_i is not None:
+                    with prog_lock:  # durable BEFORE the reply leaves
+                        if step + 1 > prog_i[0]:
+                            prog_i[0] = step + 1
+                return (RE_INT, (step,))
+            if idx == CounterIndex.STEPS:
+                with alloc_lock:
+                    base = alloc[0]
+                    alloc[0] = base + amount
+                    if prog_i is not None:
+                        prog_i[3] = alloc[0]
+                return (RE_INT, (base,))
+            raise ValueError(f"unknown counter index {idx}")
+        if tag == OP_READ:
+            idx = int(vals[0])
+            if idx == CounterIndex.CLAIM:
+                n = getattr(inner, "claimed", 0) if inner is not None else counter_claimed()
+                return (RE_INT, (int(n),))
+            if idx == CounterIndex.STEPS:
+                return (RE_INT, (alloc[0],))
+            raise ValueError(f"unknown counter index {idx}")
+        if tag == OP_CLAIM:
+            if inner is None:
+                raise ValueError("counter server hosts no source; use OP_FADD")
+            c = inner.claim(int(vals[0]))
+            if c is None:
+                return (RE_NONE, ())
+            if prog_i is not None:
+                with prog_lock:  # durable BEFORE the reply leaves
+                    if c.step + 1 > prog_i[0]:
+                        prog_i[0] = c.step + 1
+                    if c.hi > prog_i[1]:
+                        prog_i[1] = c.hi
+                    prog_f[0] = float(getattr(inner, "_prev_raw", 0.0))
+            return (RE_CHUNK, (c.step, c.lo, c.hi, c.epoch))
+        if tag == OP_REPORT:  # one-way: feedback must not cost a round-trip
+            if inner is not None:
+                step, lo, hi, worker, elapsed, overhead = vals
+                inner.report(
+                    Chunk(int(step), int(lo), int(hi), int(worker)),
+                    float(elapsed), float(overhead),
+                )
+            return None
+        if tag == OP_STAT:
+            if inner is not None:
+                return (RE_STAT, (int(getattr(inner, "claimed", 0)),
+                                  int(inner.drained())))
+            n = counter_claimed()
+            return (RE_STAT, (n, int(bound is not None and n >= bound)))
+        if tag == OP_PING:
+            return (RE_INT, (gen,))
+        if tag == OP_SHUTDOWN:
+            n = getattr(inner, "claimed", 0) if inner is not None else counter_claimed()
+            raise StopServer(RE_INT, (int(n),))
+        raise ValueError(f"unknown op tag {tag}")
+
+    server = NetServer(handler, host=host, port=port)
+    server.start()
+    if port_conn is not None:
+        port_conn.send(server.port)
+        port_conn.close()
+    server.wait()  # parked until the shutdown op (or a SIGKILL ends us)
+    # handler closures still hold progress-block views; a normal interpreter
+    # exit would trip their GC against the mapped buffer (BufferError noise).
+    # All state is in-memory or shared — the clean exit IS the immediate exit.
+    os._exit(0)
+
+
+class _NetSourceBase(ChunkSource):
+    """Owner-side coordinator lifecycle shared by both networked sources:
+    spawn (ephemeral port, reported over a pipe), optional supervised
+    restart on the *same* port from the shared progress block, orderly
+    shutdown, pickling as a (address, policy) client handle."""
+
+    def _init_net(
+        self,
+        *,
+        ctx,
+        host: str,
+        supervise: bool,
+        retry: Optional[BackoffPolicy],
+        deadline_s: float,
+        link_latency_s: float,
+        inner_factory,
+        calc_delay_s: float,
+        bound: Optional[int],
+    ):
+        self._ctx = ctx if ctx is not None else default_context()
+        self._host = host
+        self._supervised = bool(supervise)
+        self._retry = retry if retry is not None else BackoffPolicy(
+            base_s=0.005, factor=2.0, cap_s=0.25
+        )
+        self._deadline_s = float(deadline_s)
+        self._link_latency_s = float(link_latency_s)
+        self._inner_factory = inner_factory
+        self._calc_delay_s = calc_delay_s
+        self._bound = bound
+        self._owner = True
+        self._proc = None
+        self._port = None
+        self.restarts = 0
+        self._progress_shm = None
+        self._prog_i = self._prog_f = None
+        if self._supervised:
+            self._progress_shm = create_block(_NET_PROGRESS_BYTES)
+            self._prog_i = int64_field(self._progress_shm, 0, 4)
+            self._prog_f = float64_field(self._progress_shm, 32, 1)
+        self._spawn(port=0)
+        self._client = self._make_client()
+        self._closing = threading.Event()
+        self._restart_lock = threading.Lock()
+        self._supervisor = None
+        if self._supervised:
+            self._supervisor = threading.Thread(
+                target=self._supervise_loop, name="netsource-supervisor",
+                daemon=True,
+            )
+            self._supervisor.start()
+
+    def _make_client(self) -> NetClient:
+        return NetClient(
+            (self._host, self._port),
+            fail_fast=not self._supervised,
+            retry=self._retry,
+            deadline_s=self._deadline_s,
+            link_latency_s=self._link_latency_s,
+        )
+
+    def _spawn(self, port: int):
+        recv, send = self._ctx.Pipe(duplex=False)
+        self._proc = self._ctx.Process(
+            target=_chunk_server_main,
+            args=(
+                send, self._host, port, self._inner_factory, self._calc_delay_s,
+                self._bound,
+                None if self._progress_shm is None else self._progress_shm.name,
+            ),
+            daemon=True,
+        )
+        self._proc.start()
+        send.close()
+        if not recv.poll(30):  # pragma: no cover - startup hang
+            self._proc.terminate()
+            raise RuntimeError("chunk server process failed to start")
+        self._port = int(recv.recv())
+        recv.close()
+
+    # -- supervision -----------------------------------------------------------
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return (self._host, self._port)
+
+    @property
+    def coordinator_pid(self) -> Optional[int]:
+        """The live server's pid (owner only) — the chaos kill target."""
+        return None if self._proc is None else self._proc.pid
+
+    def progress(self) -> dict:
+        """Snapshot of the shared progress block (supervised owner only)."""
+        if self._prog_i is None:
+            raise ValueError("progress tracking needs supervise=True")
+        return {
+            "served": int(self._prog_i[0]),
+            "lp": int(self._prog_i[1]),
+            "gen": int(self._prog_i[2]),
+            "alloc": int(self._prog_i[3]),
+            "prev_raw": float(self._prog_f[0]),
+        }
+
+    def _supervise_loop(self):
+        while not self._closing.wait(0.05):
+            proc = self._proc
+            if proc is None or proc.is_alive():
+                continue
+            with self._restart_lock:
+                if self._closing.is_set():
+                    return
+                if self._proc is not None and not self._proc.is_alive():
+                    try:
+                        self._restart()
+                    except Exception:  # pragma: no cover - retried next poll
+                        log.exception("chunk server restart failed; retrying")
+
+    def _restart(self):
+        """Replace a dead server on the same port (``_restart_lock`` held)."""
+        self._prog_i[2] += 1  # generation: replacement serves under gen+1
+        self.restarts += 1
+        self._spawn(port=self._port)
+
+    # -- shared protocol pieces -------------------------------------------------
+
+    def alloc_steps(self, n: int) -> int:
+        """Reserve ``n`` globally unique scheduling-step ids; returns the
+        first.  The tree's once-per-batch op — never on a worker's claim
+        path.  Survives supervised restarts (the allocator high-water mark
+        rides the progress block)."""
+        _, (base,) = self._client.request(OP_FADD, CounterIndex.STEPS, int(n))
+        return int(base)
+
+    def generation(self) -> int:
+        """The serving coordinator's generation (0 until a restart)."""
+        _, (gen,) = self._client.request(OP_PING)
+        return int(gen)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self):
+        """Owner: stop the supervisor, then the server.  Non-owners just
+        drop their connection."""
+        client, self._client = getattr(self, "_client", None), None
+        if client is not None:
+            if not self._owner:
+                client.close()
+                return
+            if self._supervisor is not None:
+                self._closing.set()  # before shutdown: no restart of what we stop
+                self._supervisor.join(timeout=5)
+                self._supervisor = None
+            if self._proc is not None:
+                try:
+                    # a short-deadline, fail-fast control client: close() must
+                    # not sit out the full retry budget on an already-dead server
+                    ctl = NetClient((self._host, self._port), fail_fast=True,
+                                    deadline_s=5.0)
+                    ctl.request(OP_SHUTDOWN)
+                    ctl.close()
+                except CoordinatorLostError:
+                    pass  # already gone
+                self._proc.join(timeout=10)
+                if self._proc.is_alive():  # pragma: no cover - hung server
+                    self._proc.terminate()
+                    self._proc.join(timeout=5)
+                self._proc = None
+            client.close()
+        if self._progress_shm is not None:
+            prog, self._progress_shm = self._progress_shm, None
+            self._prog_i = self._prog_f = None
+            unlink_block(prog)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def _client_state(self) -> dict:
+        return {
+            "host": self._host,
+            "port": self._port,
+            "supervised": self._supervised,
+            "retry": self._retry,
+            "deadline_s": self._deadline_s,
+            "link_latency_s": self._link_latency_s,
+        }
+
+    def _restore_client_state(self, state: dict):
+        self._host = state["host"]
+        self._port = state["port"]
+        self._supervised = state["supervised"]
+        self._retry = state["retry"]
+        self._deadline_s = state["deadline_s"]
+        self._link_latency_s = state["link_latency_s"]
+        self._owner = False
+        self._proc = None
+        self._supervisor = None
+        self._progress_shm = None
+        self._prog_i = self._prog_f = None
+        self.restarts = 0
+        self._client = self._make_client()
+
+
+# ---------------------------------------------------------------------------
+# RemoteCounterSource — DCA over the network
+# ---------------------------------------------------------------------------
+
+
+class RemoteCounterSource(_NetSourceBase):
+    """Precomputed DCA schedule, claimed through one fetch-and-add RPC.
+
+    Every attached process rebuilds the offset/size tables locally from
+    ``(technique, params)`` — closed forms are deterministic, so the
+    tables never cross the wire.  A claim is a single ``OP_FADD`` against
+    the counter server; the chunk itself is a local table read — the DCA
+    property, with the network paying exactly one one-way-ish RPC where
+    shared memory paid a lock-guarded increment.  There is no recursion
+    and no coordinator *logic* to lose: the server is a passive counter
+    host (the RMA window host), which is why the claim path needs no
+    ``supervise`` to stay decentralized — though ``supervise=True`` still
+    restart-protects the counter itself (restored from the progress
+    block's served high-water mark).
+    """
+
+    serialized = False
+
+    def __init__(
+        self,
+        technique: str,
+        params: DLSParams,
+        *,
+        ctx=None,
+        host: str = "127.0.0.1",
+        supervise: bool = False,
+        retry: Optional[BackoffPolicy] = None,
+        deadline_s: float = 15.0,
+        link_latency_s: float = 0.0,
+    ):
+        self.technique = technique
+        self.params = params
+        self.N = params.N
+        self.P = params.P
+        schedule = build_schedule_dca(technique, params)
+        self._schedule: Optional[Schedule] = schedule  # owner-only (materialize)
+        self._num_steps = schedule.num_steps
+        self._lo = schedule.offsets.tolist()
+        self._hi = (schedule.offsets + schedule.sizes).tolist()
+        self._init_net(
+            ctx=ctx, host=host, supervise=supervise, retry=retry,
+            deadline_s=deadline_s, link_latency_s=link_latency_s,
+            inner_factory=None, calc_delay_s=0.0, bound=self._num_steps,
+        )
+
+    # -- protocol ------------------------------------------------------------
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        _, (step,) = self._client.request(OP_FADD, CounterIndex.CLAIM, 1)
+        if step < 0:
+            return None
+        # table read — local, outside any critical section (the DCA property)
+        return Chunk(int(step), self._lo[step], self._hi[step], worker)
+
+    def drained(self) -> bool:
+        return self.claimed >= self._num_steps
+
+    @property
+    def claimed(self) -> int:
+        _, (n,) = self._client.request(OP_READ, CounterIndex.CLAIM)
+        return int(n)
+
+    @property
+    def num_steps(self) -> int:
+        return self._num_steps
+
+    def materialize(self) -> Schedule:
+        if self._schedule is None:
+            raise ValueError("materialize() is owner-only (attached copy)")
+        return self._schedule
+
+    # -- pickling (Process args) ----------------------------------------------
+
+    def __getstate__(self):
+        state = self._client_state()
+        state.update(technique=self.technique, params=self.params)
+        return state
+
+    def __setstate__(self, state):
+        self.technique = state["technique"]
+        self.params = state["params"]
+        self.N = self.params.N
+        self.P = self.params.P
+        # rebuild the tables locally — deterministic closed forms, so every
+        # attached process computes bit-identical chunks (nothing to ship)
+        schedule = build_schedule_dca(self.technique, self.params)
+        self._schedule = None
+        self._num_steps = schedule.num_steps
+        self._lo = schedule.offsets.tolist()
+        self._hi = (schedule.offsets + schedule.sizes).tolist()
+        self._restore_client_state(state)
+
+
+# ---------------------------------------------------------------------------
+# NetworkForemanSource — CCA over the network
+# ---------------------------------------------------------------------------
+
+
+class NetworkForemanSource(_NetSourceBase):
+    """Claims served by a coordinator process over a TCP round-trip.
+
+    The network analogue of ``ForemanSource``: ``inner_factory`` builds
+    the source the coordinator walks (``CriticalSectionSource`` for the
+    paper's CCA baseline, adaptive/selecting variants for centralized
+    feedback), and every chunk costs a full framed request/reply through
+    it.  ``report`` is one-way.  Failure semantics match the local foreman
+    contract exactly: unsupervised death raises ``CoordinatorLostError``
+    on the first symptom; ``supervise=True`` restarts the coordinator on
+    the same port from the shared progress block (no double-serve, at most
+    one in-flight chunk lost per kill) while clients retry through their
+    ``BackoffPolicy`` until ``deadline_s``.
+    """
+
+    def __init__(
+        self,
+        inner_factory,
+        *,
+        serialized: bool = True,
+        calc_delay_s: float = 0.0,
+        ctx=None,
+        technique: str = "?",
+        host: str = "127.0.0.1",
+        supervise: bool = False,
+        retry: Optional[BackoffPolicy] = None,
+        deadline_s: float = 15.0,
+        link_latency_s: float = 0.0,
+    ):
+        self.serialized = serialized
+        self.technique = technique
+        self._init_net(
+            ctx=ctx, host=host, supervise=supervise, retry=retry,
+            deadline_s=deadline_s, link_latency_s=link_latency_s,
+            inner_factory=inner_factory, calc_delay_s=calc_delay_s, bound=None,
+        )
+
+    # -- protocol ------------------------------------------------------------
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        rtag, vals = self._client.request(OP_CLAIM, worker)  # full round-trip
+        if rtag == RE_NONE:
+            return None
+        step, lo, hi, epoch = vals
+        return Chunk(int(step), int(lo), int(hi), worker, epoch=int(epoch))
+
+    def report(self, chunk: Chunk, elapsed: float, overhead: float = 0.0) -> None:
+        self._client.request(
+            OP_REPORT, chunk.step, chunk.lo, chunk.hi, chunk.worker,
+            float(elapsed), float(overhead), reply=False,
+        )
+
+    def drained(self) -> bool:
+        _, (_, drained) = self._client.request(OP_STAT)
+        return bool(drained)
+
+    @property
+    def claimed(self) -> int:
+        _, (claimed, _) = self._client.request(OP_STAT)
+        return int(claimed)
+
+    # -- pickling (Process args) ----------------------------------------------
+
+    def __getstate__(self):
+        state = self._client_state()
+        state.update(serialized=self.serialized, technique=self.technique)
+        return state
+
+    def __setstate__(self, state):
+        self.serialized = state["serialized"]
+        self.technique = state["technique"]
+        self._restore_client_state(state)
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+
+
+def net_source_for(
+    technique: str,
+    params: DLSParams,
+    mode: str = "auto",
+    calc_delay_s: float = 0.0,
+    ctx=None,
+    warn: bool = True,
+    feedback=None,
+    host: str = "127.0.0.1",
+    supervise: bool = False,
+    retry: Optional[BackoffPolicy] = None,
+    deadline_s: float = 15.0,
+    link_latency_s: float = 0.0,
+) -> ChunkSource:
+    """placement="net" analogue of ``process_source_for``.
+
+    Effective mode ``dca`` -> local closed-form tables + one fetch-and-add
+    RPC per claim (no coordinator logic anywhere); every other effective
+    mode (``cca``, ``dca_sync``, ``adaptive``, ``select``) needs a live
+    recursion or feedback state and is hosted by a network foreman — CCA's
+    centralized chunk server, with wire latency on top.
+    """
+    if feedback is not None:
+        raise NotImplementedError(
+            "custom feedback objects cannot cross the process boundary; the "
+            "network foreman builds its own (placement='thread' honors "
+            "feedback=)"
+        )
+    if technique == "auto":
+        effective, message = "select", None
+    else:
+        effective, message = resolve_mode(technique, mode)
+    if message and warn:
+        warnings.warn(message, ModeDowngradeWarning, stacklevel=2)
+    if effective == "dca":
+        # DCA calc delay is concurrent (per-claimer), applied by the executor
+        return RemoteCounterSource(
+            technique, params, ctx=ctx, host=host, supervise=supervise,
+            retry=retry, deadline_s=deadline_s, link_latency_s=link_latency_s,
+        )
+    inner_factory = functools.partial(
+        source_for, technique, params, mode, calc_delay_s=calc_delay_s, warn=False
+    )
+    return NetworkForemanSource(
+        inner_factory,
+        serialized=effective in ("cca", "dca_sync"),
+        calc_delay_s=calc_delay_s,
+        ctx=ctx,
+        technique=technique,
+        host=host,
+        supervise=supervise,
+        retry=retry,
+        deadline_s=deadline_s,
+        link_latency_s=link_latency_s,
+    )

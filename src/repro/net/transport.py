@@ -1,0 +1,424 @@
+"""Message-framed TCP transport for ChunkSource RPC.
+
+Wire format — deliberately tiny and dependency-free (no msgpack in the
+image, and the message set is closed): every frame is a 5-byte header
+``>IB`` (uint32 body length, uint8 tag) followed by a ``struct``-packed
+body whose format is fixed per tag (``TAGS``).  All scheduling messages
+are flat tuples of int64/float64, so struct covers the whole protocol;
+the only variable-length body is ``RE_ERR`` (a UTF-8 error string).
+
+The op set reuses the ``ForemanSource`` wire protocol (dist/sources.py)
+verbatim — claim/report/stat/shutdown — and adds the counter ops the DCA
+placement and the node-master tree need:
+
+=============  =======================  ==============================
+request        body                     reply
+=============  =======================  ==============================
+OP_CLAIM       worker                   RE_CHUNK (step, lo, hi, epoch)
+                                        or RE_NONE (drained)
+OP_REPORT      step lo hi worker e o    (one-way, no reply)
+OP_STAT        —                        RE_STAT (claimed, drained)
+OP_FADD        counter, amount          RE_INT (previous value, or -1
+                                        when a bounded counter drained)
+OP_READ        counter                  RE_INT (current value)
+OP_PING        —                        RE_INT (coordinator generation)
+OP_SHUTDOWN    —                        RE_INT (claims served)
+=============  =======================  ==============================
+
+**Client** (``NetClient``): one persistent connection per process,
+guarded by a thread lock; ``request()`` is deadline-aware — dead-server
+symptoms (refused connect, reset/EOF mid-stream, recv timeout) drop the
+connection and either fail fast with ``CoordinatorLostError`` (the
+unsupervised contract, matching ``ForemanSource``) or reconnect-and-retry
+through a ``BackoffPolicy`` until ``deadline_s``.  A request lost in
+flight is *not* replayed against stale state: the retry opens a fresh
+connection and issues a fresh request, so a claim whose reply was lost
+stays an at-most-once serve (the executor's gap repair covers it).
+
+**Server** (``NetServer``): a thread-per-connection loop (the hosted
+sources are already thread-safe; their lock *is* the serialization being
+measured).  The handler is a plain ``(tag, values) -> (tag, values)``
+function; raising ``StopServer`` replies then shuts the server down,
+raising ``DropConnection`` severs the connection without replying (the
+chaos tests' TCP-reset hook).
+
+**Per-link latency** (``link_latency_s``): the client sleeps half the
+figure before each send and half after each reply — a symmetric
+propagation delay per link, the knob ``SimulatedCluster`` turns to make
+loopback behave like a cluster interconnect.
+"""
+
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Optional, Tuple
+
+from repro.dist.sources import CoordinatorLostError
+from repro.runtime.failure import BackoffPolicy
+
+__all__ = [
+    "TAGS",
+    "OP_CLAIM",
+    "OP_REPORT",
+    "OP_STAT",
+    "OP_FADD",
+    "OP_READ",
+    "OP_PING",
+    "OP_SHUTDOWN",
+    "RE_CHUNK",
+    "RE_NONE",
+    "RE_STAT",
+    "RE_INT",
+    "RE_ERR",
+    "pack_body",
+    "unpack_body",
+    "send_frame",
+    "recv_frame",
+    "NetClient",
+    "NetServer",
+    "RemoteError",
+    "StopServer",
+    "DropConnection",
+]
+
+_HEADER = struct.Struct(">IB")  # body length, tag
+
+# request tags
+OP_CLAIM, OP_REPORT, OP_STAT, OP_FADD, OP_READ, OP_PING, OP_SHUTDOWN = range(1, 8)
+# reply tags
+RE_CHUNK, RE_NONE, RE_STAT, RE_INT, RE_ERR = range(32, 37)
+
+# tag -> struct format (None == variable-length UTF-8 payload)
+TAGS = {
+    OP_CLAIM: ">q",  # worker
+    OP_REPORT: ">qqqqdd",  # step, lo, hi, worker, elapsed, overhead
+    OP_STAT: "",
+    OP_FADD: ">qq",  # counter index, amount
+    OP_READ: ">q",  # counter index
+    OP_PING: "",
+    OP_SHUTDOWN: "",
+    RE_CHUNK: ">qqqq",  # step, lo, hi, epoch
+    RE_NONE: "",
+    RE_STAT: ">qq",  # claimed, drained (0/1)
+    RE_INT: ">q",
+    RE_ERR: None,
+}
+
+_MAX_BODY = 1 << 20  # sanity bound: no scheduling message is near 1 MiB
+
+
+class RemoteError(RuntimeError):
+    """The server's handler raised; the exception text crossed the wire."""
+
+
+class StopServer(Exception):
+    """Raised by a handler: send ``(reply_tag, values)`` then shut down."""
+
+    def __init__(self, reply_tag: int, values: Tuple = ()):
+        super().__init__("server stop requested")
+        self.reply_tag = reply_tag
+        self.values = values
+
+
+class DropConnection(Exception):
+    """Raised by a handler: sever this connection without replying — the
+    client sees a mid-conversation TCP reset (the chaos tests' fault hook)."""
+
+
+def pack_body(tag: int, *values) -> bytes:
+    fmt = TAGS[tag]
+    if fmt is None:
+        return str(values[0]).encode("utf-8") if values else b""
+    return struct.pack(fmt, *values) if fmt else b""
+
+
+def unpack_body(tag: int, body: bytes) -> Tuple:
+    fmt = TAGS[tag]
+    if fmt is None:
+        return (body.decode("utf-8", errors="replace"),)
+    return struct.unpack(fmt, body) if fmt else ()
+
+
+def send_frame(sock: socket.socket, tag: int, body: bytes) -> None:
+    if len(body) > _MAX_BODY:  # pragma: no cover - closed message set
+        raise ValueError(f"frame body too large ({len(body)} bytes)")
+    sock.sendall(_HEADER.pack(len(body), tag) + body)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        part = sock.recv(n - len(buf))
+        if not part:
+            raise ConnectionError("peer closed the connection mid-frame")
+        buf += part
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket) -> Tuple[int, bytes]:
+    length, tag = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
+    if length > _MAX_BODY:
+        raise ConnectionError(f"oversized frame ({length} bytes); desynced stream")
+    return tag, _recv_exact(sock, length) if length else b""
+
+
+# ---------------------------------------------------------------------------
+# Client
+# ---------------------------------------------------------------------------
+
+
+class NetClient:
+    """One framed TCP connection with deadline-aware request/reply.
+
+    ``fail_fast=True`` is the unsupervised ``ForemanSource`` contract: the
+    first dead-server symptom raises ``CoordinatorLostError``.  Otherwise
+    symptoms reconnect-and-retry with ``retry`` (a ``BackoffPolicy``)
+    until ``deadline_s`` from the first attempt, then raise the same typed
+    error.  Picklable: the pickle carries only (address, policy) — the
+    socket is re-established lazily in the receiving process.
+    """
+
+    def __init__(
+        self,
+        address: Tuple[str, int],
+        *,
+        fail_fast: bool = False,
+        retry: Optional[BackoffPolicy] = None,
+        deadline_s: float = 15.0,
+        link_latency_s: float = 0.0,
+    ):
+        self.address = (str(address[0]), int(address[1]))
+        self.fail_fast = bool(fail_fast)
+        self.retry = retry if retry is not None else BackoffPolicy(
+            base_s=0.005, factor=2.0, cap_s=0.25
+        )
+        self.deadline_s = float(deadline_s)
+        self.link_latency_s = float(link_latency_s)
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+
+    # -- connection management -----------------------------------------------
+
+    def _connect(self, timeout: float) -> socket.socket:
+        sock = socket.create_connection(self.address, timeout=max(timeout, 0.01))
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        return sock
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:  # pragma: no cover
+                pass
+        self._sock = None
+
+    # -- RPC -------------------------------------------------------------------
+
+    def request(self, tag: int, *values, reply: bool = True) -> Optional[Tuple]:
+        """One round-trip (or one-way send when ``reply=False``).
+
+        Returns ``(reply_tag, values)``.  ``RE_ERR`` replies raise
+        ``RemoteError`` (a programming error on the server — never
+        retried); transport-level symptoms follow the fail-fast/retry
+        policy described on the class.
+        """
+        body = pack_body(tag, *values)
+        latency = self.link_latency_s / 2.0
+        deadline = time.monotonic() + self.deadline_s
+        attempt = 0
+        while True:
+            try:
+                with self._lock:
+                    if self._sock is None:
+                        self._sock = self._connect(deadline - time.monotonic())
+                    if latency:
+                        time.sleep(latency)  # one-way propagation to the server
+                    self._sock.settimeout(max(deadline - time.monotonic(), 0.01))
+                    send_frame(self._sock, tag, body)
+                    if not reply:
+                        return None
+                    rtag, rbody = recv_frame(self._sock)
+                if latency:
+                    time.sleep(latency)  # propagation of the reply
+                if rtag == RE_ERR:
+                    raise RemoteError(unpack_body(rtag, rbody)[0])
+                return rtag, unpack_body(rtag, rbody)
+            except (ConnectionError, TimeoutError, OSError, EOFError) as e:
+                with self._lock:
+                    self._drop()
+                if self.fail_fast:
+                    raise CoordinatorLostError(
+                        f"server at {self.address[0]}:{self.address[1]} is gone "
+                        f"({type(e).__name__}); supervise=True enables restart"
+                    ) from e
+                attempt += 1
+                if time.monotonic() >= deadline:
+                    raise CoordinatorLostError(
+                        f"server at {self.address[0]}:{self.address[1]} did not "
+                        f"come back within {self.deadline_s:.1f}s "
+                        f"({attempt} attempts)"
+                    ) from e
+                self.retry.sleep(attempt)
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- pickling --------------------------------------------------------------
+
+    def __getstate__(self):
+        return {
+            "address": self.address,
+            "fail_fast": self.fail_fast,
+            "retry": self.retry,
+            "deadline_s": self.deadline_s,
+            "link_latency_s": self.link_latency_s,
+        }
+
+    def __setstate__(self, state):
+        self.__init__(
+            state["address"],
+            fail_fast=state["fail_fast"],
+            retry=state["retry"],
+            deadline_s=state["deadline_s"],
+            link_latency_s=state["link_latency_s"],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+
+class NetServer:
+    """Thread-per-connection framed-TCP server around a handler function.
+
+    ``handler(tag, values)`` returns ``(reply_tag, values)`` for
+    request/reply ops or ``None`` for one-way ops; exceptions become
+    ``RE_ERR`` replies.  ``port=0`` binds an ephemeral port (read it back
+    from ``.port`` after ``start()``); a supervised replacement passes the
+    captured port explicitly and ``SO_REUSEADDR`` re-binds it.
+    """
+
+    def __init__(
+        self,
+        handler: Callable[[int, Tuple], Optional[Tuple[int, Tuple]]],
+        *,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        backlog: int = 128,
+    ):
+        self.handler = handler
+        self.host = host
+        self._requested_port = int(port)
+        self._backlog = backlog
+        self._listener: Optional[socket.socket] = None
+        self._accept_thread: Optional[threading.Thread] = None
+        self._stopped = threading.Event()
+        self._conns: list = []
+        self._conns_lock = threading.Lock()
+        self.port: Optional[int] = None
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        if self.port is None:
+            raise RuntimeError("server not started")
+        return (self.host, self.port)
+
+    def start(self) -> "NetServer":
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind((self.host, self._requested_port))
+        listener.listen(self._backlog)
+        self._listener = listener
+        self.port = listener.getsockname()[1]
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="netserver-accept", daemon=True
+        )
+        self._accept_thread.start()
+        return self
+
+    def _accept_loop(self):
+        while not self._stopped.is_set():
+            try:
+                conn, _ = self._listener.accept()
+            except OSError:  # listener closed by stop()
+                return
+            conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            with self._conns_lock:
+                self._conns.append(conn)
+            threading.Thread(
+                target=self._serve_conn, args=(conn,), daemon=True
+            ).start()
+
+    def _serve_conn(self, conn: socket.socket):
+        try:
+            while not self._stopped.is_set():
+                try:
+                    tag, body = recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    result = self.handler(tag, unpack_body(tag, body))
+                except DropConnection:
+                    return  # sever without replying: the client sees a reset
+                except StopServer as s:
+                    send_frame(conn, s.reply_tag, pack_body(s.reply_tag, *s.values))
+                    self.stop()
+                    return
+                except Exception as e:  # handler bug -> typed client-side error
+                    try:
+                        send_frame(conn, RE_ERR, pack_body(RE_ERR, f"{type(e).__name__}: {e}"))
+                    except OSError:
+                        return
+                    continue
+                if result is not None:
+                    rtag, rvals = result
+                    try:
+                        send_frame(conn, rtag, pack_body(rtag, *rvals))
+                    except OSError:
+                        return
+        finally:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover
+                pass
+
+    def stop(self) -> None:
+        """Idempotent shutdown: closing the listener breaks the accept loop,
+        closing live connections breaks their recv loops."""
+        if self._stopped.is_set():
+            return
+        self._stopped.set()
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:  # pragma: no cover
+                pass
+        with self._conns_lock:
+            conns, self._conns = self._conns, []
+        for conn in conns:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover
+                pass
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until ``stop()`` (a coordinator process's main thread parks
+        here between ``start()`` and the shutdown op)."""
+        return self._stopped.wait(timeout)
+
+    def __enter__(self):
+        return self.start() if self.port is None else self
+
+    def __exit__(self, *exc):
+        self.stop()

@@ -1,0 +1,258 @@
+"""NodeMasterTree — hierarchical two-level claims: network batches, local µs.
+
+The MPI+MPI composition (arXiv:1903.09510) over this repo's substrates: one
+*global* networked source (``RemoteCounterSource`` / ``NetworkForemanSource``)
+hands out batches of contiguous iterations; a per-node **master process**
+claims those batches over TCP, subdivides each into a local DCA schedule,
+and re-serves the pieces intra-node through a shared-memory chunk board.
+Workers claim from the board under a per-node lock — two integer ops and a
+table read, the same ~µs cost as ``SharedStaticSource`` — and never touch
+the network on the common path.  Network traffic is one claim round-trip
+plus one step-block allocation *per batch*, amortized over the whole batch's
+chunks, which is what lets a claims/s curve keep climbing past the point
+where every-worker-on-TCP saturates (BENCH_dist_scaling).
+
+Step ids stay globally unique: each batch's local steps are numbered from a
+block reserved via the global source's fetch-and-add step allocator
+(``alloc_steps``), so the cross-engine exactly-once contract (no duplicate
+``step``) holds across nodes without any cross-node coordination on the
+claim path.
+
+Board layout (one shm segment per node, all int64)::
+
+    [ STATE | CTR | NSTEPS | GEN | BASE | MASTER_HB | lo[cap] | hi[cap] ]
+
+``CTR`` is the intra-batch fetch-and-add cursor; ``BASE`` the batch's global
+step offset; ``GEN`` bumps per published batch; ``MASTER_HB`` is the
+master's monotonic heartbeat.  The master *prefetches*: it claims and lays
+out the next batch while workers drain the current one, then publishes it
+the moment the board empties (swap under the node lock).  A master that
+stops heartbeating turns worker claims into ``CoordinatorLostError`` — the
+same typed failure as a lost foreman, so ``DistributedExecutor``'s degraded
+finish (lease sweep + gap repair) applies unchanged.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.core.schedule import build_schedule_dca
+from repro.core.source import Chunk, ChunkSource
+from repro.core.techniques import DLSParams
+from repro.dist.shm import attach_block, create_block, default_context, int64_field, unlink_block
+from repro.dist.sources import CoordinatorLostError
+
+__all__ = ["NodeMasterTree"]
+
+# board header slots (int64 each)
+_STATE, _CTR, _NSTEPS, _GEN, _BASE, _MASTER_HB = range(6)
+_HDR = 6
+_SERVING, _DRAINED = 0, 2
+
+
+def _board_views(shm, cap: int):
+    hdr = int64_field(shm, 0, _HDR)
+    lo = int64_field(shm, 8 * _HDR, cap)
+    hi = int64_field(shm, 8 * (_HDR + cap), cap)
+    return hdr, lo, hi
+
+
+def _node_master_main(global_source, board_name, lock, node_id, local_workers,
+                      local_technique, min_chunk, cap):
+    """Node master: claim global batches over TCP, re-serve them locally.
+
+    One-batch prefetch: the (network claim -> local schedule -> step-block
+    allocation) pipeline for batch k+1 overlaps the workers draining batch
+    k, so the board is empty only for the publish swap — workers poll for
+    ~one lock acquisition, not a network round-trip.  Exits when the global
+    source drains (STATE=DRAINED tells workers no refill is coming).
+    """
+    shm = attach_block(board_name)
+    hdr, lo, hi = _board_views(shm, cap)
+    stop = threading.Event()
+
+    def beat():  # a SIGKILLed master stops beating -> workers raise
+        while not stop.wait(0.05):
+            hdr[_MASTER_HB] = time.monotonic_ns()
+
+    hdr[_MASTER_HB] = time.monotonic_ns()
+    hb_thread = threading.Thread(target=beat, daemon=True)
+    hb_thread.start()
+    try:
+        while True:
+            gchunk = global_source.claim(node_id)  # the network round-trip
+            if gchunk is None:
+                with lock:
+                    hdr[_STATE] = _DRAINED  # current batch keeps serving
+                return
+            # subdivide the batch into a local DCA schedule and reserve a
+            # globally unique step block for it — both off the workers' path
+            sched = build_schedule_dca(
+                local_technique,
+                DLSParams(N=gchunk.size, P=local_workers, min_chunk=min_chunk),
+            )
+            s = sched.num_steps
+            if s > cap:  # pragma: no cover - capacity is sized from N/min_chunk
+                raise RuntimeError(f"node board overflow ({s} > {cap})")
+            base = global_source.alloc_steps(s)
+            while True:  # wait for the current batch to drain
+                with lock:
+                    if int(hdr[_CTR]) >= int(hdr[_NSTEPS]):
+                        lo[:s] = gchunk.lo + sched.offsets
+                        hi[:s] = gchunk.lo + sched.offsets + sched.sizes
+                        hdr[_BASE] = base
+                        hdr[_NSTEPS] = s
+                        hdr[_CTR] = 0
+                        hdr[_GEN] += 1
+                        break
+                time.sleep(0.0002)
+    finally:
+        stop.set()
+        hb_thread.join(timeout=1)
+        hdr = lo = hi = None  # release buffer views before unmapping
+        shm.close()
+
+
+class NodeMasterTree(ChunkSource):
+    """One node's view of the tree: a shm chunk board fed by a master process.
+
+    ``global_source`` is any networked source exposing ``claim`` +
+    ``alloc_steps`` (both ``repro.net`` sources do); the tree does **not**
+    own it — the caller (usually ``SimulatedCluster``) closes it after every
+    node's tree is done.  The tree object pickles as a board attachment, so
+    it passes straight into ``Process(args=...)`` / ``DistributedExecutor``.
+
+    ``master_timeout_s`` bounds how stale the master's heartbeat may go
+    before an empty-board claim raises ``CoordinatorLostError`` instead of
+    polling forever; size it above the global source's worst-case claim
+    (including its supervised-restart retry window).
+    """
+
+    serialized = False
+
+    def __init__(
+        self,
+        global_source,
+        *,
+        node_id: int = 0,
+        local_workers: int = 4,
+        local_technique: str = "ss",
+        min_chunk: int = 1,
+        N: Optional[int] = None,
+        ctx=None,
+        master_timeout_s: float = 10.0,
+    ):
+        ctx = ctx if ctx is not None else default_context()
+        N = N if N is not None else getattr(global_source, "N", None)
+        if N is None:
+            raise ValueError(
+                "pass N= (iteration-space size): the global source "
+                f"({type(global_source).__name__}) does not expose .N"
+            )
+        self.node_id = node_id
+        self._owner = True
+        self._master_timeout_s = float(master_timeout_s)
+        # worst case one batch spans the whole space in min_chunk pieces
+        self._cap = -(-int(N) // max(int(min_chunk), 1)) + 2
+        self._lock = ctx.Lock()
+        self._shm = create_block(8 * (_HDR + 2 * self._cap))
+        self._hdr, self._lo, self._hi = _board_views(self._shm, self._cap)
+        self._master = ctx.Process(
+            target=_node_master_main,
+            args=(global_source, self._shm.name, self._lock, node_id,
+                  local_workers, local_technique, min_chunk, self._cap),
+            daemon=True,
+        )
+        self._master.start()
+
+    @property
+    def coordinator_pid(self) -> Optional[int]:
+        """The node master's pid (owner only) — the chaos kill target."""
+        return None if self._master is None else self._master.pid
+
+    @property
+    def batches(self) -> int:
+        """Batches published so far (the board generation)."""
+        return int(self._hdr[_GEN])
+
+    # -- protocol ------------------------------------------------------------
+
+    def claim(self, worker: int = 0) -> Optional[Chunk]:
+        hdr = self._hdr
+        while True:
+            with self._lock:  # two integer ops — same window as SharedStatic
+                c = int(hdr[_CTR])
+                if c < int(hdr[_NSTEPS]):
+                    hdr[_CTR] = c + 1
+                    return Chunk(
+                        int(hdr[_BASE]) + c,
+                        int(self._lo[c]), int(self._hi[c]),
+                        worker,
+                    )
+                if int(hdr[_STATE]) == _DRAINED:
+                    return None
+            hb = int(hdr[_MASTER_HB])
+            if hb and (time.monotonic_ns() - hb) / 1e9 > self._master_timeout_s:
+                del hdr  # the raised traceback must not pin a board view
+                raise CoordinatorLostError(
+                    f"node {self.node_id} master stopped heartbeating; "
+                    "no batch refill is coming"
+                )
+            time.sleep(0.0005)  # board empty: master is mid-publish/refill
+
+    def drained(self) -> bool:
+        return (
+            int(self._hdr[_STATE]) == _DRAINED
+            and int(self._hdr[_CTR]) >= int(self._hdr[_NSTEPS])
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self):
+        """Drop this process's board mapping; the creator also stops the
+        master and unlinks the board."""
+        if self._shm is None:
+            return
+        self._hdr = self._lo = self._hi = None  # release buffer views
+        if self._owner:
+            if self._master is not None:
+                self._master.join(timeout=10)  # exits on global drain
+                if self._master.is_alive():
+                    self._master.terminate()
+                    self._master.join(timeout=5)
+                self._master = None
+            unlink_block(self._shm)
+        else:
+            self._shm.close()
+        self._shm = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- pickling (Process args) ----------------------------------------------
+
+    def __getstate__(self):
+        if self._shm is None:
+            raise ValueError("cannot pickle a closed NodeMasterTree")
+        return {
+            "name": self._shm.name,
+            "lock": self._lock,
+            "cap": self._cap,
+            "node_id": self.node_id,
+            "master_timeout_s": self._master_timeout_s,
+        }
+
+    def __setstate__(self, state):
+        self.node_id = state["node_id"]
+        self._cap = state["cap"]
+        self._lock = state["lock"]
+        self._master_timeout_s = state["master_timeout_s"]
+        self._owner = False
+        self._master = None
+        self._shm = attach_block(state["name"])
+        self._hdr, self._lo, self._hi = _board_views(self._shm, self._cap)

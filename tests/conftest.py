@@ -12,7 +12,12 @@ The ``chaos`` marker gates the fault-scenario survival grid
 (tests/test_chaos_conformance.py) and the seeded fault-schedule fuzz suite
 (tests/test_chaos_fuzz.py) the same way (``--chaos`` / ``RUN_CHAOS=1``):
 every cell SIGKILLs real processes and waits out kill/respawn latency, so
-tier-1 keeps only the unmarked smoke subset."""
+tier-1 keeps only the unmarked smoke subset.
+
+The ``net`` marker gates the networked-transport grid (tests/test_net_*.py
+and the networked engine in test_conformance.py) the same way (``--net`` /
+``RUN_NET=1``): every cell spins up TCP coordinator servers and node-master
+processes on loopback."""
 
 import os
 import signal
@@ -37,6 +42,13 @@ def pytest_addoption(parser):
         help="run the chaos fault-scenario grid (slow: kills and respawns "
         "real processes per cell); RUN_CHAOS=1 does the same",
     )
+    parser.addoption(
+        "--net",
+        action="store_true",
+        default=False,
+        help="run the networked-transport grid (slow: spins up TCP "
+        "coordinators and node masters per cell); RUN_NET=1 does the same",
+    )
 
 
 def _gate_enabled(config, option: str, env_var: str) -> bool:
@@ -48,6 +60,7 @@ def pytest_collection_modifyitems(config, items):
     gates = [
         ("conformance", "--conformance", "RUN_CONFORMANCE"),
         ("chaos", "--chaos", "RUN_CHAOS"),
+        ("net", "--net", "RUN_NET"),
     ]
     for marker, option, env_var in gates:
         if _gate_enabled(config, option, env_var):

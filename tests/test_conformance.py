@@ -1,11 +1,14 @@
-"""Cross-engine conformance: the four execution engines against one contract.
+"""Cross-engine conformance: the five execution engines against one contract.
 
-The repo has four ways to execute a (technique, mode, scenario) cell:
+The repo has five ways to execute a (technique, mode, scenario) cell:
 
 * the heapq event simulator        (core/simulator.simulate)
 * the vectorized round simulator   (core/fastsim.simulate_fast)
 * the thread executor              (core/executor.SelfSchedulingExecutor)
 * the process executor             (dist/executor.DistributedExecutor)
+* the networked process executor   (DistributedExecutor, placement="net":
+                                    TCP remote-counter DCA / network-foreman
+                                    CCA from repro.net)
 
 They share a contract this suite enforces differentially, per
 ``mixed_suite`` perturbation scenario (select/scenarios.py):
@@ -26,7 +29,9 @@ They share a contract this suite enforces differentially, per
 
 The full grid is expensive (it spawns real worker processes per cell), so
 it is marked ``conformance`` and skipped unless ``--conformance`` /
-``RUN_CONFORMANCE=1`` (tests/conftest.py); a small unmarked smoke subset
+``RUN_CONFORMANCE=1`` (tests/conftest.py); the networked engine's grid
+additionally spins TCP coordinators per cell and rides the ``net`` gate
+(``--net`` / ``RUN_NET=1``) instead.  A small unmarked smoke subset
 runs in tier-1.  The fuzz section pins the ``executed_ranges()`` contract
 (sorted, non-overlapping, exactly covering) under random draws — the
 invariant the dist reclamation logic relies on.
@@ -194,6 +199,88 @@ def test_dca_not_slower_than_cca_processes(scenario_name):
     assert t_dca <= t_cca * 1.2 + 0.05, (
         f"ss/{scenario_name}: dca {t_dca:.3f}s vs cca {t_cca:.3f}s"
     )
+
+
+# ---------------------------------------------------------------------------
+# The fifth engine: DistributedExecutor(placement="net") over TCP sources
+# ---------------------------------------------------------------------------
+
+
+def _run_net(tech, mode, scen, n=N, p=P):
+    from repro.dist import DistributedExecutor
+
+    with DistributedExecutor(
+        tech, _params(n, p), mode=mode, scenario=scen, placement="net"
+    ) as ex:
+        t = ex.run(WORK, p, join_timeout=90)
+    return ex, t
+
+
+NET_SCENARIOS = ["bursty", "calc_delay"]  # one perturbed, one slowdown
+
+
+@pytest.mark.net
+@pytest.mark.dist
+@pytest.mark.parametrize("scenario_name", NET_SCENARIOS)
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("tech", TECHNIQUES)
+def test_net_engine_agrees_with_simulator(tech, mode, scenario_name):
+    """The networked engine holds the same contract as the local four:
+    exact coverage, exactly-once steps, and — non-feedback techniques —
+    the simulator's chunk-size sequence, bit for bit, over TCP."""
+    scen = SCENARIOS[scenario_name]
+    ev = _sim(simulate, tech, mode, scen)
+    net_ex, _ = _run_net(tech, mode, scen)
+    _assert_exact_coverage(net_ex, N)
+    _assert_exactly_once(net_ex)
+    assert len(net_ex.records) == ev.num_chunks
+    assert np.array_equal(net_ex.chunk_size_sequence(), ev.chunk_sizes)
+
+
+@pytest.mark.net
+@pytest.mark.dist
+@pytest.mark.parametrize("scenario_name", SLOWDOWN_SCENARIOS)
+def test_net_dca_not_slower_than_net_cca(scenario_name):
+    """The paper's headline on the network substrate: a one-RPC fetch-add
+    claim (remote-counter DCA) must not lose to the network foreman's
+    serialized calculate-then-reply round-trip (CCA)."""
+    scen = SCENARIOS[scenario_name]
+    _, t_cca = _run_net("ss", "cca", scen)
+    _, t_dca = _run_net("ss", "dca", scen)
+    assert t_dca <= t_cca * 1.2 + 0.05, (
+        f"ss/{scenario_name}: net dca {t_dca:.3f}s vs net cca {t_cca:.3f}s"
+    )
+
+
+@pytest.mark.net
+@pytest.mark.dist
+def test_tree_cluster_holds_coverage_and_exactly_once():
+    """The two-level tree is a different schedule (global batches, local
+    subdivision), so no size-sequence parity — but coverage and globally
+    unique steps are non-negotiable."""
+    from repro.net import SimulatedCluster
+
+    params = DLSParams(N=2400, P=8, min_chunk=4)
+    with SimulatedCluster(
+        "fsc", params, n_nodes=4, workers_per_node=2, transport="tree",
+        link_latency_s=0.0005,
+    ) as cl:
+        res = cl.run(WORK, join_timeout=90)
+        assert res.covers_exactly(2400), res.executed
+        steps = sorted(r.step for r in cl.executor.records)
+        assert steps == list(range(len(steps))), "step collision across nodes"
+
+
+@pytest.mark.dist
+def test_smoke_net_engine_agrees_bursty():
+    """Tier-1 keeps one networked cell so the fifth engine cannot rot
+    behind its gate."""
+    scen = SCENARIOS["bursty"]
+    ev = _sim(simulate, "ss", "dca", scen)
+    net_ex, _ = _run_net("ss", "dca", scen)
+    _assert_exact_coverage(net_ex, N)
+    _assert_exactly_once(net_ex)
+    assert np.array_equal(net_ex.chunk_size_sequence(), ev.chunk_sizes)
 
 
 # ---------------------------------------------------------------------------

@@ -301,3 +301,71 @@ def test_supervised_foreman_restarts_and_serves_remainder():
         _assert_tiles([(c.lo, c.hi) for c in got], N)
     finally:
         src.close()
+
+
+# ---------------------------------------------------------------------------
+# Socket-path hygiene: unique per-instance paths, reclaimed on close
+# ---------------------------------------------------------------------------
+
+
+def test_two_concurrent_foremen_get_distinct_sockets():
+    """Regression: two foremen spun up concurrently (same pid, same second)
+    must land on distinct socket paths — each under its own fresh tempdir —
+    and serve independently; close() must remove both socket and tempdir."""
+    import os
+
+    params = DLSParams(N=400, P=2)
+    a = process_source_for("fac", params, "cca")
+    b = process_source_for("gss", params, "cca")
+    try:
+        assert a._address != b._address
+        assert os.path.dirname(a._address) != os.path.dirname(b._address)
+        # both serve their own schedule concurrently — no crosstalk
+        ra, rb = [], []
+        while True:
+            ca, cb = a.claim(0), b.claim(0)
+            if ca is None and cb is None:
+                break
+            if ca is not None:
+                ra.append((ca.lo, ca.hi))
+            if cb is not None:
+                rb.append((cb.lo, cb.hi))
+        _assert_tiles(ra, 400)
+        _assert_tiles(rb, 400)
+        assert len(ra) != len(rb), "fac and gss schedules should differ"
+    finally:
+        dirs = [os.path.dirname(a._address), os.path.dirname(b._address)]
+        a.close()
+        b.close()
+    for d in dirs:
+        assert not os.path.exists(d), f"socket tempdir {d} leaked past close()"
+
+
+# ---------------------------------------------------------------------------
+# Typed placement errors (three placements now exist)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_placement_raises_typed_placement_error():
+    """An unknown placement raises PlacementError — typed, a ValueError
+    subclass, and actionable (the message lists every valid placement) —
+    instead of a bare KeyError/AttributeError from a dispatch table."""
+    from repro.core.source import PLACEMENTS, PlacementError
+
+    with pytest.raises(PlacementError) as ei:
+        ScheduleSpec(technique="gss", N=100, P=2, placement="processes")
+    assert issubclass(PlacementError, ValueError)
+    assert not issubclass(PlacementError, (KeyError, AttributeError))
+    assert ei.value.placement == "processes"
+    for valid in PLACEMENTS:
+        assert f"'{valid}'" in str(ei.value), (
+            f"message must name {valid!r}: {ei.value}"
+        )
+
+
+def test_distributed_executor_rejects_unknown_placement():
+    from repro.core.source import PlacementError
+    from repro.dist import DistributedExecutor
+
+    with pytest.raises(PlacementError, match="'net'"):
+        DistributedExecutor("ss", DLSParams(N=100, P=2), placement="tcp")

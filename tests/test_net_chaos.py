@@ -1,0 +1,224 @@
+"""Network fault matrix: the TCP transport under coordinator kills, resets
+and stalls must honor the same contract as the local ``ForemanSource``.
+
+Grid (each cell SIGKILLs real processes, hence the ``chaos`` gate):
+
+* coordinator kill mid-stream — supervised: heals with no re-served step;
+  unsupervised: the *same* typed ``CoordinatorLostError`` the AF_UNIX
+  foreman raises, for both wire flavors (claim round-trip and fetch-add).
+* scenario-driven ``coordinator_kill`` through ``DistributedExecutor`` with
+  ``placement="net"`` — auto-supervision restarts the TCP coordinator and
+  the run still covers [0, N) exactly.
+* slow link vs ``heartbeat_timeout_s`` — a link slower than the heartbeat
+  budget gets workers culled as hung and the gap repair still covers; a
+  generous budget sees no failures at all.
+* node-master kill in the tree — workers surface ``CoordinatorLostError``
+  when the master's heartbeat goes stale, and a cluster run degrades to a
+  complete cover instead of wedging.
+
+TCP-reset-mid-claim (``DropConnection``) retry semantics are covered at the
+transport layer in tests/test_net_transport.py.
+"""
+
+import functools
+import os
+import signal
+import time
+
+import pytest
+
+from repro.core.techniques import DLSParams
+from repro.dist import DistributedExecutor, ForemanSource, process_source_for
+from repro.dist.sources import CoordinatorLostError
+from repro.net import NodeMasterTree, SimulatedCluster, net_source_for
+from repro.select import FaultEvent, PerturbationScenario
+
+pytestmark = [pytest.mark.dist, pytest.mark.chaos, pytest.mark.net]
+
+N, W = 2000, 4
+
+
+def _assert_tiles(ranges, n):
+    ranges = sorted(ranges)
+    assert ranges and ranges[0][0] == 0 and ranges[-1][1] == n
+    for (_, a_hi), (b_lo, _) in zip(ranges, ranges[1:]):
+        assert a_hi == b_lo, f"gap/overlap at {a_hi} vs {b_lo}"
+
+
+def _drain(source, wid=0):
+    out = []
+    while True:
+        c = source.claim(wid)
+        if c is None:
+            return out
+        out.append(c)
+
+
+def _sleep_work(iter_cost_s, lo, hi):
+    time.sleep(iter_cost_s * (hi - lo))
+
+
+WORK = functools.partial(_sleep_work, 20e-6)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator kill mid-stream
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["cca", "dca"])
+def test_supervised_net_coordinator_kill_heals_without_reserving(mode):
+    """Kill the TCP coordinator mid-stream: the supervisor restarts it on
+    the same port and no step is ever served twice (at-most-once serve via
+    the progress block), for both the foreman and the counter flavor."""
+    params = DLSParams(N=N, P=W)
+    src = net_source_for("fac" if mode == "cca" else "fsc", params, mode,
+                         supervise=True, deadline_s=15.0)
+    try:
+        before = [src.claim(0) for _ in range(5)]
+        assert all(c is not None for c in before)
+        os.kill(src.coordinator_pid, signal.SIGKILL)
+        time.sleep(0.2)
+        after = _drain(src)
+        assert src.restarts >= 1, "the kill must have been observed"
+        steps = [c.step for c in before + after]
+        assert len(steps) == len(set(steps)), "a step was served twice"
+        _assert_tiles([(c.lo, c.hi) for c in before + after], N)
+    finally:
+        src.close()
+
+
+@pytest.mark.parametrize("flavor", ["local_foreman", "net_foreman", "net_counter"])
+def test_unsupervised_kill_raises_the_same_typed_error(flavor):
+    """Contract parity: an unsupervised coordinator death surfaces as the
+    one typed ``CoordinatorLostError`` on every substrate — AF_UNIX foreman,
+    TCP foreman, and TCP fetch-add counter alike."""
+    params = DLSParams(N=N, P=W)
+    if flavor == "local_foreman":
+        src = process_source_for("fac", params, "cca")
+        assert isinstance(src, ForemanSource)
+    else:
+        src = net_source_for(
+            "fac" if flavor == "net_foreman" else "fsc", params,
+            "cca" if flavor == "net_foreman" else "dca",
+            supervise=False,
+        )
+    try:
+        assert src.claim(0) is not None
+        os.kill(src.coordinator_pid, signal.SIGKILL)
+        time.sleep(0.1)
+        with pytest.raises(CoordinatorLostError, match="supervise=True"):
+            for _ in range(3):  # first symptom may lag one buffered reply
+                src.claim(0)
+                time.sleep(0.05)
+    finally:
+        src.close()
+
+
+# ---------------------------------------------------------------------------
+# Scenario-driven coordinator_kill through the executor, placement="net"
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["cca", "dca"])
+def test_scenario_coordinator_kill_net_placement_survives(mode):
+    """A ``coordinator_kill`` fault in the scenario auto-enables the TCP
+    supervisor (same rule as the local foreman): the executor SIGKILLs the
+    live coordinator mid-run, the replacement fast-forwards, and the run
+    covers [0, N) with globally unique steps."""
+    scen = PerturbationScenario.constant(W, delay_calc_s=1e-4).with_faults(
+        FaultEvent("coordinator_kill", t=0.2)
+    )
+    params = DLSParams(N=3000, P=W)
+    with DistributedExecutor("fac" if mode == "cca" else "fsc", params,
+                             mode=mode, scenario=scen, placement="net") as ex:
+        assert ex.source._supervised, "coordinator faults must auto-supervise"
+        ex.run(functools.partial(_sleep_work, 3e-4), W,
+               join_timeout=90, heartbeat_timeout_s=5.0)
+    assert ex.source.restarts >= 1, "the scenario kill must have fired"
+    rng = ex.executed_ranges()
+    assert rng[0, 0] == 0 and rng[-1, 1] == 3000
+    assert (rng[1:, 0] == rng[:-1, 1]).all(), "gap/overlap in executed ranges"
+    steps = [r.step for r in ex.records if r.step >= 0]
+    assert len(steps) == len(set(steps)), "a step was recorded twice"
+
+
+# ---------------------------------------------------------------------------
+# Slow link vs heartbeat_timeout_s
+# ---------------------------------------------------------------------------
+
+
+def test_slow_link_trips_heartbeat_and_gap_repair_covers():
+    """A link slower than the heartbeat budget makes every in-flight claim
+    look like a hang: workers are culled, and the degraded-finish drain +
+    gap repair still produce an exact cover."""
+    params = DLSParams(N=8, P=W)
+    src = net_source_for("static", params, "dca", link_latency_s=0.6)
+    ex = DistributedExecutor("static", params, source=src)
+    try:
+        ex.run(WORK, W, join_timeout=60, heartbeat_timeout_s=0.25)
+    finally:
+        src.close()
+    assert ex.failures, "0.6s claims against a 0.25s budget must cull workers"
+    assert all(f["kind"] in ("hung", "died") for f in ex.failures)
+    rng = ex.executed_ranges()
+    assert rng[0, 0] == 0 and rng[-1, 1] == 8
+    assert (rng[1:, 0] == rng[:-1, 1]).all()
+
+
+def test_generous_heartbeat_tolerates_slow_link():
+    """The same slow link under a generous budget: no false positives."""
+    params = DLSParams(N=8, P=W)
+    src = net_source_for("static", params, "dca", link_latency_s=0.1)
+    ex = DistributedExecutor("static", params, source=src)
+    try:
+        ex.run(WORK, W, join_timeout=60, heartbeat_timeout_s=5.0)
+    finally:
+        src.close()
+    assert ex.failures == [], f"false-positive cull: {ex.failures}"
+    rng = ex.executed_ranges()
+    assert rng[0, 0] == 0 and rng[-1, 1] == 8
+    assert (rng[1:, 0] == rng[:-1, 1]).all()
+
+
+# ---------------------------------------------------------------------------
+# Tree: node-master death
+# ---------------------------------------------------------------------------
+
+
+def test_tree_master_kill_surfaces_coordinator_lost():
+    params = DLSParams(N=4000, P=1)
+    gsrc = net_source_for("fsc", params, "dca")
+    tree = NodeMasterTree(gsrc, node_id=0, local_workers=2, N=4000,
+                          master_timeout_s=0.5)
+    try:
+        assert tree.claim(0) is not None
+        os.kill(tree.coordinator_pid, signal.SIGKILL)
+        t0 = time.perf_counter()
+        with pytest.raises(CoordinatorLostError, match="master"):
+            while time.perf_counter() - t0 < 10:
+                tree.claim(0)
+    finally:
+        tree.close()
+        gsrc.close()
+
+
+def test_cluster_degrades_to_full_cover_when_a_master_dies():
+    """Kill one node's master mid-run: its workers die with
+    ``CoordinatorLostError``, the other node drains on, and the parent's
+    degraded finish covers whatever the dead node lost."""
+    params = DLSParams(N=2000, P=8, min_chunk=8)
+    with SimulatedCluster("fsc", params, n_nodes=2, workers_per_node=4,
+                          transport="tree", master_timeout_s=0.5) as cl:
+
+        def kill_one_master():
+            time.sleep(0.1)
+            os.kill(cl._trees[0].coordinator_pid, signal.SIGKILL)
+
+        import threading
+
+        threading.Thread(target=kill_one_master, daemon=True).start()
+        res = cl.run(functools.partial(_sleep_work, 2e-3),
+                     join_timeout=90, heartbeat_timeout_s=2.0)
+        assert res.covers_exactly(2000), res.executed
+        assert cl.executor.failures, "the dead node's workers must be detected"

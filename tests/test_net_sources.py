@@ -1,0 +1,330 @@
+"""Networked ChunkSources, the node-master tree, and the cluster harness.
+
+Everything here spins TCP coordinator servers (and, for the tree, node
+master processes) on loopback, so the bulk is marked ``net`` (gated by
+``--net`` / ``RUN_NET=1``); a thin unmarked smoke subset keeps tier-1
+covering the basic plumbing.  ``dist`` adds the SIGALRM hard deadline.
+"""
+
+import functools
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.schedule import build_schedule_cca, build_schedule_dca
+from repro.core.source import (
+    CriticalSectionSource,
+    ScheduleSpec,
+    make_source,
+)
+from repro.core.techniques import DLSParams
+from repro.net import (
+    NetworkForemanSource,
+    NodeMasterTree,
+    RemoteCounterSource,
+    SimulatedCluster,
+    net_source_for,
+)
+
+pytestmark = pytest.mark.dist  # SIGALRM hard deadline via tests/conftest.py
+
+
+def _assert_tiles(ranges, N):
+    ranges = sorted(ranges)
+    assert ranges, "no chunks claimed"
+    assert ranges[0][0] == 0 and ranges[-1][1] == N
+    for (_, a_hi), (b_lo, _) in zip(ranges, ranges[1:]):
+        assert a_hi == b_lo, f"gap/overlap at {a_hi} vs {b_lo}"
+
+
+def _drain(source, wid=0, report=False):
+    out = []
+    while True:
+        c = source.claim(wid)
+        if c is None:
+            return out
+        out.append(c)
+        if report:
+            source.report(c, 1e-6 * (c.hi - c.lo))
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 smoke: one source of each kind, single claimer
+# ---------------------------------------------------------------------------
+
+
+def test_smoke_remote_counter_matches_local_schedule():
+    params = DLSParams(N=800, P=4)
+    sched = build_schedule_dca("fsc", params)
+    with RemoteCounterSource("fsc", params) as src:
+        got = _drain(src)
+        assert src.drained() and src.claimed == sched.num_steps
+    assert [(c.lo, c.hi) for c in got] == sched.as_ranges()
+    assert [c.step for c in got] == list(range(sched.num_steps))
+
+
+def test_smoke_network_foreman_matches_local_cca():
+    params = DLSParams(N=800, P=4)
+    sched = build_schedule_cca("fac", params)
+    with net_source_for("fac", params, "cca") as src:
+        assert isinstance(src, NetworkForemanSource) and src.serialized
+        got = _drain(src, report=True)
+        assert src.drained()
+    assert [(c.lo, c.hi) for c in got] == sched.as_ranges()
+
+
+def test_smoke_make_source_placement_net():
+    spec = ScheduleSpec(technique="gss", N=600, P=4, mode="dca", placement="net")
+    src = make_source(spec)
+    assert isinstance(src, RemoteCounterSource)
+    try:
+        _assert_tiles([(c.lo, c.hi) for c in _drain(src)], 600)
+    finally:
+        src.close()
+    spec = ScheduleSpec(
+        technique="gss", N=100, P=4, levels=(("gss", 2), ("ss", 2)), placement="net"
+    )
+    with pytest.raises(NotImplementedError, match="SimulatedCluster"):
+        make_source(spec)
+
+
+# ---------------------------------------------------------------------------
+# net_source_for dispatch (mirrors process_source_for)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.net
+def test_net_source_for_picks_backend_by_effective_mode():
+    params = DLSParams(N=400, P=2)
+    src = net_source_for("fsc", params, "dca")
+    assert isinstance(src, RemoteCounterSource) and not src.serialized
+    src.close()
+    src = net_source_for("fac", params, "cca")
+    assert isinstance(src, NetworkForemanSource) and src.serialized
+    src.close()
+    src = net_source_for("awf_b", params, "adaptive")
+    assert isinstance(src, NetworkForemanSource) and not src.serialized
+    src.close()
+    with pytest.raises(NotImplementedError, match="feedback"):
+        net_source_for("af", params, "cca", feedback=object())
+
+
+# ---------------------------------------------------------------------------
+# Concurrency and cross-process attachment
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.net
+def test_remote_counter_concurrent_claimers_tile_exactly():
+    params = DLSParams(N=4000, P=8, min_chunk=4)
+    with RemoteCounterSource("ss", params) as src:
+        got = [[] for _ in range(8)]
+
+        def worker(wid):
+            got[wid] = _drain(src, wid)
+
+        ts = [threading.Thread(target=worker, args=(w,)) for w in range(8)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    chunks = [c for per in got for c in per]
+    _assert_tiles([(c.lo, c.hi) for c in chunks], 4000)
+    steps = sorted(c.step for c in chunks)
+    assert steps == list(range(len(steps))), "step served twice or skipped"
+
+
+def _proc_drain(source, wid, q):
+    out = [(c.step, c.lo, c.hi) for c in _drain(source, wid)]
+    q.put(out)
+
+
+@pytest.mark.net
+@pytest.mark.parametrize("builder", ["dca", "cca"])
+def test_net_sources_pickle_into_worker_processes(builder):
+    from repro.dist import default_context
+
+    ctx = default_context()
+    params = DLSParams(N=2000, P=4)
+    src = net_source_for("fsc", params, builder)
+    try:
+        q = ctx.Queue()
+        procs = [
+            ctx.Process(target=_proc_drain, args=(src, w, q)) for w in range(4)
+        ]
+        for p in procs:
+            p.start()
+        rows = [q.get(timeout=60) for _ in procs]
+        for p in procs:
+            p.join(timeout=30)
+        chunks = [c for per in rows for c in per]
+        _assert_tiles([(lo, hi) for _, lo, hi in chunks], 2000)
+        steps = sorted(s for s, _, _ in chunks)
+        assert steps == list(range(len(steps)))
+    finally:
+        src.close()
+
+
+@pytest.mark.net
+def test_alloc_steps_hands_out_disjoint_blocks():
+    params = DLSParams(N=100, P=2)
+    with RemoteCounterSource("ss", params) as src:
+        bases = []
+
+        def alloc_many():
+            for _ in range(20):
+                bases.append((src.alloc_steps(3), 3))
+
+        ts = [threading.Thread(target=alloc_many) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    spans = sorted((b, b + n) for b, n in bases)
+    for (_, a_hi), (b_lo, _) in zip(spans, spans[1:]):
+        assert b_lo >= a_hi, "step blocks overlap"
+    assert spans[0][0] == 0 and spans[-1][1] == 4 * 20 * 3
+
+
+# ---------------------------------------------------------------------------
+# NodeMasterTree
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.net
+def test_tree_single_node_covers_and_batches():
+    params = DLSParams(N=3000, P=4)
+    gparams = DLSParams(N=3000, P=1)  # one node -> one global PE
+    gsrc = net_source_for("fsc", gparams, "dca")
+    tree = NodeMasterTree(gsrc, node_id=0, local_workers=4,
+                         local_technique="ss", N=3000)
+    try:
+        chunks = _drain(tree)
+        assert tree.drained()
+        _assert_tiles([(c.lo, c.hi) for c in chunks], 3000)
+        steps = sorted(c.step for c in chunks)
+        assert steps == list(range(len(steps))), "globally unique steps"
+        # batching is real: more local chunks than global batches
+        assert tree.batches >= 2
+        assert len(chunks) > tree.batches
+    finally:
+        tree.close()
+        gsrc.close()
+
+
+@pytest.mark.net
+def test_tree_four_nodes_share_one_global_source():
+    params = DLSParams(N=4000, P=4)
+    gsrc = net_source_for("fsc", params, "dca")  # P=4: one global PE per node
+    trees = [
+        NodeMasterTree(gsrc, node_id=k, local_workers=2, N=4000)
+        for k in range(4)
+    ]
+    try:
+        per_node = [
+            [(c.step, c.lo, c.hi) for c in _drain(t, wid=k)]
+            for k, t in enumerate(trees)
+        ]
+        chunks = [c for per in per_node for c in per]
+        _assert_tiles([(lo, hi) for _, lo, hi in chunks], 4000)
+        steps = sorted(s for s, _, _ in chunks)
+        assert steps == list(range(len(steps))), "cross-node step collision"
+        assert all(per for per in per_node), "every node must serve work"
+    finally:
+        for t in trees:
+            t.close()
+        gsrc.close()
+
+
+# ---------------------------------------------------------------------------
+# SimulatedCluster + DistributedExecutor integration
+# ---------------------------------------------------------------------------
+
+
+def _sleep_work(iter_cost_s, lo, hi):
+    import time
+
+    time.sleep(iter_cost_s * (hi - lo))
+
+
+WORK = functools.partial(_sleep_work, 20e-6)
+
+
+@pytest.mark.net
+@pytest.mark.parametrize("transport", ["dca", "cca", "tree"])
+def test_cluster_transports_cover_exactly(transport):
+    params = DLSParams(N=2000, P=8, min_chunk=8)
+    with SimulatedCluster(
+        "fsc", params, n_nodes=2, workers_per_node=4, transport=transport,
+        mode="cca" if transport == "cca" else "auto",
+        link_latency_s=0.001,
+    ) as cl:
+        res = cl.run(WORK, join_timeout=90)
+        assert res.covers_exactly(2000), res.executed
+        steps = sorted(r.step for r in cl.executor.records)
+        assert steps == list(range(len(steps)))
+        assert res.reclaimed == 0
+        assert res.n_workers == 8
+
+
+@pytest.mark.net
+def test_cluster_rejects_bad_shapes():
+    params = DLSParams(N=100, P=8)
+    with pytest.raises(ValueError, match="transport"):
+        SimulatedCluster("ss", params, transport="rdma")
+    with pytest.raises(ValueError, match="n_nodes"):
+        SimulatedCluster("ss", params, n_nodes=3, workers_per_node=2)
+
+
+@pytest.mark.net
+def test_executor_builds_net_source_via_placement():
+    from repro.dist import DistributedExecutor
+
+    params = DLSParams(N=1000, P=4, min_chunk=4)
+    with DistributedExecutor("fsc", params, mode="dca", placement="net") as ex:
+        assert isinstance(ex.source, RemoteCounterSource)
+        ex.run(WORK, 4, join_timeout=90)
+    rng = ex.executed_ranges()
+    assert rng[0, 0] == 0 and rng[-1, 1] == 1000
+    assert (rng[1:, 0] == rng[:-1, 1]).all()
+
+
+@pytest.mark.net
+def test_net_foreman_chunk_sequence_matches_local_foreman():
+    """Same inner recursion, different wire: the network foreman and the
+    AF_UNIX foreman serve identical chunk-size sequences."""
+    from repro.dist import process_source_for
+
+    params = DLSParams(N=1500, P=4)
+    with net_source_for("gss", params, "cca") as net_src:
+        net_sizes = [c.size for c in _drain(net_src)]
+    local_src = process_source_for("gss", params, "cca")
+    try:
+        local_sizes = [c.size for c in _drain(local_src)]
+    finally:
+        local_src.close()
+    assert net_sizes == local_sizes
+
+
+@pytest.mark.net
+def test_supervised_remote_counter_survives_restart_without_reserving():
+    """The progress block makes the claim counter restart-durable: a
+    replacement counter server resumes past every step already served."""
+    import os
+    import signal
+    import time
+
+    params = DLSParams(N=2000, P=4)
+    src = net_source_for("fsc", params, supervise=True, deadline_s=10.0)
+    try:
+        before = [src.claim(0) for _ in range(6)]
+        os.kill(src.coordinator_pid, signal.SIGKILL)
+        time.sleep(0.2)
+        after = _drain(src)
+        assert src.restarts >= 1
+        steps = [c.step for c in before + after]
+        assert len(steps) == len(set(steps)), "a step was served twice"
+        _assert_tiles([(c.lo, c.hi) for c in before + after], 2000)
+    finally:
+        src.close()

@@ -1,0 +1,273 @@
+"""Framed-TCP transport: wire format, request/reply, failure semantics.
+
+Pure wire-format tests run in tier-1; everything that binds sockets and
+spins server threads is marked ``net`` (gated behind ``--net`` /
+``RUN_NET=1``) except a single unmarked round-trip smoke.
+"""
+
+import socket
+import threading
+import time
+
+import pytest
+
+from repro.dist.sources import CoordinatorLostError
+from repro.net.transport import (
+    OP_CLAIM,
+    OP_FADD,
+    OP_PING,
+    OP_REPORT,
+    RE_CHUNK,
+    RE_ERR,
+    RE_INT,
+    RE_NONE,
+    TAGS,
+    DropConnection,
+    NetClient,
+    NetServer,
+    RemoteError,
+    StopServer,
+    pack_body,
+    recv_frame,
+    send_frame,
+    unpack_body,
+)
+from repro.runtime.failure import BackoffPolicy
+
+
+# ---------------------------------------------------------------------------
+# Wire format (tier-1: no sockets)
+# ---------------------------------------------------------------------------
+
+
+SAMPLES = {
+    OP_CLAIM: (7,),
+    OP_REPORT: (3, 100, 228, 7, 0.125, 0.0625),
+    OP_FADD: (0, 1),
+    OP_PING: (),
+    RE_CHUNK: (12, 4096, 8192, 2),
+    RE_NONE: (),
+    RE_INT: (-1,),
+    RE_ERR: ("ValueError: boom",),
+}
+
+
+@pytest.mark.parametrize("tag", sorted(SAMPLES))
+def test_pack_unpack_roundtrip(tag):
+    values = SAMPLES[tag]
+    assert unpack_body(tag, pack_body(tag, *values)) == values
+
+
+def test_every_tag_has_a_format():
+    for tag, fmt in TAGS.items():
+        assert fmt is None or isinstance(fmt, str), tag
+
+
+def test_frame_roundtrip_over_socketpair():
+    a, b = socket.socketpair()
+    try:
+        body = pack_body(RE_CHUNK, 1, 2, 3, 0)
+        send_frame(a, RE_CHUNK, body)
+        tag, got = recv_frame(b)
+        assert tag == RE_CHUNK and got == body
+        # frames are delimited: two back-to-back sends arrive as two frames
+        send_frame(a, OP_PING, b"")
+        send_frame(a, OP_CLAIM, pack_body(OP_CLAIM, 9))
+        assert recv_frame(b)[0] == OP_PING
+        assert unpack_body(OP_CLAIM, recv_frame(b)[1]) == (9,)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_truncated_frame_raises_connection_error():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"\x00\x00\x00\x08\x01\xff")  # claims 8 body bytes, sends 1
+        a.close()
+        with pytest.raises(ConnectionError):
+            recv_frame(b)
+    finally:
+        b.close()
+
+
+# ---------------------------------------------------------------------------
+# Request/reply smoke (unmarked: one server, milliseconds)
+# ---------------------------------------------------------------------------
+
+
+def _echo_handler(tag, vals):
+    if tag == OP_CLAIM:
+        if vals[0] < 0:
+            return (RE_NONE, ())
+        return (RE_CHUNK, (vals[0], 0, 10, 0))
+    if tag == OP_FADD:
+        raise ValueError("no counters here")
+    if tag == OP_PING:
+        return (RE_INT, (0,))
+    if tag == OP_REPORT:
+        return None  # one-way
+    raise AssertionError(f"unexpected tag {tag}")
+
+
+def test_server_request_reply_and_remote_error():
+    with NetServer(_echo_handler) as srv:
+        cli = NetClient(srv.address, fail_fast=True)
+        try:
+            rtag, vals = cli.request(OP_CLAIM, 5)
+            assert rtag == RE_CHUNK and vals == (5, 0, 10, 0)
+            rtag, _ = cli.request(OP_CLAIM, -1)
+            assert rtag == RE_NONE
+            assert cli.request(OP_REPORT, 0, 0, 10, 0, 0.0, 0.0, reply=False) is None
+            # handler exceptions cross the wire as typed RemoteError, and the
+            # connection survives for the next request
+            with pytest.raises(RemoteError, match="no counters here"):
+                cli.request(OP_FADD, 0, 1)
+            assert cli.request(OP_PING)[1] == (0,)
+        finally:
+            cli.close()
+
+
+# ---------------------------------------------------------------------------
+# Failure semantics (net-gated: binds ports, burns retry/backoff time)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.net
+def test_fail_fast_client_raises_typed_error_on_dead_server():
+    srv = NetServer(_echo_handler).start()
+    addr = srv.address
+    srv.stop()
+    cli = NetClient(addr, fail_fast=True)
+    with pytest.raises(CoordinatorLostError, match="supervise=True"):
+        cli.request(OP_PING)
+    assert not issubclass(CoordinatorLostError, OSError)
+
+
+@pytest.mark.net
+def test_retry_client_honors_deadline_then_raises():
+    srv = NetServer(_echo_handler).start()
+    addr = srv.address
+    srv.stop()
+    cli = NetClient(
+        addr,
+        retry=BackoffPolicy(base_s=0.01, factor=2.0, cap_s=0.05),
+        deadline_s=0.4,
+    )
+    t0 = time.perf_counter()
+    with pytest.raises(CoordinatorLostError, match="did not come back"):
+        cli.request(OP_PING)
+    waited = time.perf_counter() - t0
+    assert 0.3 <= waited < 5.0, f"deadline not honored ({waited:.2f}s)"
+
+
+@pytest.mark.net
+def test_retry_client_reconnects_to_replacement_on_same_port():
+    """The supervised contract: a server that dies and is replaced on the
+    same port is transparent to a retrying client."""
+    srv = NetServer(_echo_handler).start()
+    addr = srv.address
+    cli = NetClient(addr, deadline_s=10.0,
+                    retry=BackoffPolicy(base_s=0.01, factor=2.0, cap_s=0.05))
+    try:
+        assert cli.request(OP_PING)[1] == (0,)
+        srv.stop()  # client's connection is now dead
+
+        def resurrect():
+            time.sleep(0.15)
+            NetServer(_echo_handler, host=addr[0], port=addr[1]).start()
+
+        threading.Thread(target=resurrect, daemon=True).start()
+        rtag, vals = cli.request(OP_CLAIM, 3)  # retries until the replacement
+        assert rtag == RE_CHUNK and vals == (3, 0, 10, 0)
+    finally:
+        cli.close()
+
+
+@pytest.mark.net
+def test_drop_connection_is_retried_not_replayed_blindly():
+    """A mid-conversation TCP reset (DropConnection) costs the retrying
+    client one reconnect; a fail-fast client surfaces the typed error."""
+    dropped = []
+
+    def handler(tag, vals):
+        if tag == OP_CLAIM and not dropped:
+            dropped.append(1)
+            raise DropConnection()
+        return _echo_handler(tag, vals)
+
+    with NetServer(handler) as srv:
+        cli = NetClient(srv.address, deadline_s=5.0,
+                        retry=BackoffPolicy(base_s=0.01, factor=2.0, cap_s=0.05))
+        try:
+            rtag, vals = cli.request(OP_CLAIM, 4)
+            assert rtag == RE_CHUNK and vals == (4, 0, 10, 0)
+            assert dropped, "the first claim must have been dropped"
+        finally:
+            cli.close()
+
+    dropped.clear()
+    with NetServer(handler) as srv:
+        cli = NetClient(srv.address, fail_fast=True)
+        try:
+            with pytest.raises(CoordinatorLostError):
+                cli.request(OP_CLAIM, 4)
+        finally:
+            cli.close()
+
+
+@pytest.mark.net
+def test_stop_server_replies_then_stops():
+    def handler(tag, vals):
+        if tag == OP_PING:
+            raise StopServer(RE_INT, (42,))
+        return _echo_handler(tag, vals)
+
+    srv = NetServer(handler).start()
+    cli = NetClient(srv.address, fail_fast=True)
+    try:
+        assert cli.request(OP_PING)[1] == (42,)
+        assert srv.wait(timeout=5), "StopServer must stop the server"
+    finally:
+        cli.close()
+
+
+@pytest.mark.net
+def test_link_latency_is_paid_per_round_trip():
+    with NetServer(_echo_handler) as srv:
+        fast = NetClient(srv.address, fail_fast=True)
+        slow = NetClient(srv.address, fail_fast=True, link_latency_s=0.02)
+        try:
+            for cli in (fast, slow):  # warm both connections
+                cli.request(OP_PING)
+            t0 = time.perf_counter()
+            for _ in range(5):
+                fast.request(OP_PING)
+            t_fast = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            for _ in range(5):
+                slow.request(OP_PING)
+            t_slow = time.perf_counter() - t0
+            assert t_slow >= t_fast + 5 * 0.02 * 0.8, (
+                f"latency not injected: fast {t_fast:.3f}s slow {t_slow:.3f}s"
+            )
+        finally:
+            fast.close()
+            slow.close()
+
+
+@pytest.mark.net
+def test_client_pickles_as_address_and_reconnects():
+    import pickle
+
+    with NetServer(_echo_handler) as srv:
+        cli = NetClient(srv.address, fail_fast=True, link_latency_s=0.001)
+        try:
+            cli.request(OP_PING)  # establish the socket (not picklable)
+            clone = pickle.loads(pickle.dumps(cli))
+            assert clone.address == cli.address
+            assert clone.link_latency_s == cli.link_latency_s
+            assert clone.request(OP_PING)[1] == (0,)  # fresh lazy connection
+            clone.close()
+        finally:
+            cli.close()
