@@ -51,7 +51,8 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 from repro.core.techniques import DLSParams
-from repro.net import NodeMasterTree, SimulatedCluster, net_source_for
+from repro.net import NodeMasterTree, SimulatedCluster
+from repro.net.sources import _net_source_for
 
 N_NODES = 4
 CALC_DELAY_S = 1e-4  # per-chunk calculation cost (serialized under CCA)
@@ -98,13 +99,13 @@ def _claims_cell(transport, workers):
     n = CLAIM_STEPS * 2  # "ss" with min_chunk=2 -> exactly CLAIM_STEPS steps
     params = DLSParams(N=n, P=workers, min_chunk=2)
     if transport == "cca":
-        src = net_source_for("ss", params, "cca", calc_delay_s=CALC_DELAY_S)
+        src = _net_source_for("ss", params, "cca", calc_delay_s=CALC_DELAY_S)
         try:
             served, wall = _drain_threads(src.claim, workers, 0.0)
         finally:
             src.close()
     elif transport == "dca":
-        src = net_source_for("ss", params, "dca")
+        src = _net_source_for("ss", params, "dca")
         try:
             served, wall = _drain_threads(src.claim, workers, CALC_DELAY_S)
         finally:
@@ -112,7 +113,7 @@ def _claims_cell(transport, workers):
     else:  # tree: 4 node boards fed by masters, workers claim via shm
         # coarse global batches (fsc, floored at 128 iterations) keep the
         # masters' TCP traffic to a few dozen RPCs; "ss" locally subdivides
-        gsrc = net_source_for(
+        gsrc = _net_source_for(
             "fsc", DLSParams(N=n, P=N_NODES, min_chunk=128), "dca"
         )
         trees = [

@@ -41,7 +41,8 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
 from repro.core.schedule import build_schedule_dca
 from repro.core.source import StaticSource
 from repro.core.techniques import DLSParams
-from repro.dist import SharedStaticSource, process_source_for
+from repro.dist import SharedStaticSource
+from repro.dist.sources import _process_source_for
 from repro.dist.shm import default_context
 
 
@@ -176,7 +177,7 @@ def bench_process(n_claims: int = 20_000, n_procs: int = 4, repeats: int = 3) ->
         src = SharedStaticSource.build("ss", params, ctx=ctx)
         shared.append(_process_ns_per_claim(src, n_procs, ctx))
         src.close()
-        src = process_source_for("ss", params, "cca", ctx=ctx)
+        src = _process_source_for("ss", params, "cca", ctx=ctx)
         foreman.append(_process_ns_per_claim(src, n_procs, ctx))
         src.close()
     out[f"shared_static_ns_per_claim_{n_procs}procs"] = min(shared)

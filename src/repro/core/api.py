@@ -29,7 +29,7 @@ import time
 import warnings
 from typing import Dict, Optional, Tuple
 
-from .source import Chunk, ChunkSource, ModeDowngradeWarning, resolve_mode, source_for
+from .source import Chunk, ChunkSource, ModeDowngradeWarning, resolve_mode, _source_for
 from .techniques import DLSParams, get_technique
 
 __all__ = [
@@ -90,7 +90,7 @@ def Configure_Chunk_Calculation_Mode(info: _LoopInfo, mode: str) -> None:
 
 
 def DLS_StartLoop(info: _LoopInfo) -> None:
-    info.source = source_for(
+    info.source = _source_for(
         info.technique, info.params, info.effective_mode, warn=False
     )
     with info.lock:

@@ -41,7 +41,7 @@ from typing import Callable, List, Optional, Tuple
 
 import numpy as np
 
-from .source import ChunkSource, resolve_mode, source_for
+from .source import ChunkSource, resolve_mode, _source_for
 from .techniques import DLSParams, auto_technique, get_technique
 
 __all__ = ["SelfSchedulingExecutor", "ChunkRecord"]
@@ -50,32 +50,30 @@ __all__ = ["SelfSchedulingExecutor", "ChunkRecord"]
 def _resolve_scenario(scenario, calc_delay_s: float, P: int):
     """Normalize the (scenario, legacy calc_delay_s) pair for an executor.
 
-    Returns ``(scenario, delay_calc_s, injector)``: the legacy scalar
-    becomes a constant scenario (the paper's original perturbation, aliased
-    rather than a second code path); a ``ScenarioInjector`` is built only
-    when the scenario actually perturbs speeds — a uniform static profile
-    *is* the machine's native pace under relative speeds, so stretching
-    would only add overhead.
+    Returns ``(scenario, delay_calc_s, injector)``: normalization goes
+    through the simulators' single ``normalize_scenario`` helper (the legacy
+    scalar becomes a constant scenario — the paper's original perturbation,
+    aliased rather than a second code path); a ``ScenarioInjector`` is built
+    only when the scenario actually perturbs speeds, carries faults, or
+    models the network — a uniform static profile *is* the machine's native
+    pace under relative speeds, so stretching would only add overhead.
     """
-    if scenario is None:
-        if not calc_delay_s:
-            return None, 0.0, None
-        from repro.select.scenarios import PerturbationScenario  # select imports core
+    from .simulator import normalize_scenario
 
-        scenario = PerturbationScenario.constant(
-            P, delay_calc_s=calc_delay_s, name="calc_delay"
-        )
-    elif calc_delay_s:
-        raise ValueError("pass either scenario= or the legacy calc_delay_s, not both")
-    if scenario.P != P:
-        raise ValueError(
-            f"scenario has {scenario.P} PE profiles, params.P={P}"
-        )
+    scenario = normalize_scenario(
+        scenario, P, delay_calc_s=calc_delay_s, warn=False,
+        on_delay_conflict="error",
+    )
+    if scenario is None:
+        return None, 0.0, None
     injector = None
-    # faults force an injector even under uniform static speeds: the fault
-    # table and fired flags live in the injector's shared block
-    if getattr(scenario, "has_faults", False) or not (
-        scenario.static and np.ptp(scenario.base_speeds()) == 0.0
+    # faults force an injector even under uniform static speeds (the fault
+    # table and fired flags live in the injector's shared block); a network
+    # model does too (the injector owns the per-claim transport pricing)
+    if (
+        getattr(scenario, "has_faults", False)
+        or getattr(scenario, "has_network", False)
+        or not (scenario.static and np.ptp(scenario.base_speeds()) == 0.0)
     ):
         from repro.runtime.inject import ScenarioInjector  # runtime imports core
 
@@ -121,19 +119,32 @@ class SelfSchedulingExecutor:
         self.scenario, self.calc_delay_s, self._injector = _resolve_scenario(
             scenario, calc_delay_s, params.P
         )
+        # under a network model, serialized claims extend the coordinator's
+        # critical section by the reply's port serialization (the simulators'
+        # ``service + serialization_s``); the concurrent wire legs are paid
+        # per claim in the worker loop via ``injector.claim_delay``
+        coord_extra = (
+            self._injector.coordinator_service_extra()
+            if self._injector is not None
+            else 0.0
+        )
         if source is not None:
-            if self.calc_delay_s and source.serialized:
+            serial_delay = self.calc_delay_s + (coord_extra if source.serialized else 0.0)
+            if serial_delay and source.serialized:
                 # the serialized delay belongs inside the source's own
                 # critical section, not on the claiming worker
                 from repro.runtime.inject import inject_source  # runtime imports core
 
-                source = inject_source(source, self.calc_delay_s)
+                source = inject_source(source, serial_delay)
             self.source = source
             self.mode = "custom"
         else:
             self.mode, _ = resolve_mode(technique, mode)
-            self.source = source_for(
-                technique, params, mode, calc_delay_s=self.calc_delay_s
+            build_delay = self.calc_delay_s
+            if coord_extra and self.mode in ("cca", "dca_sync"):
+                build_delay += coord_extra
+            self.source = _source_for(
+                technique, params, mode, calc_delay_s=build_delay
             )
         self.records: List[ChunkRecord] = []
         self._records_lock = threading.Lock()
@@ -181,6 +192,18 @@ class SelfSchedulingExecutor:
         if injector is not None:
             injector.start()  # stamp the shared run clock before workers start
 
+        # per-claim transport (network model): the wire legs are concurrent
+        # on the claiming worker, sampled at its current link factor; sources
+        # that inject their own delay (make_source-wrapped) already price the
+        # claim transport, so paying it here too would double-charge
+        net_claims = (
+            injector is not None
+            and injector.has_network
+            and not getattr(self.source, "injects_delay", False)
+        )
+        serialized = self.source.serialized
+        amortized = bool(getattr(self.source, "amortizes_network", False))
+
         def worker(wid: int):
             source = self.source
             delay = self._loop_delay()
@@ -191,6 +214,10 @@ class SelfSchedulingExecutor:
                 chunk = source.claim(wid)
                 if chunk is None:
                     return
+                if net_claims:
+                    nd = injector.claim_delay(wid, serialized, amortized)
+                    if nd:
+                        time.sleep(nd)  # claim transport, concurrent wire legs
                 if delay:
                     time.sleep(delay)  # calculation slowdown, concurrent (DCA)
                 t_claim = time.perf_counter()

@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from .schedule import build_schedule_cca, build_schedule_dca
-from .simulator import SimConfig, SimResult, simulate
+from .simulator import SimConfig, SimResult, _apply_scenario, normalize_scenario, simulate
 from .techniques import DLSParams, get_technique
 
 __all__ = ["simulate_fast", "simulate_sweep", "sweep_configs"]
@@ -126,13 +126,19 @@ def _seq_sum(start: float, step: float, count: int) -> float:
 
 
 def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds,
-                scenario=None):
+                scenario=None, network=None):
     """Blocked event loop for one config; bit-identical to the heapq loop.
 
     exec_chunks: [S] per-chunk execution time at unit speed.
     ``scenario``: a time-varying PerturbationScenario (static scenarios are
-    folded into ``speeds`` by the caller) — each chunk's speed is sampled at
+    folded into ``speeds`` by the caller — unless a ``network`` keeps the
+    scenario alive for its link tables) — each chunk's speed is sampled at
     its assignment-done time, the same float64 lookup the event loop does.
+    ``network``: a NetworkModel; claims pay the same transport legs as the
+    event loop, element-wise in the same IEEE op order (request leg before
+    the coordinator recurrence, return leg after it; the reply serialization
+    extends the serialized service, so the recurrence's ``svc`` stays a
+    scalar — the property the whole vectorization rests on).
     Returns (pe_finish [P], pe_busy [P], pes [S]).
     """
     p = len(speeds)
@@ -141,6 +147,10 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds,
     pes = np.empty(s_total, np.int64)
     coord = 0.0
     extra = 0.0
+    if network is not None and is_cca:
+        # the reply message occupies the master's single-server output port:
+        # one more (link-independent) serialization inside the service
+        service = service + network.serialization_s
     svc = service if is_cca else h
     # x/1.0 == x: skip the division (time-varying speeds divide per round)
     unit_speed = scenario is None and bool(np.all(speeds == 1.0))
@@ -156,7 +166,17 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds,
         # DCA: the chunk calculation runs on the requesting PE before it asks
         # the coordinator; CCA: it is part of the serialized service.
         ready = t_req if is_cca else (t_req + delay) + calc
+        if network is not None:
+            if is_cca:
+                ready = (t_req + network.serialization_s) \
+                    + network.propagation_s * scenario.links_at(cand[:k], t_req)
+            else:
+                ready = ready + network.rma_oneway_s * scenario.links_at(cand[:k], ready)
         done = _coord_recurrence(ready, svc, coord)
+        done_coord = done
+        if network is not None:
+            leg = network.propagation_s if is_cca else network.rma_oneway_s
+            done = done + leg * scenario.links_at(cand[:k], done)
         exec_t = exec_chunks[s:s + k]
         if scenario is not None:
             exec_t = exec_t / scenario.speeds_at(cand[:k], done)
@@ -189,7 +209,8 @@ def _run_config(exec_chunks, is_cca, service, delay, calc, h, nonded, speeds,
         pes[s:s + commit] = idx
         if exec_done is not None:
             exec_done[s:s + commit] = exec_t[:commit]
-        coord = float(done[commit - 1])
+        # the port frees when the reply is serialized, before it propagates
+        coord = float(done_coord[commit - 1])
         if track_extra:
             k0 = np.flatnonzero(idx == 0)
             if k0.size:  # PE0 flushed at block position k0: extra restarts
@@ -241,17 +262,17 @@ def _exec_base(sizes, offsets, costs, n):
 
 
 def _cfg_engine_args(cfg: SimConfig):
+    # configs reach here already normalized (normalize_scenario in
+    # simulator.py is the single validation/wrapping point); re-normalizing
+    # is idempotent and catches direct callers
+    cfg = _apply_scenario(cfg, warn=False)
     scenario = cfg.scenario
+    network = None
     if scenario is not None:
-        if cfg.pe_speeds is not None:
-            raise ValueError("pass either pe_speeds or scenario, not both")
-        if scenario.P != cfg.params.P:
-            raise ValueError(
-                f"scenario has {scenario.P} PE profiles, params.P={cfg.params.P}"
-            )
         delay = float(scenario.delay_calc_s)
         speeds = scenario.base_speeds()
-        if scenario.static:
+        network = getattr(scenario, "network", None)
+        if scenario.static and network is None:
             scenario = None  # constant profiles: the plain pe_speeds path
     else:
         delay = cfg.delay_calc_s
@@ -263,15 +284,26 @@ def _cfg_engine_args(cfg: SimConfig):
         is_cca=is_cca, service=service, delay=delay,
         calc=cfg.calc_cost_s, h=cfg.h_assign_s,
         nonded=is_cca and not cfg.dedicated_master, speeds=speeds,
-        scenario=scenario,
+        scenario=scenario, network=network,
     )
 
 
-def simulate_fast(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
-    """Drop-in ``simulate`` replacement for non-feedback techniques.
+def simulate_fast(
+    cfg: SimConfig,
+    costs: np.ndarray,
+    source=None,
+    *,
+    scenario=None,
+    network=None,
+) -> SimResult:
+    """Drop-in ``simulate`` replacement for non-feedback techniques — same
+    unified ``(cfg, costs, source=None, *, scenario=, network=)`` signature
+    (the docstring table on ``simulate`` covers all three entry points).
 
     Bit-identical to the event engine (same chunk sizes, same PE placement,
-    same T_loop^par) — the equivalence suite pins this.
+    same T_loop^par) — the equivalence suite pins this, including under a
+    ``NetworkModel`` (the transport legs replicate the event loop's float
+    op order element-wise).
 
     ``source``: a ChunkSource whose chunk table is execution-independent
     (``materialize()``-capable, e.g. StaticSource / non-feedback
@@ -280,10 +312,18 @@ def simulate_fast(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
     to the event engine (their chunks depend on live timings — the same
     reason AF keeps the event engine).
     """
+    cfg = _apply_scenario(cfg, scenario=scenario, network=network)
     p = cfg.params
     if source is not None:
         mat = getattr(source, "materialize", None)
         if mat is None:
+            return simulate(cfg, costs, source=source)
+        if (
+            getattr(source, "amortizes_network", False)
+            and getattr(cfg.scenario, "network", None) is not None
+        ):
+            # tree sources price claims by amortized batch refills, a shape
+            # the vectorized legs don't model — event engine handles it
             return simulate(cfg, costs, source=source)
         try:
             sched = mat()
@@ -374,18 +414,27 @@ def sweep_configs(
 
 
 def simulate_sweep(
-    params: DLSParams,
+    params,
     costs: np.ndarray,
-    techniques: Sequence[str],
-    approaches: Sequence[str] = ("cca", "dca"),
+    techniques: Optional[Sequence[str]] = None,
+    approaches: Optional[Sequence[str]] = None,
     delays_s: Sequence[float] = (0.0, 1e-5, 1e-4),
     speed_scenarios: Optional[Dict[str, Optional[np.ndarray]]] = None,
     h_assign_s: float = 1e-6,
     calc_cost_s: float = 2e-7,
     dedicated_master: bool = False,
     perturbations: Optional[Sequence[object]] = None,
+    source=None,
+    scenario=None,
+    network=None,
 ) -> List[dict]:
     """Run a whole (technique x approach x delay x speed) grid, batched.
+
+    Same unified shape as ``simulate``/``simulate_fast`` (see the docstring
+    table there): the first argument may be a ``SimConfig`` — its params,
+    technique, approach, overheads, and scenario seed the grid (explicit
+    axes still win) — or a bare ``DLSParams`` with ``techniques`` required.
+    ``source`` must be None: sources are stateful, one run each.
 
     Per technique, every scenario shares the chunk tables (built once with
     the vectorized analytic builders); each scenario then replays through the
@@ -396,9 +445,41 @@ def simulate_sweep(
     ``perturbations``: a sequence of ``PerturbationScenario`` objects
     (select/scenarios.py) replaces the (delays_s x speed_scenarios) cross
     product — the grid becomes technique x approach x scenario, each
-    scenario bringing its own calculation delay and per-PE speed profiles.
+    scenario bringing its own calculation delay, per-PE speed profiles, and
+    (optionally) ``NetworkModel`` + link profiles.  ``scenario=`` is
+    shorthand for a single-scenario ``perturbations`` axis.  ``network=``
+    attaches a ``NetworkModel`` to every swept scenario that does not carry
+    its own (legacy delay/speed grids included), pricing claim transport.
     This is the SimAS selector's entry point (select/simas.py).
     """
+    if source is not None:
+        raise TypeError(
+            "simulate_sweep(source=...) is not supported: sources are "
+            "stateful (one run each) — sweep technique/approach axes instead"
+        )
+    if isinstance(params, SimConfig):
+        cfg0 = params
+        params = cfg0.params
+        techniques = techniques if techniques is not None else [cfg0.technique]
+        approaches = approaches if approaches is not None else (cfg0.approach,)
+        h_assign_s = cfg0.h_assign_s
+        calc_cost_s = cfg0.calc_cost_s
+        dedicated_master = cfg0.dedicated_master
+        if scenario is None and perturbations is None and cfg0.scenario is not None:
+            scenario = cfg0.scenario
+    if techniques is None:
+        raise TypeError("techniques is required when params is a DLSParams")
+    if approaches is None:
+        approaches = ("cca", "dca")
+    if scenario is not None:
+        if perturbations is not None:
+            raise ValueError("pass either scenario= or perturbations=, not both")
+        perturbations = [scenario]
+    if perturbations is not None and network is not None:
+        perturbations = [
+            s if getattr(s, "network", None) is not None else s.with_network(network)
+            for s in perturbations
+        ]
     rows: List[dict] = []
 
     def _row(technique, approach, delay, sname, engine, res):
@@ -439,8 +520,13 @@ def simulate_sweep(
         return rows
 
     speed_scenarios = speed_scenarios or {"homog": None}
+    # legacy (delay x speeds) cells normalize to constant scenarios once per
+    # cell (warn=False: the grid axes are first-class sweep parameters, not a
+    # deprecated call form) — bit-identical to the old pe_speeds path
     grid = [
-        (a, d, sname, sp)
+        (a, d, sname,
+         normalize_scenario(None, params.P, delay_calc_s=d, pe_speeds=sp,
+                            network=network, warn=False))
         for a in approaches
         for d in delays_s
         for sname, sp in speed_scenarios.items()
@@ -449,12 +535,11 @@ def simulate_sweep(
         tech = get_technique(technique)
         if not tech.requires_feedback:
             tables, execs = _technique_tables(technique, params, costs, approaches)
-        for a, d, sname, sp in grid:
+        for a, d, sname, scen in grid:
             cfg = SimConfig(
                 technique=technique, params=params, approach=a,
-                delay_calc_s=d, h_assign_s=h_assign_s,
-                calc_cost_s=calc_cost_s, pe_speeds=sp,
-                dedicated_master=dedicated_master,
+                h_assign_s=h_assign_s, calc_cost_s=calc_cost_s,
+                dedicated_master=dedicated_master, scenario=scen,
             )
             if tech.requires_feedback:
                 # cca/dca keep the paper's synchronized event paths;

@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -48,6 +49,7 @@ __all__ = [
     "SimResult",
     "AFFeedback",
     "simulate",
+    "normalize_scenario",
     "mandelbrot_costs",
     "psia_costs",
     "constant_costs",
@@ -196,30 +198,152 @@ class AFFeedback:
         self._count[pe] += 1
 
 
-def _apply_scenario(cfg: SimConfig) -> SimConfig:
-    """Fold a PerturbationScenario into the config: its calculation delay
-    replaces ``delay_calc_s``; its speed profiles drive per-chunk execution
-    (sampled at chunk start — see module docstring)."""
-    scen = cfg.scenario
+_LEGACY_SIMCONFIG_MSG = (
+    "SimConfig(pe_speeds=..., delay_calc_s=...) is deprecated; pass "
+    "SimConfig(scenario=PerturbationScenario.constant(P, delay_calc_s, speeds)) "
+    "instead — scenario= is the one simulator parameterization "
+    "(see the README migration table)"
+)
+
+
+def normalize_scenario(
+    scenario=None,
+    P: Optional[int] = None,
+    *,
+    delay_calc_s: float = 0.0,
+    pe_speeds=None,
+    network=None,
+    warn: bool = True,
+    on_delay_conflict: str = "supersede",
+):
+    """THE normalization point for the (scenario | legacy scalars) split.
+
+    Every consumer — both simulator engines, the thread executor, the
+    distributed executor, ``simulate_sweep`` — funnels its perturbation
+    parameters through here, so the either/or validation and the
+    legacy-to-scenario wrapping exist exactly once.
+
+    * ``scenario`` set: validated (``P`` profile count, no ``pe_speeds``
+      alongside) and returned; ``delay_calc_s`` is superseded by the
+      scenario's own delay (``on_delay_conflict="supersede"``, the SimConfig
+      contract) or rejected (``"error"``, the executors' contract, where the
+      two delays would race).
+    * ``scenario`` unset but legacy scalars present: auto-wrapped into a
+      constant ``PerturbationScenario`` (bit-identical by construction: the
+      engines read the same float64 values through the scenario tables) with
+      a ``DeprecationWarning`` when ``warn``.
+    * nothing set and no ``network``: returns None — the unperturbed path.
+
+    ``network`` (a ``NetworkModel``) is attached to whatever scenario comes
+    out; an explicit ``network=`` wins over one the scenario already carries.
+    """
+    if scenario is not None:
+        if pe_speeds is not None:
+            raise ValueError("pass either pe_speeds or scenario, not both")
+        if on_delay_conflict == "error" and delay_calc_s:
+            raise ValueError(
+                "pass either scenario= or the legacy calc_delay_s, not both"
+            )
+        if P is not None and scenario.P != P:
+            raise ValueError(
+                f"scenario has {scenario.P} PE profiles, params.P={P}"
+            )
+        if network is not None:
+            scenario = scenario.with_network(network)
+        return scenario
+    if pe_speeds is None and not delay_calc_s and network is None:
+        return None
+    if P is None:
+        raise ValueError("P is required to wrap legacy scalars into a scenario")
+    if warn and (pe_speeds is not None or delay_calc_s):
+        warnings.warn(_LEGACY_SIMCONFIG_MSG, DeprecationWarning, stacklevel=3)
+    # deferred: core stays importable without select (the scenario object is
+    # duck-typed everywhere else in this module)
+    from ..select.scenarios import PerturbationScenario
+
+    scen = PerturbationScenario.constant(
+        int(P),
+        delay_calc_s=float(delay_calc_s),
+        speeds=pe_speeds,
+        name="legacy",
+    )
+    if network is not None:
+        scen = scen.with_network(network)
+    return scen
+
+
+def _apply_scenario(
+    cfg: SimConfig, *, scenario=None, network=None, warn: bool = True
+) -> SimConfig:
+    """Fold the scenario/network kwargs and any legacy scalars into one
+    normalized config: ``cfg.scenario`` ends up authoritative (its delay
+    mirrored into ``delay_calc_s`` for the timing model, ``pe_speeds``
+    cleared), or None when the config is genuinely unperturbed.  Idempotent,
+    so engines can re-apply defensively without double-warning."""
+    if scenario is not None and cfg.scenario is not None:
+        raise ValueError(
+            "pass scenario= either in SimConfig or as a simulate kwarg, not both"
+        )
+    scen = normalize_scenario(
+        cfg.scenario if cfg.scenario is not None else scenario,
+        cfg.params.P,
+        delay_calc_s=cfg.delay_calc_s,
+        pe_speeds=cfg.pe_speeds,
+        network=network,
+        warn=warn,
+    )
     if scen is None:
         return cfg
-    if cfg.pe_speeds is not None:
-        raise ValueError("pass either pe_speeds or scenario, not both")
-    if scen.P != cfg.params.P:
-        raise ValueError(f"scenario has {scen.P} PE profiles, params.P={cfg.params.P}")
-    return dataclasses.replace(cfg, delay_calc_s=float(scen.delay_calc_s))
+    return dataclasses.replace(
+        cfg,
+        scenario=scen,
+        delay_calc_s=float(scen.delay_calc_s),
+        pe_speeds=None,
+    )
 
 
-def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
+def simulate(
+    cfg: SimConfig,
+    costs: np.ndarray,
+    source=None,
+    *,
+    scenario=None,
+    network=None,
+) -> SimResult:
     """Run one CCA/DCA/adaptive execution; returns T_loop^par and diagnostics.
+
+    Unified signature (shared by all three simulator entry points):
+
+    ===============  =========================  ================================
+    parameter        simulate / simulate_fast   simulate_sweep
+    ===============  =========================  ================================
+    ``cfg``          ``SimConfig``              ``SimConfig`` or ``DLSParams``
+                                                (a config seeds the grid)
+    ``costs``        per-iteration cost vector  same
+    ``source``       optional ``ChunkSource``   must be None (sources are
+                                                stateful — one run each)
+    ``scenario=``    one ``PerturbationScenario``  one scenario, or
+                                                ``perturbations=[...]`` for a
+                                                grid axis
+    ``network=``     ``NetworkModel`` attached  same (attached to every
+                     to the run's scenario      scenario lacking its own)
+    ===============  =========================  ================================
 
     ``source`` (any ``ChunkSource``) overrides the technique/approach pair:
     chunks are claimed from it and per-chunk execution times are reported
     back, with the timing model selected by ``source.serialized``.  A fresh
     source must be supplied per call (sources are stateful).
     ``approach="adaptive"`` builds an ``AdaptiveSource`` internally.
+
+    When the run's scenario carries a ``NetworkModel``, claims additionally
+    pay modeled transport (DESIGN.md Sec. 14): CCA requests serialize through
+    the coordinator's single-server output port (``serialization_s``, twice)
+    and ride two link-scaled propagation legs; DCA fetch-and-adds pay two
+    link-scaled one-sided ``rma_oneway_s`` legs around the serialized
+    ``h_assign``; sources flagged ``amortizes_network`` (the node-master
+    tree) pay ``tree_claim_s`` — one batch refill spread over its chunks.
     """
-    cfg = _apply_scenario(cfg)
+    cfg = _apply_scenario(cfg, scenario=scenario, network=network)
     p = cfg.params
     assert len(costs) >= p.N, f"need >= {p.N} iteration costs, got {len(costs)}"
     if source is None and cfg.approach == "adaptive":
@@ -235,6 +359,7 @@ def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
         return _simulate_with_source(cfg, costs, source)
     tech = get_technique(cfg.technique)
     scen = cfg.scenario
+    net = getattr(scen, "network", None) if scen is not None else None
     speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
     assert len(speeds) == p.P
 
@@ -284,29 +409,44 @@ def simulate(cfg: SimConfig, costs: np.ndarray, source=None) -> SimResult:
 
     while remaining > 0:
         t_req, pe = heapq.heappop(heap)
-        if cfg.approach == "cca":
+        if cfg.approach == "cca" or af_like:
             # request travels to master; service serialized there, calculation
-            # delay *inside* the master's service time
+            # delay *inside* the master's service time (af_like: paper Sec. 4,
+            # AF's calculation needs R_i -> synchronized like CCA, minus the
+            # master displacement)
             service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
-            start = max(t_req, coord_free)
+            if net is not None:
+                # request leg: the PE's message occupies its port for one
+                # serialization (link-independent) then propagates over its
+                # (possibly degraded) link; the reply's serialization extends
+                # the master's single-server service, its propagation rides
+                # the link after the port frees
+                arrival = (t_req + net.serialization_s) + net.propagation_s * scen.link_at(pe, t_req)
+                service = service + net.serialization_s
+            else:
+                arrival = t_req
+            start = max(arrival, coord_free)
             done = start + service
             coord_free = done
-            if not cfg.dedicated_master:
+            if net is not None:
+                done = done + net.propagation_s * scen.link_at(pe, coord_free)
+            if cfg.approach == "cca" and not cfg.dedicated_master:
                 master_extra += service  # displaces PE0's own compute
         else:  # dca
-            if af_like:
-                # paper Sec. 4: AF's calculation needs R_i -> synchronized
-                service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
-                start = max(t_req, coord_free)
-                done = start + service
-                coord_free = done
+            # calculation at the requesting PE, concurrent across PEs;
+            # only the fetch-and-add serializes
+            t_calc_done = t_req + cfg.delay_calc_s + cfg.calc_cost_s
+            if net is not None:
+                # RMA split (arXiv:1901.02773): one-sided op pays wire time
+                # both ways but no remote CPU — only h_assign serializes
+                arrival = t_calc_done + net.rma_oneway_s * scen.link_at(pe, t_calc_done)
             else:
-                # calculation at the requesting PE, concurrent across PEs;
-                # only the fetch-and-add serializes
-                t_calc_done = t_req + cfg.delay_calc_s + cfg.calc_cost_s
-                start = max(t_calc_done, coord_free)
-                done = start + cfg.h_assign_s
-                coord_free = done
+                arrival = t_calc_done
+            start = max(arrival, coord_free)
+            done = start + cfg.h_assign_s
+            coord_free = done
+            if net is not None:
+                done = done + net.rma_oneway_s * scen.link_at(pe, coord_free)
 
         # chunk calculation value
         if feedback is not None:
@@ -362,15 +502,24 @@ def _simulate_with_source(cfg: SimConfig, costs: np.ndarray, source) -> SimResul
     calculation runs on the requesting PE, only ``h_assign`` serializes).
     Per-chunk execution time (and the scheduling overhead, for AWF-D/E) is
     fed back through ``report()`` at assignment, matching the legacy AF loop.
+
+    Network model (when the scenario carries one): serialized sources pay the
+    CCA round-trip (two port serializations + two link-scaled propagation
+    legs), plain sources pay the DCA one-sided legs, and sources flagged
+    ``amortizes_network`` (the node-master tree) pay the amortized batch
+    refill ``tree_claim_s`` on the way in — the board re-serve back to the
+    worker is local shared memory, so the return leg is free.
     """
     cfg = _apply_scenario(cfg)
     p = cfg.params
     scen = cfg.scenario
+    net = getattr(scen, "network", None) if scen is not None else None
     speeds = cfg.pe_speeds if cfg.pe_speeds is not None else np.ones(p.P)
     assert len(speeds) == p.P
     csum = np.concatenate([[0.0], np.cumsum(costs[: p.N])])
 
     serialized = bool(getattr(source, "serialized", False))
+    amortized = bool(getattr(source, "amortizes_network", False))
     heap = [(0.0, pe) for pe in range(p.P)]
     heapq.heapify(heap)
     coord_free = 0.0
@@ -387,18 +536,36 @@ def _simulate_with_source(cfg: SimConfig, costs: np.ndarray, source) -> SimResul
             continue  # PE retires; remaining PEs drain the queue
         if serialized:
             service = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
-            start = max(t_req, coord_free)
+            if net is not None:
+                arrival = (t_req + net.serialization_s) + net.propagation_s * scen.link_at(pe, t_req)
+                service = service + net.serialization_s
+            else:
+                arrival = t_req
+            start = max(arrival, coord_free)
             done = start + service
             coord_free = done
+            if net is not None:
+                done = done + net.propagation_s * scen.link_at(pe, coord_free)
             if not cfg.dedicated_master:
                 master_extra += service
-            overhead = service
+            overhead = done - t_req if net is not None else service
         else:
             t_calc_done = t_req + cfg.delay_calc_s + cfg.calc_cost_s
-            start = max(t_calc_done, coord_free)
+            if net is not None:
+                # amortized: the claim's share of one coarse batch refill
+                # (hierarchical board re-serve is local -> no return leg)
+                leg = net.tree_claim_s if amortized else net.rma_oneway_s
+                arrival = t_calc_done + leg * scen.link_at(pe, t_calc_done)
+            else:
+                arrival = t_calc_done
+            start = max(arrival, coord_free)
             done = start + cfg.h_assign_s
             coord_free = done
+            if net is not None and not amortized:
+                done = done + net.rma_oneway_s * scen.link_at(pe, coord_free)
             overhead = cfg.delay_calc_s + cfg.calc_cost_s + cfg.h_assign_s
+            if net is not None:
+                overhead = done - t_req
 
         speed = scen.speed_at(pe, done) if scen is not None else speeds[pe]
         exec_t = float(csum[chunk.hi] - csum[chunk.lo]) / speed

@@ -79,6 +79,7 @@ __all__ = [
     "source_for",
     "resolve_mode",
     "materialize",
+    "validate_placement",
     "ModeDowngradeWarning",
     "PlacementError",
     "PLACEMENTS",
@@ -106,6 +107,17 @@ class PlacementError(ValueError):
             "network-foreman CCA, repro.net)"
         )
         self.placement = placement
+
+
+def validate_placement(placement: str, allowed: Tuple[str, ...] = PLACEMENTS) -> str:
+    """THE placement-validation path: ``ScheduleSpec`` construction, the
+    placement dispatch in ``make_source``, and the executors all raise the
+    typed ``PlacementError`` from here.  ``allowed`` narrows the menu for
+    consumers that support a subset (the distributed executor runs only
+    ``"process"``/``"net"``)."""
+    if placement not in PLACEMENTS or placement not in allowed:
+        raise PlacementError(placement)
+    return placement
 
 
 class ModeDowngradeWarning(UserWarning):
@@ -255,8 +267,7 @@ class ScheduleSpec:
     scenario: Optional[object] = None
 
     def __post_init__(self):
-        if self.placement not in PLACEMENTS:
-            raise PlacementError(self.placement)
+        validate_placement(self.placement)
 
     def to_params(self, N: Optional[int] = None, P: Optional[int] = None) -> DLSParams:
         if self.params is not None and N is None and P is None:
@@ -660,6 +671,10 @@ class HierarchicalSource(ChunkSource):
     """
 
     serialized = False
+    # timing models price claims through this source as amortized coarse-batch
+    # fetches (NetworkModel.tree_claim_s), not per-claim round-trips: the
+    # global level fetches one batch per group queue, locals re-serve it
+    amortizes_network = True
 
     def __init__(
         self,
@@ -728,7 +743,14 @@ class HierarchicalSource(ChunkSource):
 # ---------------------------------------------------------------------------
 
 
-def source_for(
+_DEPRECATED_FACTORY_MSG = (
+    "{name}() is deprecated; build sources through the one entry point "
+    "make_source(ScheduleSpec(..., placement={placement!r})) — it dispatches "
+    "to the same backends (see the README migration table)"
+)
+
+
+def _source_for(
     technique: str,
     params: DLSParams,
     mode: str = "auto",
@@ -736,8 +758,12 @@ def source_for(
     calc_delay_s: float = 0.0,
     warn: bool = True,
 ) -> ChunkSource:
-    """Build the backend for (technique, mode); warns when the effective mode
-    differs from the requested one (the old silent fallback).
+    """Thread-placement internals behind ``make_source``: build the backend
+    for (technique, mode); warns when the effective mode differs from the
+    requested one (the old silent fallback).
+
+    Module-level (not a closure) on purpose: the process/net foremen pickle
+    ``functools.partial(_source_for, ...)`` as their inner factory.
 
     ``technique="auto"`` builds a ``SelectingSource`` (select/simas.py): the
     SimAS selector picks the technique online from claim/report feedback.
@@ -761,15 +787,32 @@ def source_for(
     )
 
 
+def source_for(technique, params, mode="auto", feedback=None,
+               calc_delay_s=0.0, warn=True) -> ChunkSource:
+    """Deprecated alias for the thread-placement internals; use
+    ``make_source(ScheduleSpec(...))`` — bit-identical, but warns."""
+    warnings.warn(
+        _DEPRECATED_FACTORY_MSG.format(name="source_for", placement="thread"),
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _source_for(technique, params, mode, feedback=feedback,
+                       calc_delay_s=calc_delay_s, warn=warn)
+
+
 def make_source(spec: ScheduleSpec, **kw) -> ChunkSource:
-    """Build a ChunkSource from a declarative spec (hierarchical if
-    ``spec.levels`` names more than one level; cross-process if
-    ``spec.placement == "process"``; scenario-driven claim delays if
-    ``spec.scenario`` is set)."""
+    """THE source-construction entry point: build a ChunkSource from a
+    declarative spec (hierarchical if ``spec.levels`` names more than one
+    level; cross-process/networked via ``spec.placement``; scenario-driven
+    claim delays — and constant network claim costs — if ``spec.scenario``
+    is set).  The legacy factories (``source_for``, ``process_source_for``,
+    ``net_source_for``) are deprecated aliases over the same placement-
+    dispatched internals."""
     if spec.scenario is not None:
         if kw.get("calc_delay_s"):
             raise ValueError("pass the delay through spec.scenario, not calc_delay_s")
         delay = float(spec.scenario.delay_calc_s)
+        network = getattr(spec.scenario, "network", None)
         if spec.levels:
             # one delay per *worker* claim, like the simulators: inject at
             # the composed outer source — NOT inside the global level's
@@ -778,31 +821,43 @@ def make_source(spec: ScheduleSpec, **kw) -> ChunkSource:
             src = _make_source_base(spec, **kw)
         else:
             # serialized backends take the delay inside their critical
-            # section at construction; DCA-style backends get wrapped below
+            # section at construction — plus the reply's port serialization,
+            # which drains the master's single port before the next claim is
+            # served (the request leg drains the *claimer's* port, so it and
+            # the wire legs are per-claimer-concurrent: the executors pay
+            # them, via ScenarioInjector.claim_delay) — while DCA-style
+            # backends get wrapped below
+            if network is not None and spec.effective_mode in ("cca", "dca_sync"):
+                delay = delay + network.serialization_s
             kw["calc_delay_s"] = delay
             src = _make_source_base(spec, **kw)
-        if not src.serialized and delay:
+        inject = delay
+        if not src.serialized and network is not None:
+            if getattr(src, "amortizes_network", False):
+                inject = inject + network.tree_claim_s
+            else:
+                inject = inject + network.dca_claim_s()
+        if not src.serialized and inject:
             from repro.runtime.inject import InjectedSource  # runtime imports core
 
-            src = InjectedSource(src, delay)
+            src = InjectedSource(src, inject)
         return src
     return _make_source_base(spec, **kw)
 
 
 def _make_source_base(spec: ScheduleSpec, **kw) -> ChunkSource:
-    if spec.placement not in PLACEMENTS:  # defensive: __post_init__ bypassed
-        raise PlacementError(spec.placement)
+    validate_placement(spec.placement)  # defensive: __post_init__ bypassed
     if spec.placement == "process":
-        from repro.dist.sources import process_source_for  # deferred: dist imports core
+        from repro.dist.sources import _process_source_for  # deferred: dist imports core
 
         if spec.levels:
             raise NotImplementedError(
                 "hierarchical + placement='process' is not supported yet; "
                 "compose a ForemanSource-backed global level explicitly"
             )
-        return process_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
+        return _process_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
     if spec.placement == "net":
-        from repro.net.sources import net_source_for  # deferred: net imports core
+        from repro.net.sources import _net_source_for  # deferred: net imports core
 
         if spec.levels:
             raise NotImplementedError(
@@ -810,20 +865,20 @@ def _make_source_base(spec: ScheduleSpec, **kw) -> ChunkSource:
                 "repro.net.SimulatedCluster(transport='tree') for the "
                 "node-master tree"
             )
-        return net_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
+        return _net_source_for(spec.technique, spec.to_params(), spec.mode, **kw)
     if spec.levels:
         if len(spec.levels) < 2:
             raise ValueError("hierarchy needs >= 2 levels: ((tech, P), ...)")
         if len(spec.levels) > 2:
             raise NotImplementedError("only two-level hierarchies are supported")
         (g_tech, n_groups), (l_tech, w_per_group) = spec.levels
-        global_source = source_for(
+        global_source = _source_for(
             g_tech, spec.to_params(P=n_groups), spec.mode, **kw
         )
         local_mode = resolve_mode(l_tech, spec.mode)[0]
 
         def local_factory(n: int) -> ChunkSource:
-            return source_for(
+            return _source_for(
                 l_tech, spec.to_params(N=n, P=w_per_group), local_mode, warn=False
             )
 
@@ -833,7 +888,7 @@ def _make_source_base(spec: ScheduleSpec, **kw) -> ChunkSource:
             n_groups,
             group_of=lambda w: (w // w_per_group) % n_groups,
         )
-    return source_for(spec.technique, spec.to_params(), spec.mode, **kw)
+    return _source_for(spec.technique, spec.to_params(), spec.mode, **kw)
 
 
 def materialize(spec_or_source) -> Schedule:

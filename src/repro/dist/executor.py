@@ -46,11 +46,11 @@ from typing import Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.executor import ChunkRecord, _resolve_scenario
-from repro.core.source import ChunkSource, PlacementError
+from repro.core.source import ChunkSource, validate_placement
 from repro.core.techniques import DLSParams, auto_technique, get_technique
 
 from .shm import attach_block, create_block, default_context, int64_field, unlink_block
-from .sources import CoordinatorLostError, process_source_for
+from .sources import CoordinatorLostError, _process_source_for
 
 __all__ = ["DistributedExecutor"]
 
@@ -120,6 +120,16 @@ def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
             delay = 0.0
         else:
             delay = calc_delay_s
+        # per-claim transport (network model): concurrent wire legs at this
+        # worker's current link factor — skipped for delay-injecting wrappers,
+        # which already price the claim transport in claim()
+        net_claims = (
+            injector is not None
+            and injector.has_network
+            and not getattr(source, "injects_delay", False)
+        )
+        serialized = source.serialized
+        amortized = bool(getattr(source, "amortizes_network", False))
         while True:
             tick()
             t_req = time.perf_counter()
@@ -130,6 +140,10 @@ def _worker_main(source, fn, wid, shm_name, n_workers, capacity, calc_delay_s,
             # state last (the state store is the commit)
             lease[1], lease[2], lease[3] = chunk.step, chunk.lo, chunk.hi
             lease[0] = _LEASE_HELD
+            if net_claims:
+                nd = injector.claim_delay(wid, serialized, amortized)
+                if nd:
+                    time.sleep(nd)  # claim transport, concurrent wire legs
             if delay:
                 time.sleep(delay)  # DCA calculation slowdown, concurrent
             tick()
@@ -183,8 +197,15 @@ class DistributedExecutor:
         has_coord_faults = self.scenario is not None and bool(
             getattr(self.scenario, "coordinator_faults", lambda: ())()
         )
-        if placement not in ("process", "net"):
-            raise PlacementError(placement)
+        validate_placement(placement, allowed=("process", "net"))
+        # under a network model, serialized claims extend the coordinator's
+        # critical section by the reply's port serialization; the concurrent
+        # wire legs are paid per claim in _worker_main via claim_delay
+        coord_extra = (
+            self._injector.coordinator_service_extra()
+            if self._injector is not None
+            else 0.0
+        )
         if source is not None:
             # duck-typed: every coordinator-backed source (local foreman,
             # network foreman, remote counter) carries ``_supervised``;
@@ -195,13 +216,14 @@ class DistributedExecutor:
                     f"{type(source).__name__} was built without "
                     "supervise=True; the kill would strand every worker"
                 )
-            if self.calc_delay_s and source.serialized:
+            serial_delay = self.calc_delay_s + (coord_extra if source.serialized else 0.0)
+            if serial_delay and source.serialized:
                 # same rule as the thread executor: a serialized source pays
                 # the scenario delay inside its critical section — configure
                 # it (or fail loudly) instead of silently running undelayed
                 from repro.runtime.inject import inject_source  # runtime imports core
 
-                source = inject_source(source, self.calc_delay_s)
+                source = inject_source(source, serial_delay)
             self.source = source
             self.mode = "custom"
             self._owns_source = False
@@ -213,13 +235,16 @@ class DistributedExecutor:
             # supervisor: the scenario *promises* to kill the coordinator,
             # so an unsupervised one would deadlock the run by construction
             if placement == "net":
-                from repro.net.sources import net_source_for  # net imports dist
+                from repro.net.sources import _net_source_for  # net imports dist
 
-                build = net_source_for
+                build = _net_source_for
             else:
-                build = process_source_for
+                build = _process_source_for
+            build_delay = self.calc_delay_s
+            if coord_extra and self.mode in ("cca", "dca_sync"):
+                build_delay += coord_extra
             self.source = build(
-                technique, params, mode, calc_delay_s=self.calc_delay_s, ctx=self._ctx,
+                technique, params, mode, calc_delay_s=build_delay, ctx=self._ctx,
                 supervise=has_coord_faults,
             )
             self._owns_source = True

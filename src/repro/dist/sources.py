@@ -39,8 +39,9 @@ from repro.core.source import (
     Chunk,
     ChunkSource,
     ModeDowngradeWarning,
+    _DEPRECATED_FACTORY_MSG,
+    _source_for,
     resolve_mode,
-    source_for,
 )
 from repro.core.techniques import DLSParams
 from repro.runtime.failure import BackoffPolicy
@@ -581,7 +582,7 @@ class ForemanSource(ChunkSource):
 # ---------------------------------------------------------------------------
 
 
-def process_source_for(
+def _process_source_for(
     technique: str,
     params: DLSParams,
     mode: str = "auto",
@@ -593,7 +594,7 @@ def process_source_for(
     retry: Optional[BackoffPolicy] = None,
     deadline_s: float = 15.0,
 ) -> ChunkSource:
-    """placement="process" analogue of ``source_for``.
+    """placement="process" internals behind ``make_source``.
 
     Effective mode ``dca`` -> shared-memory tables + shared counter (no
     coordinator at all); every other effective mode (``cca``, ``dca_sync``,
@@ -618,7 +619,7 @@ def process_source_for(
         # DCA calc delay is concurrent (per-claimer), applied by the executor
         return SharedStaticSource.build(technique, params, ctx=ctx)
     inner_factory = functools.partial(
-        source_for, technique, params, mode, calc_delay_s=calc_delay_s, warn=False
+        _source_for, technique, params, mode, calc_delay_s=calc_delay_s, warn=False
     )
     return ForemanSource(
         inner_factory,
@@ -630,3 +631,16 @@ def process_source_for(
         retry=retry,
         deadline_s=deadline_s,
     )
+
+
+def process_source_for(technique, params, mode="auto", **kw) -> ChunkSource:
+    """Deprecated alias; use ``make_source(ScheduleSpec(...,
+    placement="process"))`` — bit-identical, but warns."""
+    warnings.warn(
+        _DEPRECATED_FACTORY_MSG.format(
+            name="process_source_for", placement="process"
+        ),
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _process_source_for(technique, params, mode, **kw)

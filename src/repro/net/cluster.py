@@ -31,7 +31,7 @@ from repro.core.techniques import DLSParams
 from repro.dist.executor import DistributedExecutor
 from repro.dist.shm import default_context
 
-from .sources import net_source_for
+from .sources import _net_source_for
 from .tree import NodeMasterTree
 
 __all__ = ["SimulatedCluster", "ClusterResult", "TRANSPORTS"]
@@ -129,7 +129,7 @@ class SimulatedCluster:
         self._trees: List[NodeMasterTree] = []
         if transport == "tree":
             gparams = dataclasses.replace(params, P=n_nodes)
-            self.global_source = net_source_for(
+            self.global_source = _net_source_for(
                 technique, gparams, mode, ctx=self._ctx, supervise=supervise,
                 link_latency_s=link_latency_s, warn=False,
             )
@@ -149,7 +149,7 @@ class SimulatedCluster:
             self.source: ChunkSource = _NodeRouter(self._trees, workers_per_node)
         else:
             forced = {"dca": "dca", "cca": "cca"}[transport]
-            self.global_source = net_source_for(
+            self.global_source = _net_source_for(
                 technique, params, forced, ctx=self._ctx, supervise=supervise,
                 link_latency_s=link_latency_s, warn=False,
             )

@@ -50,8 +50,9 @@ from repro.core.source import (
     Chunk,
     ChunkSource,
     ModeDowngradeWarning,
+    _DEPRECATED_FACTORY_MSG,
+    _source_for,
     resolve_mode,
-    source_for,
 )
 from repro.core.techniques import DLSParams
 from repro.dist.shm import (
@@ -609,7 +610,7 @@ class NetworkForemanSource(_NetSourceBase):
 # ---------------------------------------------------------------------------
 
 
-def net_source_for(
+def _net_source_for(
     technique: str,
     params: DLSParams,
     mode: str = "auto",
@@ -623,7 +624,7 @@ def net_source_for(
     deadline_s: float = 15.0,
     link_latency_s: float = 0.0,
 ) -> ChunkSource:
-    """placement="net" analogue of ``process_source_for``.
+    """placement="net" internals behind ``make_source``.
 
     Effective mode ``dca`` -> local closed-form tables + one fetch-and-add
     RPC per claim (no coordinator logic anywhere); every other effective
@@ -650,7 +651,7 @@ def net_source_for(
             retry=retry, deadline_s=deadline_s, link_latency_s=link_latency_s,
         )
     inner_factory = functools.partial(
-        source_for, technique, params, mode, calc_delay_s=calc_delay_s, warn=False
+        _source_for, technique, params, mode, calc_delay_s=calc_delay_s, warn=False
     )
     return NetworkForemanSource(
         inner_factory,
@@ -664,3 +665,14 @@ def net_source_for(
         deadline_s=deadline_s,
         link_latency_s=link_latency_s,
     )
+
+
+def net_source_for(technique, params, mode="auto", **kw) -> ChunkSource:
+    """Deprecated alias; use ``make_source(ScheduleSpec(...,
+    placement="net"))`` — bit-identical, but warns."""
+    warnings.warn(
+        _DEPRECATED_FACTORY_MSG.format(name="net_source_for", placement="net"),
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return _net_source_for(technique, params, mode, **kw)

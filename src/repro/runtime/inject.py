@@ -85,6 +85,12 @@ class ScenarioInjector:
 
         times, speeds = scenario.padded_tables()
         faults = tuple(getattr(scenario, "faults", ()))
+        # network model + link-factor tables: immutable for the whole run, so
+        # they ride the pickle (Process args) instead of widening the shared
+        # block — only mutable state (run clock, fired flags) needs shm
+        self.network = getattr(scenario, "network", None)
+        plt = getattr(scenario, "padded_link_tables", None)
+        self._ltimes, self._lfactors = plt() if plt is not None else (None, None)
         self.scenario_name = name if name is not None else scenario.name
         self.P = int(times.shape[0])
         self.kmax = int(times.shape[1])
@@ -164,6 +170,53 @@ class ScenarioInjector:
     def slowdown(self, worker: int) -> float:
         """Stretch factor >= 1 for a chunk starting now: ``s_max / speed``."""
         return float(self._vals[1]) / self.speed(worker)
+
+    # -- network ---------------------------------------------------------------
+
+    @property
+    def has_network(self) -> bool:
+        return self.network is not None
+
+    def link(self, worker: int, t: Optional[float] = None) -> float:
+        """Link latency factor of ``worker``'s PE slot at ``t`` (default:
+        now) — same padded-table lookup and boundary semantics as ``speed``,
+        against the scenario's link tables instead of its speed tables."""
+        if self._ltimes is None:
+            return 1.0
+        pe = worker % self.P
+        tt = self.now() if t is None else t
+        return float(self._lfactors[pe, int((self._ltimes[pe] <= tt).sum())])
+
+    def claim_delay(self, worker: int, serialized: bool, amortized: bool = False) -> float:
+        """Worker-side (concurrent) share of one claim's modeled transport,
+        sampled at the worker's current link factor.  The wire legs scale
+        with the link; port serialization does not.
+
+        * ``amortized``  — coarse-batch (tree) sources: one TCP refill
+          spread over ``batch_chunks`` board re-serves.
+        * ``serialized`` — CCA-style round trip: the request drains the
+          worker's own port (concurrent, unscaled) plus both propagation
+          legs.  The *reply's* serialization at the master's port is the
+          coordinator's cost — see ``coordinator_service_extra``.
+        * otherwise      — DCA RMA fetch-and-add: two one-way legs.
+        """
+        net = self.network
+        if net is None:
+            return 0.0
+        lf = self.link(worker)
+        if amortized:
+            return net.tree_claim_s * lf
+        if serialized:
+            return net.serialization_s + 2.0 * net.propagation_s * lf
+        return 2.0 * net.rma_oneway_s * lf
+
+    def coordinator_service_extra(self) -> float:
+        """Per-claim extension of the coordinator's *serialized* service:
+        the reply drains the master's single port before the next claim is
+        served.  Folded into a serialized source's ``calc_delay_s`` so it is
+        paid inside the critical section, exactly as both simulators extend
+        ``service`` by ``serialization_s``."""
+        return self.network.serialization_s if self.network is not None else 0.0
 
     # -- faults ----------------------------------------------------------------
 
@@ -295,6 +348,10 @@ class ScenarioInjector:
             "kmax": self.kmax,
             "F": self.F,
             "scenario_name": self.scenario_name,
+            # immutable for the run → pickled by value, not mapped from shm
+            "network": self.network,
+            "ltimes": self._ltimes,
+            "lfactors": self._lfactors,
         }
 
     def __setstate__(self, state):
@@ -304,6 +361,9 @@ class ScenarioInjector:
         self.P = state["P"]
         self.kmax = state["kmax"]
         self.F = state.get("F", 0)
+        self.network = state.get("network")
+        self._ltimes = state.get("ltimes")
+        self._lfactors = state.get("lfactors")
         self._owner = False
         self._shm = attach_block(state["name"])
         self._map_views()

@@ -53,13 +53,92 @@ import numpy as np
 __all__ = [
     "SpeedProfile",
     "FaultEvent",
+    "NetworkModel",
     "PerturbationScenario",
     "ScenarioEstimator",
     "mixed_suite",
     "fault_suite",
+    "network_suite",
 ]
 
 FAULT_KINDS = ("crash", "hang", "stall", "coordinator_kill")
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkModel:
+    """Per-claim message costs, per the CCL_Simulator port model.
+
+    Claim transport decomposes into (SNIPPETS.md: serialization delay +
+    propagation delay, single-server output ports with queued messages):
+
+    * ``serialization_s`` — time a message occupies the coordinator's output
+      port.  CCA pays it twice per claim (request into the master, reply out
+      of it), and the reply leg extends the master's *serialized* service —
+      the single-server queue the simulators model with the coordinator
+      recurrence.  Deliberately link-independent: the port drains at the
+      NIC's pace regardless of how degraded the far link is, which keeps the
+      coordinator's service time constant (the vectorized engine's
+      ``_coord_recurrence`` requires it).
+    * ``propagation_s`` — wire latency of one CCA message leg, scaled by the
+      requesting PE's link factor (``PerturbationScenario.link_at``).
+      Propagation does not occupy the port: it overlaps with other PEs'
+      messages, so it delays only the traveling claim.
+    * ``rma_oneway_s`` — one leg of the DCA fetch-and-add against a passive
+      target (the RMA split of arXiv:1901.02773: a one-sided op pays wire
+      time but no remote CPU/recursion).  Link-scaled, paid twice per claim
+      (op in, result back); only ``h_assign`` serializes at the target.
+    * ``batch_refill_s`` / ``batch_chunks`` — the tree placement: node
+      masters fetch coarse global batches over TCP and re-serve them from a
+      local shared-memory board, so a worker claim pays the batch round-trip
+      amortized over the ``batch_chunks`` local claims it funds
+      (``tree_claim_s``).
+
+    A zero model prices every transport at 0.0 — both engines are then
+    bit-identical to the network-free code path (``PerturbationScenario``
+    drops zero models at construction, so ``network=NetworkModel.zero()``
+    IS ``network=None``).
+    """
+
+    serialization_s: float = 0.0
+    propagation_s: float = 0.0
+    rma_oneway_s: float = 0.0
+    batch_refill_s: float = 0.0
+    batch_chunks: int = 1
+
+    def __post_init__(self):
+        for f in ("serialization_s", "propagation_s", "rma_oneway_s", "batch_refill_s"):
+            if getattr(self, f) < 0:
+                raise ValueError(f"{f} must be >= 0")
+        if self.batch_chunks < 1:
+            raise ValueError("batch_chunks must be >= 1")
+
+    @classmethod
+    def zero(cls) -> "NetworkModel":
+        return cls()
+
+    @property
+    def is_zero(self) -> bool:
+        return (
+            self.serialization_s == 0.0
+            and self.propagation_s == 0.0
+            and self.rma_oneway_s == 0.0
+            and self.batch_refill_s == 0.0
+        )
+
+    @property
+    def tree_claim_s(self) -> float:
+        """Amortized per-claim share of one coarse batch refill."""
+        return self.batch_refill_s / self.batch_chunks
+
+    def cca_claim_s(self, link: float = 1.0) -> float:
+        """Unqueued CCA transport per claim: two port occupancies plus two
+        link-scaled wire legs (the coordinator's own service comes on top)."""
+        return 2.0 * self.serialization_s + 2.0 * self.propagation_s * link
+
+    def dca_claim_s(self, link: float = 1.0) -> float:
+        """Unqueued DCA transport per claim: the fetch-and-add's two
+        one-sided legs (only ``h_assign`` serializes at the passive target)."""
+        return 2.0 * self.rma_oneway_s * link
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,6 +265,8 @@ class PerturbationScenario:
         profiles: Sequence[SpeedProfile],
         delay_calc_s: float = 0.0,
         faults: Sequence[FaultEvent] = (),
+        network: Optional[NetworkModel] = None,
+        link_profiles: Optional[Sequence[SpeedProfile]] = None,
     ):
         if not profiles:
             raise ValueError("need at least one PE profile")
@@ -194,6 +275,11 @@ class PerturbationScenario:
         self.name = name
         self.profiles = tuple(profiles)
         self.delay_calc_s = float(delay_calc_s)
+        # a zero model IS no model: dropping it here makes the engines'
+        # bit-identity under NetworkModel.zero() structural, not tested-for
+        if network is not None and not isinstance(network, NetworkModel):
+            raise TypeError(f"network must be a NetworkModel, got {type(network).__name__}")
+        self.network = None if network is None or network.is_zero else network
         self.faults = tuple(faults)
         for f in self.faults:
             if not isinstance(f, FaultEvent):
@@ -216,6 +302,26 @@ class PerturbationScenario:
             self._times[i, :k] = prof.times
             self._speeds[i, : k + 1] = prof.speeds
             self._speeds[i, k + 1 :] = prof.speeds[-1]
+        # link profiles: piecewise-constant multiplicative *delay* factors
+        # (>1 == slower link) on the link-scaled network legs.  Same
+        # SpeedProfile machinery, same padded-table lookup, so the scalar
+        # and vectorized faces are bit-identical by construction.
+        if link_profiles is None:
+            self.link_profiles = tuple(SpeedProfile.constant(1.0) for _ in range(P))
+        else:
+            self.link_profiles = tuple(link_profiles)
+            if len(self.link_profiles) != P:
+                raise ValueError(
+                    f"need {P} link profiles (one per PE), got {len(self.link_profiles)}"
+                )
+        lkmax = max(len(p.times) for p in self.link_profiles)
+        self._ltimes = np.full((P, lkmax), np.inf)
+        self._lfactors = np.empty((P, lkmax + 1))
+        for i, prof in enumerate(self.link_profiles):
+            k = len(prof.times)
+            self._ltimes[i, :k] = prof.times
+            self._lfactors[i, : k + 1] = prof.speeds
+            self._lfactors[i, k + 1 :] = prof.speeds[-1]
 
     def __repr__(self):
         kind = "static" if self.static else "time-varying"
@@ -250,6 +356,28 @@ class PerturbationScenario:
             self.profiles,
             self.delay_calc_s,
             faults=self.faults + faults,
+            network=self.network,
+            link_profiles=self.link_profiles,
+        )
+
+    def with_network(
+        self,
+        network: Optional[NetworkModel],
+        link_profiles: Optional[Sequence[SpeedProfile]] = None,
+        name: Optional[str] = None,
+    ) -> "PerturbationScenario":
+        """A copy with ``network`` (and optionally new link profiles)
+        attached — the network family composes with whatever speed/delay/
+        fault families this scenario already carries."""
+        return PerturbationScenario(
+            name if name is not None else self.name,
+            self.profiles,
+            self.delay_calc_s,
+            faults=self.faults,
+            network=network,
+            link_profiles=(
+                link_profiles if link_profiles is not None else self.link_profiles
+            ),
         )
 
     @property
@@ -260,6 +388,16 @@ class PerturbationScenario:
     def static(self) -> bool:
         """True when no profile varies over time (plain ``pe_speeds``)."""
         return all(p.is_constant for p in self.profiles)
+
+    @property
+    def has_network(self) -> bool:
+        """True when claims pay a (non-zero) modeled transport cost."""
+        return self.network is not None
+
+    @property
+    def links_static(self) -> bool:
+        """True when no link profile varies over time."""
+        return all(p.is_constant for p in self.link_profiles)
 
     def base_speeds(self) -> np.ndarray:
         """Per-PE speeds at t=0 (the full vector for static scenarios)."""
@@ -272,6 +410,25 @@ class PerturbationScenario:
         """Vectorized ``speed_at``: speeds of ``pes[k]`` at ``ts[k]``."""
         idx = (self._times[pes] <= np.asarray(ts)[:, None]).sum(axis=1)
         return self._speeds[pes, idx]
+
+    def link_at(self, pe: int, t: float) -> float:
+        """Link delay factor of PE ``pe`` at time ``t`` (the scalar face —
+        same padded-table lookup as ``speed_at``)."""
+        return float(self._lfactors[pe, int((self._ltimes[pe] <= t).sum())])
+
+    def links_at(self, pes: np.ndarray, ts: np.ndarray) -> np.ndarray:
+        """Vectorized ``link_at``: factors of ``pes[k]`` at ``ts[k]``."""
+        idx = (self._ltimes[pes] <= np.asarray(ts)[:, None]).sum(axis=1)
+        return self._lfactors[pes, idx]
+
+    def base_links(self) -> np.ndarray:
+        """Per-PE link factors at t=0 (the full vector when links_static)."""
+        return self._lfactors[np.arange(self.P), (self._ltimes <= 0.0).sum(axis=1)]
+
+    def padded_link_tables(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Copies of the padded link lookup tables (same layout and boundary
+        semantics as ``padded_tables``); what ``runtime.inject`` publishes."""
+        return self._ltimes.copy(), self._lfactors.copy()
 
     def padded_tables(self) -> Tuple[np.ndarray, np.ndarray]:
         """Copies of the padded lookup tables: breakpoints [P, kmax]
@@ -374,6 +531,67 @@ class PerturbationScenario:
             name,
             [SpeedProfile(speeds[:, q], times) for q in range(speeds.shape[1])],
             delay_calc_s,
+        )
+
+    @classmethod
+    def latency_spike(
+        cls,
+        P: int,
+        pes: Sequence[int],
+        windows: Sequence[Tuple[float, float]],
+        factor: float = 8.0,
+        network: Optional[NetworkModel] = None,
+        delay_calc_s: float = 0.0,
+        name: str = "latency_spike",
+    ) -> "PerturbationScenario":
+        """Transient per-link delay bursts: inside each time window the
+        links of ``pes`` run at ``factor`` times their base delay (congestion,
+        an incast burst, a flaky switch).  Compute speeds stay at 1 — this is
+        a pure *network* perturbation, the axis ``mixed_suite`` never covers.
+
+        Link factors multiply the propagation / RMA legs of the
+        ``NetworkModel``; the coordinator's serialization (port-drain) time is
+        a property of the *coordinator's* port and stays constant.
+        """
+        if factor < 1.0:
+            raise ValueError(f"latency_spike factor must be >= 1, got {factor}")
+        spike = SpeedProfile.windows(windows, factor)
+        flat = SpeedProfile.constant(1.0)
+        members = set(int(q) for q in pes)
+        return cls(
+            name,
+            [SpeedProfile.constant(1.0) for _ in range(P)],
+            delay_calc_s,
+            network=network,
+            link_profiles=[spike if q in members else flat for q in range(P)],
+        )
+
+    @classmethod
+    def slow_link(
+        cls,
+        P: int,
+        slow_pes: Sequence[int],
+        factor: float = 4.0,
+        network: Optional[NetworkModel] = None,
+        delay_calc_s: float = 0.0,
+        name: str = "slow_link",
+    ) -> "PerturbationScenario":
+        """Persistent per-PE link degradation: the links of ``slow_pes`` run
+        at ``factor`` times their base delay for the whole run (a PE placed a
+        rack away, an oversubscribed uplink).  The network analogue of
+        ``variable`` — static heterogeneity in the transport, not the CPU."""
+        if factor < 1.0:
+            raise ValueError(f"slow_link factor must be >= 1, got {factor}")
+        members = set(int(q) for q in slow_pes)
+        return cls(
+            name,
+            [SpeedProfile.constant(1.0) for _ in range(P)],
+            delay_calc_s,
+            network=network,
+            link_profiles=[
+                SpeedProfile.constant(factor if q in members else 1.0)
+                for q in range(P)
+            ],
         )
 
 
@@ -554,6 +772,47 @@ def mixed_suite(P: int, horizon_s: float) -> List[PerturbationScenario]:
             factor=0.3,
             delay_calc_s=1e-5,
             name="correlated",
+        ),
+    ]
+
+
+def network_suite(
+    P: int,
+    horizon_s: float,
+    network: Optional[NetworkModel] = None,
+) -> List[PerturbationScenario]:
+    """The network-perturbation acceptance suite: one scenario per link
+    family, scaled like ``mixed_suite``.  With ``network=None`` a default
+    model calibrated against the PR 4/7 process-executor measurements is
+    attached (foreman round-trip ~1.1 ms, shared-memory fetch-and-add ~3 µs;
+    see BENCH_source_overhead.json) — large enough that claim transport is a
+    first-order term at conformance scale, so the DCA-vs-CCA ordering under
+    these scenarios is a *communication* result, as in the paper."""
+    if network is None:
+        network = NetworkModel(
+            serialization_s=250e-6,
+            propagation_s=300e-6,
+            rma_oneway_s=1.7e-6,
+            batch_refill_s=500e-6,
+            batch_chunks=16,
+        )
+    h = float(horizon_s)
+    quarter = max(P // 4, 1)
+    return [
+        PerturbationScenario.latency_spike(
+            P,
+            pes=range(quarter),
+            windows=[(0.2 * h, 0.7 * h)],
+            factor=8.0,
+            network=network,
+            name="latency_spike",
+        ),
+        PerturbationScenario.slow_link(
+            P,
+            slow_pes=range(P - quarter, P),
+            factor=4.0,
+            network=network,
+            name="slow_link",
         ),
     ]
 

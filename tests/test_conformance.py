@@ -48,7 +48,7 @@ from repro.core.executor import SelfSchedulingExecutor
 from repro.core.fastsim import simulate_fast
 from repro.core.simulator import SimConfig, SimResult, constant_costs, simulate
 from repro.core.techniques import DLSParams
-from repro.select.scenarios import PerturbationScenario, mixed_suite
+from repro.select.scenarios import PerturbationScenario, mixed_suite, network_suite
 
 # one shared cell geometry: small enough for CI, large enough that every
 # technique emits a multi-chunk schedule and every worker participates
@@ -61,6 +61,9 @@ MODES = ["cca", "dca"]
 
 SCENARIOS = {s.name: s for s in mixed_suite(P, HORIZON_S)}
 SLOWDOWN_SCENARIOS = [name for name, s in SCENARIOS.items() if s.delay_calc_s > 0]
+# the network perturbation families: claim transport is priced through the
+# scenario's NetworkModel in every engine (sim legs / injector sleeps)
+NETWORK_SCENARIOS = {s.name: s for s in network_suite(P, HORIZON_S)}
 
 
 def _sleep_work(iter_cost_s, lo, hi):
@@ -140,6 +143,32 @@ def test_four_engines_agree(tech, mode, scenario_name):
         assert len(ex.records) == ev.num_chunks
         # non-feedback techniques: the chunk-size sequence is execution-
         # independent — all four engines must emit the same one
+        assert np.array_equal(ex.chunk_size_sequence(), ev.chunk_sizes)
+
+
+@pytest.mark.conformance
+@pytest.mark.dist
+@pytest.mark.parametrize("scenario_name", sorted(NETWORK_SCENARIOS))
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("tech", ["ss", "gss", "fac"])
+def test_four_engines_agree_under_network(tech, mode, scenario_name):
+    """The engines' shared contract survives the network model: claim
+    transport changes *when* chunks run, never *which* chunks exist, so the
+    simulators stay bit-identical and the real executors reproduce the same
+    chunk-size sequence while paying modeled claim costs."""
+    scen = NETWORK_SCENARIOS[scenario_name]
+    ev = _sim(simulate, tech, mode, scen)
+    fa = _sim(simulate_fast, tech, mode, scen)
+    assert np.array_equal(ev.chunk_sizes, fa.chunk_sizes)
+    assert ev.t_parallel == fa.t_parallel
+    assert int(ev.chunk_sizes.sum()) == N
+
+    thread_ex, _ = _run_thread(tech, mode, scen)
+    proc_ex, _ = _run_process(tech, mode, scen)
+    for ex in (thread_ex, proc_ex):
+        _assert_exact_coverage(ex, N)
+        _assert_exactly_once(ex)
+        assert len(ex.records) == ev.num_chunks
         assert np.array_equal(ex.chunk_size_sequence(), ev.chunk_sizes)
 
 
@@ -298,6 +327,23 @@ def test_smoke_four_engines_agree_bursty(tech):
     assert ev.t_parallel == fa.t_parallel
     thread_ex, _ = _run_thread(tech, "dca", scen)
     proc_ex, _ = _run_process(tech, "dca", scen)
+    for ex in (thread_ex, proc_ex):
+        _assert_exact_coverage(ex, N)
+        _assert_exactly_once(ex)
+        assert np.array_equal(ex.chunk_size_sequence(), ev.chunk_sizes)
+
+
+@pytest.mark.dist
+def test_smoke_four_engines_agree_latency_spike():
+    """Tier-1 keeps one network-model cell so the claim-transport path
+    cannot rot behind the conformance gate."""
+    scen = NETWORK_SCENARIOS["latency_spike"]
+    ev = _sim(simulate, "ss", "dca", scen)
+    fa = _sim(simulate_fast, "ss", "dca", scen)
+    assert np.array_equal(ev.chunk_sizes, fa.chunk_sizes)
+    assert ev.t_parallel == fa.t_parallel
+    thread_ex, _ = _run_thread("ss", "dca", scen)
+    proc_ex, _ = _run_process("ss", "dca", scen)
     for ex in (thread_ex, proc_ex):
         _assert_exact_coverage(ex, N)
         _assert_exactly_once(ex)

@@ -1,0 +1,466 @@
+"""Network-aware simulation: the NetworkModel API, claim-cost plumbing in
+both engines, the redesigned scenario/source entry points, and the
+deprecation shims over the old ones.
+
+Contracts pinned here:
+
+* ``NetworkModel.zero()`` / ``network=None`` are bit-identical to the
+  pre-network simulators — the zero model is dropped at scenario
+  construction, so identity is structural, not numerical luck.
+* event engine == fast engine, bit for bit, under every network scenario
+  family (``latency_spike``, ``slow_link``, constant-link) — the same
+  contract the engines already hold without a network.
+* one source entry point (``make_source``) and one simulator
+  parameterization (``scenario=``) are non-deprecated; the legacy forms
+  still work, warn ``DeprecationWarning``, and produce bit-identical
+  results.
+* the calibrated models reproduce the committed claim-cost measurements
+  (BENCH_source_overhead.json / BENCH_dist_scaling.json) within 2x through
+  the real engines.
+"""
+
+import json
+import os
+import pickle
+import sys
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.executor import SelfSchedulingExecutor
+from repro.core.fastsim import simulate_fast, simulate_sweep
+from repro.core.simulator import SimConfig, normalize_scenario, simulate
+from repro.core.source import (
+    PlacementError,
+    ScheduleSpec,
+    make_source,
+    source_for,
+    validate_placement,
+)
+from repro.core.techniques import DLSParams
+from repro.select.scenarios import (
+    NetworkModel,
+    PerturbationScenario,
+    network_suite,
+)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+P, N = 4, 600
+ITER_COST_S = 250e-6
+HORIZON_S = N * ITER_COST_S / P
+
+NET = NetworkModel(
+    serialization_s=250e-6,
+    propagation_s=300e-6,
+    rma_oneway_s=1.7e-6,
+    batch_refill_s=500e-6,
+    batch_chunks=16,
+)
+
+
+def _costs():
+    return np.full(N, ITER_COST_S)
+
+
+def _params(**kw):
+    return DLSParams(N=N, P=P, **kw)
+
+
+def _assert_same(a, b):
+    assert a.t_parallel == b.t_parallel
+    np.testing.assert_array_equal(a.pe_finish, b.pe_finish)
+    np.testing.assert_array_equal(a.pe_busy, b.pe_busy)
+    np.testing.assert_array_equal(a.chunk_sizes, b.chunk_sizes)
+    np.testing.assert_array_equal(a.chunk_pes, b.chunk_pes)
+
+
+# -- the model object --------------------------------------------------------
+
+
+class TestNetworkModel:
+    def test_zero_is_zero(self):
+        assert NetworkModel.zero().is_zero
+        assert NetworkModel().is_zero
+        assert not NET.is_zero
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            NetworkModel(serialization_s=-1e-6)
+        with pytest.raises(ValueError):
+            NetworkModel(batch_chunks=0)
+
+    def test_claim_costs(self):
+        assert NET.cca_claim_s() == pytest.approx(2 * 250e-6 + 2 * 300e-6)
+        assert NET.cca_claim_s(link=2.0) == pytest.approx(2 * 250e-6 + 4 * 300e-6)
+        assert NET.dca_claim_s() == pytest.approx(2 * 1.7e-6)
+        assert NET.tree_claim_s == pytest.approx(500e-6 / 16)
+
+    def test_zero_network_dropped_at_construction(self):
+        scen = PerturbationScenario.constant(P).with_network(NetworkModel.zero())
+        assert scen.network is None and not scen.has_network
+        scen = PerturbationScenario.constant(P).with_network(NET)
+        assert scen.network is NET and scen.has_network
+
+
+# -- the scenario families ---------------------------------------------------
+
+
+class TestLinkScenarios:
+    def test_latency_spike_links(self):
+        scen = PerturbationScenario.latency_spike(
+            P, pes=(0, 1), windows=[(0.1, 0.3)], factor=8.0, network=NET
+        )
+        assert scen.has_network and scen.P == P
+        assert scen.link_at(0, 0.05) == 1.0
+        assert scen.link_at(0, 0.2) == 8.0
+        assert scen.link_at(0, 0.35) == 1.0
+        assert scen.link_at(3, 0.2) == 1.0  # non-member link unaffected
+        # speeds stay uniform: this family perturbs only the links
+        assert np.ptp(scen.base_speeds()) == 0.0
+
+    def test_slow_link_links(self):
+        scen = PerturbationScenario.slow_link(P, slow_pes=(3,), factor=4.0,
+                                              network=NET)
+        for t in (0.0, 1.0, 100.0):
+            assert scen.link_at(3, t) == 4.0
+            assert scen.link_at(0, t) == 1.0
+        assert scen.links_static
+
+    def test_links_at_matches_link_at(self):
+        scen = PerturbationScenario.latency_spike(
+            P, pes=(1,), windows=[(0.1, 0.3)], factor=5.0, network=NET
+        )
+        pes = np.array([0, 1, 1, 3])
+        ts = np.array([0.2, 0.05, 0.2, 0.2])
+        vec = scen.links_at(pes, ts)
+        scal = [scen.link_at(int(pe), float(t)) for pe, t in zip(pes, ts)]
+        np.testing.assert_array_equal(vec, scal)
+
+    def test_factor_validated(self):
+        with pytest.raises(ValueError):
+            PerturbationScenario.latency_spike(P, pes=(0,), windows=[(0, 1)],
+                                               factor=0.5)
+
+    def test_network_suite_families(self):
+        suite = network_suite(P, HORIZON_S)
+        names = {s.name for s in suite}
+        assert names == {"latency_spike", "slow_link"}
+        assert all(s.has_network for s in suite)
+
+
+# -- engine equivalence under the network -------------------------------------
+
+_TECHS = ["ss", "gss", "fac", "tss"]
+
+
+@pytest.mark.parametrize("tech", _TECHS)
+@pytest.mark.parametrize("approach", ["cca", "dca"])
+@pytest.mark.parametrize("scen_idx", [0, 1])
+def test_event_fast_bit_identity_under_network(tech, approach, scen_idx):
+    scen = network_suite(P, HORIZON_S)[scen_idx]
+    cfg = SimConfig(tech, _params(), approach=approach, scenario=scen)
+    _assert_same(simulate(cfg, _costs()), simulate_fast(cfg, _costs()))
+
+
+@pytest.mark.parametrize("approach", ["cca", "dca"])
+def test_zero_model_bit_identical_to_no_network(approach):
+    plain = PerturbationScenario.constant(P, delay_calc_s=1e-5)
+    zero = plain.with_network(NetworkModel.zero())
+    base_cfg = SimConfig("fac", _params(), approach=approach, scenario=plain)
+    zero_cfg = SimConfig("fac", _params(), approach=approach, scenario=zero)
+    _assert_same(simulate(base_cfg, _costs()), simulate(zero_cfg, _costs()))
+    _assert_same(simulate_fast(base_cfg, _costs()), simulate_fast(zero_cfg, _costs()))
+
+
+def test_network_changes_the_answer():
+    scen = PerturbationScenario.constant(P).with_network(NET)
+    cfg = SimConfig("ss", _params(min_chunk=4), approach="cca")
+    base = simulate_fast(cfg, _costs())
+    net = simulate_fast(cfg, _costs(), scenario=scen)
+    assert net.t_parallel > base.t_parallel
+
+
+# -- one signature shape across the entry points ------------------------------
+
+
+class TestUnifiedSignatures:
+    def test_scenario_kwarg_everywhere(self):
+        scen = network_suite(P, HORIZON_S)[0]
+        cfg = SimConfig("ss", _params())
+        a = simulate(cfg, _costs(), scenario=scen)
+        b = simulate_fast(cfg, _costs(), scenario=scen)
+        _assert_same(a, b)
+
+    def test_both_scenario_places_rejected(self):
+        scen = PerturbationScenario.constant(P)
+        cfg = SimConfig("ss", _params(), scenario=scen)
+        with pytest.raises(ValueError, match="not both"):
+            simulate(cfg, _costs(), scenario=scen)
+        with pytest.raises(ValueError, match="not both"):
+            simulate_fast(cfg, _costs(), scenario=scen)
+
+    def test_network_kwarg_attaches(self):
+        cfg = SimConfig("ss", _params(min_chunk=4), approach="cca")
+        via_kwarg = simulate(cfg, _costs(), network=NET)
+        scen = PerturbationScenario.constant(P).with_network(NET)
+        via_scen = simulate(cfg, _costs(), scenario=scen)
+        _assert_same(via_kwarg, via_scen)
+
+    def test_sweep_scenario_and_network(self):
+        scen = network_suite(P, HORIZON_S)[1]
+        rows = simulate_sweep(_params(), _costs(), techniques=["ss", "gss"],
+                              approaches=["cca", "dca"], scenario=scen)
+        assert len(rows) == 4
+        with pytest.raises(TypeError):
+            simulate_sweep(_params(), _costs(), source=object())
+
+    def test_sweep_rejects_scenario_plus_perturbations(self):
+        scen = PerturbationScenario.constant(P)
+        with pytest.raises(ValueError):
+            simulate_sweep(_params(), _costs(), techniques=["ss"],
+                           scenario=scen, perturbations=[scen])
+
+
+# -- deprecation shims: warn, stay bit-identical ------------------------------
+
+
+class TestDeprecationShims:
+    def test_legacy_simconfig_warns_and_matches(self):
+        speeds = np.array([1.0, 1.0, 0.5, 0.25])
+        legacy_cfg = SimConfig("fac", _params(), approach="dca",
+                               delay_calc_s=1e-5, pe_speeds=speeds)
+        with pytest.warns(DeprecationWarning, match="scenario="):
+            legacy = simulate(legacy_cfg, _costs())
+        scen = PerturbationScenario.constant(P, delay_calc_s=1e-5,
+                                             speeds=speeds)
+        modern = simulate(SimConfig("fac", _params(), approach="dca",
+                                    scenario=scen), _costs())
+        _assert_same(legacy, modern)
+        with pytest.warns(DeprecationWarning):
+            legacy_fast = simulate_fast(legacy_cfg, _costs())
+        _assert_same(legacy_fast, modern)
+
+    def test_normalize_scenario_is_the_one_path(self):
+        scen = normalize_scenario(None, P, delay_calc_s=1e-4, warn=False)
+        assert scen.delay_calc_s == 1e-4 and scen.P == P
+        assert normalize_scenario(None, P, warn=False) is None
+        with pytest.raises(ValueError, match="not both"):
+            normalize_scenario(PerturbationScenario.constant(P), P,
+                               delay_calc_s=1e-4, warn=False,
+                               on_delay_conflict="error")
+
+    def test_source_for_warns_and_matches_make_source(self):
+        params = _params(min_chunk=4)
+        with pytest.warns(DeprecationWarning, match="make_source"):
+            old = source_for("gss", params, "dca")
+        new = make_source(ScheduleSpec("gss", N, P, mode="dca", min_chunk=4))
+        seq_old = [old.claim(0) for _ in range(3)]
+        seq_new = [new.claim(0) for _ in range(3)]
+        assert [(c.lo, c.hi) for c in seq_old] == [(c.lo, c.hi) for c in seq_new]
+
+    def test_process_source_for_warns(self):
+        from repro.dist.sources import process_source_for
+
+        with pytest.warns(DeprecationWarning, match="make_source"):
+            src = process_source_for("ss", _params(min_chunk=8), "dca")
+        try:
+            assert src.claim(0) is not None
+        finally:
+            src.close()
+
+    @pytest.mark.net
+    @pytest.mark.dist
+    def test_net_source_for_warns(self):
+        from repro.net.sources import net_source_for
+
+        with pytest.warns(DeprecationWarning, match="make_source"):
+            src = net_source_for("ss", _params(min_chunk=8), "dca")
+        try:
+            assert src.claim(0) is not None
+        finally:
+            src.close()
+
+
+# -- one placement-validation path --------------------------------------------
+
+
+class TestPlacementValidation:
+    def test_validate_placement(self):
+        assert validate_placement("thread") == "thread"
+        with pytest.raises(PlacementError):
+            validate_placement("bogus")
+        with pytest.raises(PlacementError):
+            validate_placement("thread", allowed=("process", "net"))
+
+    def test_schedulespec_validates(self):
+        with pytest.raises(PlacementError):
+            ScheduleSpec("ss", N, P, placement="bogus")
+
+    def test_dist_executor_validates(self):
+        from repro.dist.executor import DistributedExecutor
+
+        with pytest.raises(PlacementError):
+            DistributedExecutor("ss", _params(), placement="bogus")
+
+
+# -- injector network plumbing -------------------------------------------------
+
+
+class TestInjectorNetwork:
+    def test_claim_delay_split(self):
+        from repro.runtime.inject import ScenarioInjector
+
+        scen = PerturbationScenario.slow_link(P, slow_pes=(3,), factor=4.0,
+                                              network=NET)
+        with ScenarioInjector(scen) as inj:
+            assert inj.has_network
+            # serialized: own-port drain + both wire legs at the link factor
+            assert inj.claim_delay(0, True) == pytest.approx(
+                250e-6 + 2 * 300e-6)
+            assert inj.claim_delay(3, True) == pytest.approx(
+                250e-6 + 2 * 300e-6 * 4.0)
+            # DCA: two one-way RMA legs
+            assert inj.claim_delay(3, False) == pytest.approx(2 * 1.7e-6 * 4.0)
+            # amortized tree fetch
+            assert inj.claim_delay(0, False, True) == pytest.approx(500e-6 / 16)
+            # the reply's serialization goes inside the critical section
+            assert inj.coordinator_service_extra() == pytest.approx(250e-6)
+
+    def test_pickle_carries_network(self):
+        from repro.runtime.inject import ScenarioInjector
+
+        scen = PerturbationScenario.latency_spike(
+            P, pes=(0,), windows=[(0.1, 0.2)], factor=8.0, network=NET
+        )
+        with ScenarioInjector(scen) as inj:
+            inj2 = pickle.loads(pickle.dumps(inj))
+            assert inj2.has_network
+            assert inj2.link(0, 0.15) == 8.0
+            assert inj2.link(0, 0.5) == 1.0
+            assert inj2.coordinator_service_extra() == inj.coordinator_service_extra()
+            inj2.close()
+
+    def test_no_network_claims_cost_nothing(self):
+        from repro.runtime.inject import ScenarioInjector
+
+        scen = PerturbationScenario.constant(P, delay_calc_s=1e-5)
+        with ScenarioInjector(scen) as inj:
+            assert not inj.has_network
+            assert inj.claim_delay(0, True) == 0.0
+            assert inj.coordinator_service_extra() == 0.0
+
+
+# -- executors pay the modeled cost -------------------------------------------
+
+
+class TestExecutorNetwork:
+    def test_thread_executor_coverage_and_ordering(self):
+        # a deliberately heavy serialized claim makes CCA slower than DCA by
+        # construction, with miles of margin against scheduler jitter
+        heavy = NetworkModel(serialization_s=2e-3, propagation_s=1e-4,
+                             rma_oneway_s=1e-6)
+        params = DLSParams(N=200, P=P, min_chunk=4)
+        scen = PerturbationScenario.constant(P).with_network(heavy)
+        walls = {}
+        for mode in ("dca", "cca"):
+            ex = SelfSchedulingExecutor("ss", params, mode, scenario=scen)
+            try:
+                walls[mode] = ex.run(lambda lo, hi: None, P)
+                ranges = ex.executed_ranges()
+                assert ranges[0, 0] == 0 and ranges[-1, 1] == 200
+                assert (ranges[1:, 0] == ranges[:-1, 1]).all()
+            finally:
+                ex.close()
+        # ~50 claims x >=2ms serialized vs ~50 x 2us concurrent
+        assert walls["cca"] > walls["dca"]
+        assert walls["cca"] > 0.05
+
+    def test_make_source_network_pricing(self):
+        scen = PerturbationScenario.constant(P, delay_calc_s=1e-5).with_network(NET)
+        cca = make_source(ScheduleSpec("ss", N, P, mode="cca", scenario=scen))
+        # reply serialization joins the critical-section delay (1x, not 2x:
+        # the request drains the claimer's own port, concurrently)
+        assert cca.calc_delay_s == pytest.approx(1e-5 + 250e-6)
+        dca = make_source(ScheduleSpec("ss", N, P, mode="dca", scenario=scen))
+        assert getattr(dca, "injects_delay", False)
+        assert dca.delay_calc_s == pytest.approx(1e-5 + 2 * 1.7e-6)
+
+
+# -- SimAS selection over the network families --------------------------------
+
+
+def test_simas_selection_over_network_suite():
+    """The online selector runs the network scenario families end to end:
+    every fixed (technique, approach) baseline sweeps under the modeled
+    claim costs, and the selector stays competitive with the best fixed."""
+    from repro.select import evaluate_selector
+
+    costs = np.full(2048, 1e-3)
+    params = DLSParams(N=2048, P=8)
+    suite = network_suite(8, 2048 * 1e-3 / 8)
+    rows = evaluate_selector(params, costs, suite)
+    assert {r["scenario"] for r in rows} == {"latency_spike", "slow_link"}
+    for r in rows:
+        assert r["t_selector"] <= 1.25 * r["t_best_fixed"], r
+
+
+# -- calibration: sim within 2x of the committed measurements -----------------
+
+
+def _load_bench(name):
+    path = os.path.join(_ROOT, name)
+    if not os.path.exists(path):  # pragma: no cover - snapshots are committed
+        pytest.skip(f"{name} not present")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _validation_module():
+    sys.path.insert(0, os.path.join(_ROOT, "benchmarks"))
+    try:
+        import net_model_validation
+    finally:
+        sys.path.pop(0)
+    return net_model_validation
+
+
+@pytest.mark.parametrize("kind", ["shared_static", "foreman", "net_dca",
+                                  "net_cca", "tree"])
+def test_calibrated_sim_within_2x_of_measured(kind):
+    nmv = _validation_module()
+    cal = nmv.calibrate(_load_bench("BENCH_source_overhead.json"),
+                        _load_bench("BENCH_dist_scaling.json"))
+    row = cal[kind]
+    sim_s = nmv.sim_per_claim_s(row["model"], row["approach"])
+    ratio = sim_s / row["measured_s"]
+    assert 0.5 <= ratio <= 2.0, (
+        f"{kind}: sim charges {sim_s * 1e6:.1f}us/claim vs measured "
+        f"{row['measured_s'] * 1e6:.1f}us (ratio {ratio:.2f})"
+    )
+
+
+@pytest.mark.parametrize("family", ["latency_spike", "slow_link"])
+def test_sim_predicts_dca_le_cca_under_network(family):
+    nmv = _validation_module()
+    cal = nmv.calibrate(_load_bench("BENCH_source_overhead.json"),
+                        _load_bench("BENCH_dist_scaling.json"))
+    row = nmv.sim_ordering(cal["foreman"]["model"])[family]
+    assert row["sim_dca_le_cca"], row
+
+
+@pytest.mark.conformance
+@pytest.mark.dist
+@pytest.mark.parametrize("family", ["latency_spike", "slow_link"])
+def test_real_process_run_matches_sim_ordering(family):
+    """The sim's DCA<=CCA prediction under network perturbations must hold
+    in a real process-placement run of both approaches (the benchmark's
+    headline boolean, replayed per family inside the conformance job)."""
+    nmv = _validation_module()
+    cal = nmv.calibrate(_load_bench("BENCH_source_overhead.json"),
+                        _load_bench("BENCH_dist_scaling.json"))
+    rows = nmv.sim_ordering(cal["foreman"]["model"])
+    nmv.real_ordering(cal["foreman"]["model"], rows)
+    assert rows[family]["real_matches_sim"], rows[family]
