@@ -1,0 +1,80 @@
+"""reprolint — AST-based invariant analyzer for the claim stack.
+
+The paper's DCA-vs-CCA argument rests on properties the type system cannot
+see: CCA correctness needs a serialized critical section with *nothing slow
+inside it*, DCA correctness needs the lock-free fetch-and-add paths to stay
+lock-free, the RMA-analogue shm layer needs a pid-guarded segment lifecycle,
+and SimAS selection rests on the event==fast bit-identity contract — which
+dies silently the moment wall-clock, unseeded RNG, or unordered-container
+float accumulation lands in an engine module.  These invariants span five
+engines and ~30 modules; this package is the machine that keeps them true.
+
+One ``ast.parse`` per file feeds a registry of checkers:
+
+=======  ==================================================================
+RPL001   lock discipline — no blocking work inside a critical section; no
+         inconsistent cross-function lock acquisition order (deadlock risk)
+RPL002   shm lifecycle — every segment goes through the leak registry
+         (``create_block``/``attach_block``/``unlink_block``, dist/shm.py)
+         and every creator has a release path
+RPL003   sim determinism — engine modules must not read wall-clock, draw
+         from unseeded RNG, or accumulate floats over unordered containers
+RPL004   deprecated boundary — no internal caller uses the PR 8 warning
+         aliases (``source_for``/``process_source_for``/``net_source_for``,
+         legacy ``SimConfig`` scalars)
+RPL005   pickle safety — classes holding locks/sockets/shm handles in
+         pickle-boundary modules must filter them via ``__getstate__`` /
+         ``__reduce__``
+RPL000   waiver hygiene — malformed or unused waivers (built-in, not
+         selectable off, not waivable)
+=======  ==================================================================
+
+Findings carry file:line plus a fix hint.  Intentional violations are
+waived inline::
+
+    time.sleep(self.calc_delay_s)  # reprolint: waive[RPL001] models the CCA serialized calculation
+
+A waiver *requires* a non-empty reason (an empty one is itself an RPL000
+finding) and must suppress something (an unused waiver is RPL000 too), so
+the waiver set stays exactly as large as the set of intentional violations.
+
+CLI (CI runs this; exit is nonzero on any unwaived finding)::
+
+    PYTHONPATH=src python -m repro.analysis src/repro
+    PYTHONPATH=src python -m repro.analysis --select RPL001,RPL003 --format gh src tests
+    PYTHONPATH=src python -m repro.analysis --json-out reprolint.json src/repro
+
+Pure stdlib (``ast`` + ``argparse``) — importable and runnable without jax
+or numpy.  See DESIGN.md Sec. 15 for the invariant catalogue.
+"""
+
+from .core import (
+    ALL_RULES,
+    Checker,
+    Finding,
+    ModuleContext,
+    Waiver,
+    analyze_file,
+    analyze_paths,
+    analyze_source,
+    checker_for,
+    iter_python_files,
+    register,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "Checker",
+    "Finding",
+    "ModuleContext",
+    "Waiver",
+    "analyze_file",
+    "analyze_paths",
+    "analyze_source",
+    "checker_for",
+    "iter_python_files",
+    "register",
+]
+
+# importing the rules package populates the registry
+from . import rules as _rules  # noqa: E402,F401

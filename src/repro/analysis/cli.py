@@ -1,0 +1,117 @@
+"""reprolint CLI: `python -m repro.analysis [options] paths...`
+
+Exit status: 0 when every finding is waived (or none exist), 1 when any
+unwaived finding remains, 2 on usage errors.  ``--json-out`` always writes
+the full report (including waived findings and their reasons) so CI keeps
+an auditable artifact even on green runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from .core import ALL_RULES, analyze_paths, checker_for
+from .report import render_gh, render_json, render_text
+
+__all__ = ["main", "build_parser"]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "reprolint: static checks for the invariants this repo's "
+            "correctness arguments rest on (lock discipline, shm lifecycle, "
+            "sim determinism, deprecation boundaries, pickle safety)"
+        ),
+    )
+    parser.add_argument(
+        "paths",
+        nargs="*",
+        default=["src/repro"],
+        help="files or directories to analyze (default: src/repro)",
+    )
+    parser.add_argument(
+        "--select",
+        action="append",
+        metavar="RULE",
+        help=(
+            "run only these rules (repeatable, comma-separable: "
+            "--select RPL001,RPL003); unused-waiver hygiene is skipped "
+            "on subset runs"
+        ),
+    )
+    parser.add_argument(
+        "--format",
+        choices=["text", "gh", "json"],
+        default="text",
+        help="output format (gh = GitHub Actions annotations)",
+    )
+    parser.add_argument(
+        "--json-out",
+        metavar="FILE",
+        help="additionally write the full JSON report to FILE",
+    )
+    parser.add_argument(
+        "--show-waived",
+        action="store_true",
+        help="include waived findings in text output",
+    )
+    parser.add_argument(
+        "--list-rules",
+        action="store_true",
+        help="list registered rules and exit",
+    )
+    return parser
+
+
+def _parse_select(raw: Optional[List[str]]) -> Optional[List[str]]:
+    if not raw:
+        return None
+    out: List[str] = []
+    for chunk in raw:
+        out.extend(r.strip() for r in chunk.split(",") if r.strip())
+    return out or None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES():
+            c = checker_for(rule)
+            print(f"{rule}  {c.name}: {c.description}")
+        return 0
+
+    missing = [p for p in args.paths if not Path(p).exists()]
+    if missing:
+        parser.error(f"no such path(s): {missing}")
+
+    try:
+        select = _parse_select(args.select)
+        findings = analyze_paths(args.paths, select=select)
+    except ValueError as e:
+        parser.error(str(e))
+
+    if args.format == "gh":
+        print(render_gh(findings))
+    elif args.format == "json":
+        print(render_json(findings))
+    else:
+        print(render_text(findings, verbose_waived=args.show_waived))
+
+    if args.json_out:
+        Path(args.json_out).write_text(
+            render_json(findings) + "\n", encoding="utf-8"
+        )
+
+    unwaived = sum(1 for f in findings if not f.waived)
+    return 1 if unwaived else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

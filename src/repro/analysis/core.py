@@ -1,0 +1,445 @@
+"""reprolint core: findings, inline waivers, the checker registry, analysis.
+
+Design constraints:
+
+* **One parse pass per file.**  ``analyze_source`` parses once and hands the
+  same ``ModuleContext`` (source, lines, AST, waivers) to every selected
+  checker — checkers never re-read or re-parse.
+* **Stdlib only.**  The analyzer must run in CI cells and pre-commit hooks
+  that have no jax/numpy installed, and importing it must never drag the
+  scheduling stack in.
+* **Waivers are accounted for.**  A finding on a waived line is kept in the
+  report (marked ``waived`` with its reason) rather than dropped, so the
+  JSON artifact records *why* each intentional violation is intentional;
+  unused and reason-less waivers are findings themselves (RPL000), which
+  keeps the waiver set minimal and justified.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import re
+import tokenize
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "ALL_RULES",
+    "Checker",
+    "Finding",
+    "ModuleContext",
+    "Waiver",
+    "analyze_file",
+    "analyze_paths",
+    "analyze_source",
+    "checker_for",
+    "iter_python_files",
+    "register",
+    "call_name",
+    "dotted_name",
+]
+
+
+WAIVER_RULE = "RPL000"
+
+# directive grammar, anchored at the start of a COMMENT token so prose that
+# merely quotes the syntax (docs, strings, this very comment) never matches
+_WAIVER_RE = re.compile(
+    r"^#\s*reprolint:\s*waive\[(?P<rules>[A-Z0-9,\s]*)\]\s*(?P<reason>.*)$"
+)
+# a comment that *opens* with reprolint but is not a recognized directive —
+# a typo must fail loudly, not silently pass
+_WAIVERISH_RE = re.compile(r"^#\s*reprolint\b")
+_PRAGMA_RE = re.compile(r"^#\s*reprolint:\s*(engine-module|pickle-boundary)\b")
+
+
+@dataclasses.dataclass
+class Waiver:
+    """One inline waiver: rules it suppresses, its reason, where it sits.
+
+    ``line`` is the source line the comment is on; ``target_line`` is the
+    line findings must sit on to be suppressed — the same line for a
+    trailing comment, the *next* line for a standalone waiver comment.
+    """
+
+    rules: Tuple[str, ...]
+    reason: str
+    line: int
+    target_line: int
+    used: bool = False
+
+    def covers(self, rule: str, line: int) -> bool:
+        return line == self.target_line and rule in self.rules
+
+
+@dataclasses.dataclass
+class Finding:
+    """One invariant violation (or waiver-hygiene problem) at file:line."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+    hint: str = ""
+    waived: bool = False
+    waiver_reason: str = ""
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+    def to_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+class ModuleContext:
+    """Everything checkers get about one file: parsed once, shared by all."""
+
+    def __init__(self, path: str, source: str, tree: ast.Module):
+        self.path = path
+        # normalized posix-ish path for tag matching (works for both the
+        # on-disk layout `src/repro/...` and test fixtures' virtual paths)
+        self.norm_path = path.replace("\\", "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = tree
+        self.waivers: List[Waiver] = []
+        self.waiver_problems: List[Finding] = []
+        self.pragmas: set = set()
+        self._parse_comments()
+
+    # -- path tags ---------------------------------------------------------
+
+    def path_matches(self, patterns: Iterable[str]) -> bool:
+        """True when the normalized path ends with (or contains) a pattern.
+
+        Patterns ending in ``/`` match directories anywhere in the path
+        (``repro/select/``); others match path suffixes
+        (``repro/core/fastsim.py``); a trailing ``*`` matches a stem prefix
+        (``repro/core/techniques*``).
+        """
+        p = self.norm_path
+        for pat in patterns:
+            if pat.endswith("/"):
+                if f"/{pat.rstrip('/')}/" in f"/{p}":
+                    return True
+            elif pat.endswith("*"):
+                stem = pat[:-1]
+                if f"/{stem}" in f"/{p}" or p.startswith(stem):
+                    return True
+            elif p.endswith(pat):
+                return True
+        return False
+
+    # -- waivers -----------------------------------------------------------
+
+    def _comment_tokens(self) -> List[Tuple[int, int, str]]:
+        """(line, col, text) of every real COMMENT token.
+
+        Tokenizing (rather than regexing raw lines) keeps directives inside
+        string literals and docstrings inert — prose can quote the waiver
+        syntax without creating a waiver.
+        """
+        try:
+            return [
+                (t.start[0], t.start[1], t.string)
+                for t in tokenize.generate_tokens(
+                    io.StringIO(self.source).readline
+                )
+                if t.type == tokenize.COMMENT
+            ]
+        except (tokenize.TokenError, IndentationError):  # pragma: no cover
+            return []  # ast.parse succeeded, so this should be unreachable
+
+    def _parse_comments(self) -> None:
+        for line_no, col, text in self._comment_tokens():
+            if "reprolint" not in text:
+                continue
+            pragma = _PRAGMA_RE.match(text)
+            if pragma:
+                self.pragmas.add(pragma.group(1))
+                continue
+            m = _WAIVER_RE.match(text)
+            if not m:
+                if _WAIVERISH_RE.match(text):
+                    self.waiver_problems.append(
+                        Finding(
+                            rule=WAIVER_RULE,
+                            path=self.path,
+                            line=line_no,
+                            col=col + 1,
+                            message=(
+                                "unrecognized reprolint directive "
+                                "(expected waive[RPLxxx] with a reason)"
+                            ),
+                            hint="fix the directive syntax or remove the comment",
+                        )
+                    )
+                continue
+            rules = tuple(
+                r.strip() for r in m.group("rules").split(",") if r.strip()
+            )
+            reason = m.group("reason").strip()
+            problems = []
+            if not rules:
+                problems.append("names no rules")
+            if not reason:
+                problems.append("carries no reason")
+            bad = [r for r in rules if not re.fullmatch(r"RPL\d{3}", r)]
+            if bad:
+                problems.append(f"names malformed rule ids {bad}")
+            if WAIVER_RULE in rules:
+                problems.append("RPL000 (waiver hygiene) cannot be waived")
+            if problems:
+                self.waiver_problems.append(
+                    Finding(
+                        rule=WAIVER_RULE,
+                        path=self.path,
+                        line=line_no,
+                        col=col + 1,
+                        message=f"invalid waiver: {'; '.join(problems)}",
+                        hint=(
+                            "every waiver needs rule ids and a non-empty "
+                            "reason why the violation is intentional"
+                        ),
+                    )
+                )
+                continue
+            standalone = self.lines[line_no - 1][:col].strip() == ""
+            self.waivers.append(
+                Waiver(
+                    rules=rules,
+                    reason=reason,
+                    line=line_no,
+                    target_line=line_no + 1 if standalone else line_no,
+                )
+            )
+
+    def apply_waivers(self, findings: List[Finding]) -> None:
+        for f in findings:
+            if f.rule == WAIVER_RULE:
+                continue  # hygiene findings are not waivable
+            for w in self.waivers:
+                if w.covers(f.rule, f.line):
+                    f.waived = True
+                    f.waiver_reason = w.reason
+                    w.used = True
+                    break
+
+
+# ---------------------------------------------------------------------------
+# Checker registry
+# ---------------------------------------------------------------------------
+
+
+class Checker:
+    """One rule: ``check(ctx)`` yields findings for a parsed module."""
+
+    rule: str = "RPL999"
+    name: str = "unnamed"
+    description: str = ""
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def finding(
+        self, ctx: ModuleContext, node: ast.AST, message: str, hint: str = ""
+    ) -> Finding:
+        return Finding(
+            rule=self.rule,
+            path=ctx.path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            message=message,
+            hint=hint,
+        )
+
+
+_REGISTRY: Dict[str, Checker] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and add to the rule registry."""
+    inst = cls()
+    if inst.rule in _REGISTRY:
+        raise ValueError(f"duplicate checker rule {inst.rule}")
+    _REGISTRY[inst.rule] = inst
+    return cls
+
+
+def checker_for(rule: str) -> Checker:
+    return _REGISTRY[rule]
+
+
+def ALL_RULES() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by checkers
+# ---------------------------------------------------------------------------
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """Readable dotted form of a name-ish expression.
+
+    ``self._glock[g]`` -> ``self._glock[]`` (index erased: every element of
+    a lock list is the same lock *class* for ordering purposes),
+    ``ctx.Lock()`` -> ``ctx.Lock()``.  None for expressions with no stable
+    name (lambdas, literals, comprehensions).
+    """
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    if isinstance(node, ast.Subscript):
+        base = dotted_name(node.value)
+        return None if base is None else f"{base}[]"
+    if isinstance(node, ast.Call):
+        base = dotted_name(node.func)
+        return None if base is None else f"{base}()"
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """Dotted name of a call's callee (no trailing parens)."""
+    return dotted_name(node.func)
+
+
+def last_segment(name: Optional[str]) -> str:
+    if not name:
+        return ""
+    return name.rstrip("[]()").rsplit(".", 1)[-1]
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    """Every function/async-function definition, any nesting depth."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def enclosing_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    """child -> parent map (for climbing out of a node)."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            parents[child] = parent
+    return parents
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+
+def _selected(select: Optional[Sequence[str]]) -> List[Checker]:
+    if not select:
+        return [_REGISTRY[r] for r in sorted(_REGISTRY)]
+    unknown = [r for r in select if r not in _REGISTRY]
+    if unknown:
+        raise ValueError(
+            f"unknown rule(s) {unknown}; available: {sorted(_REGISTRY)}"
+        )
+    return [_REGISTRY[r] for r in sorted(set(select))]
+
+
+def analyze_source(
+    source: str,
+    path: str = "<string>",
+    select: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Analyze one source string (the parse pass happens exactly once here).
+
+    ``select`` limits the run to the named rules.  Waiver-hygiene findings
+    (RPL000: malformed, reason-less, or unused waivers) are always included
+    on a full run; on a ``--select`` subset run the *unused* check is
+    skipped — a waiver for an unselected rule is not unused, it just was
+    not exercised.
+    """
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [
+            Finding(
+                rule=WAIVER_RULE,
+                path=path,
+                line=e.lineno or 1,
+                col=(e.offset or 0) + 1,
+                message=f"file does not parse: {e.msg}",
+                hint="reprolint needs a syntactically valid module",
+            )
+        ]
+    ctx = ModuleContext(path, source, tree)
+    checkers = _selected(select)
+    findings: List[Finding] = []
+    for checker in checkers:
+        findings.extend(checker.check(ctx))
+    ctx.apply_waivers(findings)
+    findings.extend(ctx.waiver_problems)
+    if not select:  # full run: every waiver must suppress something
+        for w in ctx.waivers:
+            if not w.used:
+                findings.append(
+                    Finding(
+                        rule=WAIVER_RULE,
+                        path=path,
+                        line=w.line,
+                        col=1,
+                        message=(
+                            f"unused waiver for {', '.join(w.rules)}: no "
+                            "finding on its target line"
+                        ),
+                        hint=(
+                            "delete the waiver (the violation is gone) or "
+                            "move it onto the offending line"
+                        ),
+                    )
+                )
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def analyze_file(path, select: Optional[Sequence[str]] = None) -> List[Finding]:
+    p = Path(path)
+    return analyze_source(
+        p.read_text(encoding="utf-8"), path=str(p), select=select
+    )
+
+
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache", "node_modules"}
+
+
+def iter_python_files(paths: Iterable) -> Iterator[Path]:
+    """Expand files/directories into a sorted, de-duplicated .py file list."""
+    seen = set()
+    for raw in paths:
+        p = Path(raw)
+        if p.is_dir():
+            candidates = sorted(
+                f
+                for f in p.rglob("*.py")
+                if not any(part in _SKIP_DIRS for part in f.parts)
+            )
+        elif p.suffix == ".py":
+            candidates = [p]
+        else:
+            continue
+        for f in candidates:
+            key = str(f)
+            if key not in seen:
+                seen.add(key)
+                yield f
+
+
+def analyze_paths(
+    paths: Iterable, select: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Analyze every .py file under ``paths`` (files or directories)."""
+    findings: List[Finding] = []
+    for f in iter_python_files(paths):
+        findings.extend(analyze_file(f, select=select))
+    return findings

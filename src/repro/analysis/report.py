@@ -1,0 +1,80 @@
+"""Finding rendering: human text, GitHub annotations, machine JSON."""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List
+
+from .core import Finding
+
+__all__ = ["render_text", "render_gh", "report_dict", "render_json", "summarize"]
+
+
+def summarize(findings: List[Finding]) -> Dict[str, int]:
+    unwaived = [f for f in findings if not f.waived]
+    per_rule: Dict[str, int] = {}
+    for f in unwaived:
+        per_rule[f.rule] = per_rule.get(f.rule, 0) + 1
+    return {
+        "total": len(findings),
+        "waived": len(findings) - len(unwaived),
+        "unwaived": len(unwaived),
+        "files": len({f.path for f in findings}),
+        "per_rule": per_rule,
+    }
+
+
+def render_text(findings: List[Finding], verbose_waived: bool = False) -> str:
+    lines = []
+    for f in findings:
+        if f.waived and not verbose_waived:
+            continue
+        tag = " [waived: %s]" % f.waiver_reason if f.waived else ""
+        lines.append(f"{f.location()}: {f.rule} {f.message}{tag}")
+        if f.hint and not f.waived:
+            lines.append(f"    hint: {f.hint}")
+    s = summarize(findings)
+    lines.append(
+        f"reprolint: {s['unwaived']} finding(s), {s['waived']} waived"
+        + (
+            " (" + ", ".join(f"{r}={n}" for r, n in sorted(s["per_rule"].items())) + ")"
+            if s["per_rule"]
+            else ""
+        )
+    )
+    return "\n".join(lines)
+
+
+def render_gh(findings: List[Finding]) -> str:
+    """GitHub Actions workflow-command annotations (one per unwaived finding)."""
+    lines = []
+    for f in findings:
+        if f.waived:
+            continue
+        msg = f"{f.rule}: {f.message}"
+        if f.hint:
+            msg += f" — {f.hint}"
+        # workflow-command data must stay single-line
+        msg = msg.replace("\n", " ").replace("%", "%25")
+        lines.append(
+            f"::error file={f.path},line={f.line},col={f.col},"
+            f"title=reprolint {f.rule}::{msg}"
+        )
+    s = summarize(findings)
+    lines.append(
+        f"::notice title=reprolint::{s['unwaived']} finding(s), "
+        f"{s['waived']} waived across {s['files']} file(s)"
+    )
+    return "\n".join(lines)
+
+
+def report_dict(findings: List[Finding]) -> Dict:
+    return {
+        "tool": "reprolint",
+        "summary": summarize(findings),
+        "findings": [f.to_dict() for f in findings],
+    }
+
+
+def render_json(findings: List[Finding]) -> str:
+    return json.dumps(report_dict(findings), indent=2, sort_keys=True)

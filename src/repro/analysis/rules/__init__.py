@@ -1,0 +1,5 @@
+"""reprolint rule modules — importing this package registers every checker."""
+
+from . import boundaries, determinism, locks, pickle_safety, shm  # noqa: F401
+
+__all__ = ["locks", "shm", "determinism", "boundaries", "pickle_safety"]

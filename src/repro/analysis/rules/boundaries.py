@@ -1,0 +1,140 @@
+"""RPL004 — deprecated boundary: internal code stays off the PR 8 shims.
+
+PR 8 redesigned the scenario/source API around ``Scenario`` +
+``make_source``/``make_process_source``/``make_net_source`` and kept the
+old per-transport factories (``source_for``, ``process_source_for``,
+``net_source_for``) and the legacy ``SimConfig`` scalar knobs
+(``delay_calc_s=``, ``pe_speeds=``, ``network=``) alive as deprecation
+shims for *external* callers.  Internal ``src/`` code using a shim defeats
+the point: the warning fires inside our own stack (noise users learn to
+ignore) and the shim can never be deleted because we depend on it
+ourselves.
+
+Flagged, anywhere under ``src/repro`` except the module that defines the
+shim and the package ``__init__`` re-export surface:
+
+* calls to ``source_for`` / ``process_source_for`` / ``net_source_for``;
+* ``from ... import source_for``-style imports of those names;
+* ``SimConfig(...)`` constructed with a legacy scalar keyword.
+
+Scope is the ``repro/`` package tree itself: the invariant is "no
+*internal* caller uses a shim".  Tests and examples are deliberately out
+of scope by path — the deprecation tests *must* call the shims (they pin
+warning behavior and bit-identity), and examples may show migration.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from ..core import (
+    Checker,
+    Finding,
+    ModuleContext,
+    call_name,
+    last_segment,
+    register,
+)
+
+__all__ = ["DeprecatedBoundaryChecker", "DEPRECATED_FACTORIES"]
+
+# alias -> the module allowed to define (and internally delegate to) it
+DEPRECATED_FACTORIES = {
+    "source_for": "repro/core/source.py",
+    "process_source_for": "repro/dist/sources.py",
+    "net_source_for": "repro/net/sources.py",
+}
+
+# SimConfig keywords that the PR 8 Scenario API replaced
+_LEGACY_SIMCONFIG_KWARGS = frozenset({"delay_calc_s", "pe_speeds", "network"})
+
+# the module that owns SimConfig and its legacy-kwarg normalization
+_SIMCONFIG_OWNER = "repro/core/simulator.py"
+
+
+@register
+class DeprecatedBoundaryChecker(Checker):
+    rule = "RPL004"
+    name = "deprecated-boundary"
+    description = (
+        "internal src/ code must not use PR 8 deprecation shims "
+        "(source_for aliases, legacy SimConfig scalars)"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not ctx.path_matches(["repro/"]):
+            return iter(())  # the boundary binds internal code only
+        findings: List[Finding] = []
+        is_init = ctx.norm_path.endswith("__init__.py")
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                self._check_call(ctx, node, findings)
+            elif isinstance(node, ast.ImportFrom) and not is_init:
+                # package __init__ re-exports keep the public deprecation
+                # surface importable; anything else importing an alias is
+                # about to call it
+                for alias in node.names:
+                    name = alias.name
+                    owner = DEPRECATED_FACTORIES.get(name)
+                    if owner is None or ctx.path_matches([owner]):
+                        continue
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            f"import of deprecated factory {name!r} in "
+                            "internal code (the shim exists for external "
+                            "callers only)",
+                            hint=self._factory_hint(name),
+                        )
+                    )
+        return iter(findings)
+
+    def _check_call(
+        self, ctx: ModuleContext, node: ast.Call, findings: List[Finding]
+    ) -> None:
+        seg = last_segment(call_name(node))
+        owner = DEPRECATED_FACTORIES.get(seg)
+        if owner is not None and not ctx.path_matches([owner]):
+            findings.append(
+                self.finding(
+                    ctx,
+                    node,
+                    f"call to deprecated factory {seg!r} in internal code "
+                    "(fires a DeprecationWarning inside our own stack and "
+                    "pins the shim forever)",
+                    hint=self._factory_hint(seg),
+                )
+            )
+            return
+        if seg == "SimConfig" and not ctx.path_matches([_SIMCONFIG_OWNER]):
+            legacy = sorted(
+                kw.arg
+                for kw in node.keywords
+                if kw.arg in _LEGACY_SIMCONFIG_KWARGS
+            )
+            if legacy:
+                findings.append(
+                    self.finding(
+                        ctx,
+                        node,
+                        f"SimConfig constructed with legacy scalar "
+                        f"keyword(s) {legacy} — the PR 8 Scenario API "
+                        "replaced these",
+                        hint=(
+                            "build a Scenario (delay_calc_s/pe_speeds/"
+                            "network live there) and pass "
+                            "SimConfig(scenario=...)"
+                        ),
+                    )
+                )
+
+    @staticmethod
+    def _factory_hint(name: str) -> str:
+        replacement = {
+            "source_for": "make_source",
+            "process_source_for": "make_process_source",
+            "net_source_for": "make_net_source",
+        }[name]
+        return f"use the PR 8 factory {replacement}(technique, scenario=...)"

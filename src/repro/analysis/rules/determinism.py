@@ -1,0 +1,245 @@
+"""RPL003 — sim determinism: engine modules stay bit-reproducible.
+
+The SimAS selection result (PR 3) and the entire fastsim equivalence suite
+rest on one contract: the heapq event engine and the vectorized round
+engine produce **bit-identical** outputs given the same config
+(arXiv:1912.02050's premise, restated as a test invariant).  That contract
+dies silently the moment an engine module:
+
+* reads **wall clock** (``time.time``/``perf_counter``/``monotonic``,
+  ``datetime.now``) — simulated time must come from the event/round state;
+* draws from **unseeded RNG** (``random.random`` & friends on the global
+  instance, ``np.random.*`` legacy globals, ``default_rng()`` with no
+  seed) — every draw must trace to a config seed;
+* **accumulates floats over unordered containers** (iterating a ``set`` —
+  or summing one — with float ``+=`` in the body): CPython set order
+  depends on hash seeds and insertion history, so the IEEE op-order (and
+  hence the low bits) changes between runs.
+
+Scope: modules tagged as engines — by path (``core/simulator.py``,
+``core/fastsim.py``, ``core/techniques*.py``, ``select/``) or by an inline
+``# reprolint: engine-module`` pragma.  Measurement shims are exempt by
+function-name convention (``bench*``, ``measure*``, ``*wall*``): they
+exist to read real time and are never on the simulated path.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterator, List, Optional
+
+from ..core import (
+    Checker,
+    Finding,
+    ModuleContext,
+    call_name,
+    register,
+)
+
+__all__ = ["SimDeterminismChecker", "ENGINE_PATHS"]
+
+ENGINE_PATHS = (
+    "repro/core/simulator.py",
+    "repro/core/fastsim.py",
+    "repro/core/techniques*",
+    "repro/select/",
+)
+
+_WALL_CLOCK = frozenset(
+    {
+        "time.time",
+        "time.time_ns",
+        "time.perf_counter",
+        "time.perf_counter_ns",
+        "time.monotonic",
+        "time.monotonic_ns",
+        "time.process_time",
+        "datetime.now",
+        "datetime.utcnow",
+        "datetime.datetime.now",
+        "datetime.datetime.utcnow",
+    }
+)
+
+# the global-instance random module API (any of these is an unseeded draw
+# unless the module is re-seeded, which itself is global mutable state)
+_GLOBAL_RANDOM = frozenset(
+    {
+        "random.random",
+        "random.randint",
+        "random.randrange",
+        "random.uniform",
+        "random.gauss",
+        "random.normalvariate",
+        "random.choice",
+        "random.choices",
+        "random.sample",
+        "random.shuffle",
+        "random.seed",
+    }
+)
+
+# numpy legacy global-state API (np.random.seed + module-level draws)
+_NP_RANDOM_RE = re.compile(
+    r"^(np|numpy)\.random\.(seed|rand|randn|randint|random|random_sample|"
+    r"uniform|normal|choice|shuffle|permutation)$"
+)
+
+_SHIM_NAME_RE = re.compile(r"(^|_)(bench|measure)|wall", re.IGNORECASE)
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    """Set literal, set/frozenset() call, or a set comprehension."""
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        name = call_name(node)
+        return name in ("set", "frozenset")
+    return False
+
+
+@register
+class SimDeterminismChecker(Checker):
+    rule = "RPL003"
+    name = "sim-determinism"
+    description = (
+        "engine modules: no wall clock, no unseeded RNG, no float "
+        "accumulation over unordered containers"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not (
+            ctx.path_matches(ENGINE_PATHS) or "engine-module" in ctx.pragmas
+        ):
+            return iter(())
+        findings: List[Finding] = []
+        self._scan(ctx, ctx.tree, in_shim=False, findings=findings)
+        return iter(findings)
+
+    def _scan(
+        self,
+        ctx: ModuleContext,
+        node: ast.AST,
+        in_shim: bool,
+        findings: List[Finding],
+    ) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            in_shim = in_shim or bool(_SHIM_NAME_RE.search(node.name))
+        if isinstance(node, ast.Call):
+            self._check_call(ctx, node, in_shim, findings)
+        if isinstance(node, ast.For):
+            self._check_unordered_loop(ctx, node, findings)
+        for child in ast.iter_child_nodes(node):
+            self._scan(ctx, child, in_shim, findings)
+
+    def _check_call(
+        self,
+        ctx: ModuleContext,
+        node: ast.Call,
+        in_shim: bool,
+        findings: List[Finding],
+    ) -> None:
+        name = call_name(node)
+        if name is None:
+            return
+        if name in _WALL_CLOCK:
+            if in_shim:
+                return  # measurement shims are the sanctioned wall-clock door
+            findings.append(
+                self.finding(
+                    ctx,
+                    node,
+                    f"wall-clock read {name!r} in an engine module breaks "
+                    "event==fast bit-identity (simulated time must come "
+                    "from event/round state)",
+                    hint=(
+                        "thread time through SimConfig / the event loop, or "
+                        "move the measurement into a bench*/measure* shim"
+                    ),
+                )
+            )
+            return
+        if name in _GLOBAL_RANDOM or _NP_RANDOM_RE.match(name):
+            findings.append(
+                self.finding(
+                    ctx,
+                    node,
+                    f"global-state RNG {name!r} in an engine module: draws "
+                    "are not reproducible from a config seed",
+                    hint=(
+                        "use np.random.default_rng(seed) / random.Random"
+                        "(seed) threaded from DLSParams.seed"
+                    ),
+                )
+            )
+            return
+        if name.endswith("default_rng") and not node.args and not node.keywords:
+            findings.append(
+                self.finding(
+                    ctx,
+                    node,
+                    "default_rng() without a seed draws OS entropy — the "
+                    "run is unreproducible",
+                    hint="pass the config seed: default_rng(params.seed)",
+                )
+            )
+            return
+        if name in ("random.Random", "Random") and not node.args:
+            findings.append(
+                self.finding(
+                    ctx,
+                    node,
+                    "Random() without a seed draws OS entropy — the run is "
+                    "unreproducible",
+                    hint="pass the config seed: random.Random(params.seed)",
+                )
+            )
+            return
+        # sum(set(...)) / fsum over a set: op order follows hash order
+        if name in ("sum", "math.fsum", "fsum") and node.args:
+            arg = node.args[0]
+            target: Optional[ast.AST] = None
+            if _is_set_expr(arg):
+                target = arg
+            elif isinstance(arg, ast.GeneratorExp) and _is_set_expr(
+                arg.generators[0].iter
+            ):
+                target = arg.generators[0].iter
+            if target is not None:
+                findings.append(
+                    self.finding(
+                        ctx,
+                        node,
+                        "float reduction over a set: accumulation order "
+                        "follows hash order, so the low bits differ "
+                        "between runs/processes",
+                        hint=(
+                            "reduce over a sorted() or otherwise "
+                            "deterministically ordered sequence"
+                        ),
+                    )
+                )
+
+    def _check_unordered_loop(
+        self, ctx: ModuleContext, node: ast.For, findings: List[Finding]
+    ) -> None:
+        if not _is_set_expr(node.iter):
+            return
+        # flag only when the body accumulates in place (the IEEE op-order
+        # hazard); a pure side-effect-free iteration over a set is fine
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.AugAssign) and isinstance(
+                sub.op, (ast.Add, ast.Sub, ast.Mult, ast.Div)
+            ):
+                findings.append(
+                    self.finding(
+                        ctx,
+                        sub,
+                        "in-place accumulation while iterating a set: "
+                        "op order follows hash order, diverging from the "
+                        "documented IEEE op-order",
+                        hint="iterate sorted(...) so the op order is pinned",
+                    )
+                )
+                return

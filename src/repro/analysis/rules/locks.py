@@ -1,0 +1,177 @@
+"""RPL001 — lock discipline: fast critical sections, consistent ordering.
+
+Two failure modes, both fatal to the paper's argument:
+
+* **Blocking work inside a critical section.**  CCA's measured cost *is*
+  its serialized chunk calculation; everything else the repo holds a lock
+  for (StaticSource's fetch-and-add, SharedStaticSource's two integer ops,
+  the chunk-board cursor) is specified as "a few integer ops".  A
+  ``time.sleep``, a socket send/recv, a ``NetClient`` RPC, or a
+  ``SharedMemory`` syscall inside one of those windows silently converts a
+  DCA path into a CCA path — the exact property the benchmarks compare.
+* **Inconsistent acquisition order.**  If one function takes lock A then B
+  and another takes B then A (lexically nested ``with`` blocks), two
+  threads can deadlock.  The checker builds a per-module lock-acquisition
+  graph from ``with <lock>`` nesting and flags opposite-order edges.
+
+Lock recognition is name-based: a ``with`` context whose dotted name
+contains ``lock``/``mutex`` (``self._lock``, ``prog_lock``,
+``self._glock[g]``) or an explicit ``.acquire()`` call.  The analysis is
+lexical (no interprocedural propagation): a blocking call reached *through*
+a helper is not seen, which is the documented precision/noise trade-off —
+hot claim paths in this repo inline their critical sections.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from ..core import (
+    Checker,
+    Finding,
+    ModuleContext,
+    call_name,
+    dotted_name,
+    last_segment,
+    register,
+)
+
+__all__ = ["LockDisciplineChecker", "BLOCKING_CALLEES"]
+
+
+_LOCKISH = re.compile(r"(^|[._])(lock|mutex|glock)", re.IGNORECASE)
+
+# callee last-segments that block (syscalls, sleeps, IPC, RPC round-trips)
+BLOCKING_CALLEES = frozenset(
+    {
+        "sleep",
+        "send",
+        "sendall",
+        "sendto",
+        "send_frame",
+        "recv",
+        "recv_into",
+        "recvfrom",
+        "recv_frame",
+        "request",  # NetClient RPC (full round-trip, possibly with retries)
+        "accept",
+        "connect",
+        "create_connection",
+        "join",  # thread/process join
+        "SharedMemory",  # shm create/attach is a filesystem syscall
+        "create_block",
+        "attach_block",
+        "unlink_block",
+    }
+)
+
+# `.wait(...)` blocks too, but only when it takes no timeout argument —
+# a bounded `wait(0.05)` poll under a lock is throttling, not a hang risk
+_WAIT_CALLEES = frozenset({"wait"})
+
+
+def _lock_expr(item: ast.withitem) -> Optional[str]:
+    """Dotted name of a with-item's lock, or None when it isn't one."""
+    expr = item.context_expr
+    # `with lock.acquire():` is not idiomatic; `with lock:` and
+    # `with self._glock[g]:` are what the repo writes
+    name = dotted_name(expr)
+    if name is None:
+        return None
+    if _LOCKISH.search(name):
+        return name
+    return None
+
+
+@register
+class LockDisciplineChecker(Checker):
+    rule = "RPL001"
+    name = "lock-discipline"
+    description = (
+        "no blocking calls inside critical sections; consistent lock order"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        # (outer, inner) -> first node that acquired in that order
+        order_edges: Dict[Tuple[str, str], ast.AST] = {}
+        findings = []
+
+        def scan(node: ast.AST, held: List[str]) -> None:
+            """Walk statements tracking the stack of held locks (lexical)."""
+            if isinstance(node, ast.With):
+                locks_here = [n for n in map(_lock_expr, node.items) if n]
+                if locks_here and held:
+                    outer = held[-1]
+                    for inner in locks_here:
+                        edge = (outer, inner)
+                        rev = (inner, outer)
+                        if rev in order_edges and edge not in order_edges:
+                            other = order_edges[rev]
+                            findings.append(
+                                self.finding(
+                                    ctx,
+                                    node,
+                                    (
+                                        f"lock order {outer!r} -> {inner!r} "
+                                        f"conflicts with {inner!r} -> "
+                                        f"{outer!r} at line "
+                                        f"{getattr(other, 'lineno', '?')} "
+                                        "(potential deadlock)"
+                                    ),
+                                    hint=(
+                                        "pick one global acquisition order "
+                                        "for these locks and use it "
+                                        "everywhere in the module"
+                                    ),
+                                )
+                            )
+                        order_edges.setdefault(edge, node)
+                new_held = held + locks_here
+                for child in node.body:
+                    scan(child, new_held)
+                return
+            if isinstance(node, ast.Call) and held:
+                self._check_blocking_call(ctx, node, held, findings)
+            # do not cross into nested function/class definitions with the
+            # held-lock stack: a closure defined under a lock runs later
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
+            ):
+                for child in ast.iter_child_nodes(node):
+                    scan(child, [])
+                return
+            for child in ast.iter_child_nodes(node):
+                scan(child, held)
+
+        scan(ctx.tree, [])
+        return iter(findings)
+
+    def _check_blocking_call(self, ctx, node: ast.Call, held, findings) -> None:
+        name = call_name(node)
+        seg = last_segment(name)
+        blocking = seg in BLOCKING_CALLEES
+        if seg in _WAIT_CALLEES and not node.args and not node.keywords:
+            blocking = True  # unbounded wait() under a lock
+        if not blocking:
+            return
+        # acquiring the lock itself (`lock.acquire()`) is not "work inside"
+        if seg == "acquire":
+            return
+        findings.append(
+            self.finding(
+                ctx,
+                node,
+                (
+                    f"blocking call {name or seg!r} inside critical section "
+                    f"(holding {held[-1]!r})"
+                ),
+                hint=(
+                    "move the blocking work outside the lock window — "
+                    "critical sections on the claim path must stay a few "
+                    "integer ops (waive only where the serialization IS "
+                    "the modeled behavior, e.g. CCA's calc delay)"
+                ),
+            )
+        )

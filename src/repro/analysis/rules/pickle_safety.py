@@ -1,0 +1,132 @@
+"""RPL005 — pickle safety: boundary classes shed OS handles explicitly.
+
+Sources cross process boundaries twice in this repo: ``spawn`` workers
+receive their ``ForemanSource``/``SharedStaticSource`` by pickle (PR 4),
+and chaos respawn re-pickles mid-run state (PR 6).  A class that carries a
+``threading.Lock``, an ``Event``, a socket, or an shm handle pickles fine
+on Linux/fork but explodes (or silently resurrects a dead handle) under
+``spawn`` — the classic works-on-my-box failure that only shows up in the
+macOS/Windows CI matrix.
+
+The rule: in pickle-boundary modules (``dist/sources.py``,
+``net/transport.py``, ``net/sources.py``, ``net/tree.py``,
+``net/cluster.py``, ``runtime/inject.py``, or any file carrying a
+``# reprolint: pickle-boundary`` pragma), a class that assigns an
+unpicklable handle to ``self`` in any of its methods must define
+``__getstate__`` or ``__reduce__`` (or ``__getstate__``+``__setstate__``)
+spelling out what survives the boundary.  Host-local-only classes waive
+with a reason saying exactly that.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List
+
+from ..core import (
+    Checker,
+    Finding,
+    ModuleContext,
+    call_name,
+    last_segment,
+    register,
+)
+
+__all__ = ["PickleSafetyChecker", "BOUNDARY_PATHS", "UNPICKLABLE_FACTORIES"]
+
+BOUNDARY_PATHS = (
+    "repro/dist/sources.py",
+    "repro/net/transport.py",
+    "repro/net/sources.py",
+    "repro/net/tree.py",
+    "repro/net/cluster.py",
+    "repro/runtime/inject.py",
+)
+
+# callee last-segments whose result must never ride through pickle
+UNPICKLABLE_FACTORIES = frozenset(
+    {
+        "Lock",
+        "RLock",
+        "Condition",
+        "Semaphore",
+        "BoundedSemaphore",
+        "Event",
+        "Barrier",
+        "socket",
+        "create_connection",
+        "SharedMemory",
+        "create_block",
+        "attach_block",
+        "memoryview",
+    }
+)
+
+_ESCAPE_HATCHES = ("__getstate__", "__reduce__", "__reduce_ex__")
+
+
+def _handle_assigns(cls: ast.ClassDef):
+    """Yield (attr, call, callee) for `self.x = <unpicklable>()` assigns."""
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Assign):
+            continue
+        if not isinstance(node.value, ast.Call):
+            continue
+        seg = last_segment(call_name(node.value))
+        if seg not in UNPICKLABLE_FACTORIES:
+            continue
+        for tgt in node.targets:
+            if (
+                isinstance(tgt, ast.Attribute)
+                and isinstance(tgt.value, ast.Name)
+                and tgt.value.id == "self"
+            ):
+                yield tgt.attr, node.value, seg
+
+
+@register
+class PickleSafetyChecker(Checker):
+    rule = "RPL005"
+    name = "pickle-safety"
+    description = (
+        "classes crossing pickle boundaries must not carry locks/sockets/"
+        "shm handles without __getstate__/__reduce__"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        if not (
+            ctx.path_matches(BOUNDARY_PATHS)
+            or "pickle-boundary" in ctx.pragmas
+        ):
+            return iter(())
+        findings: List[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            has_hatch = any(
+                isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and item.name in _ESCAPE_HATCHES
+                for item in node.body
+            )
+            if has_hatch:
+                continue
+            handles = list(_handle_assigns(node))
+            if not handles:
+                continue
+            attrs = sorted({f"self.{a} ({seg}())" for a, _, seg in handles})
+            findings.append(
+                self.finding(
+                    ctx,
+                    node,
+                    f"class {node.name!r} in a pickle-boundary module "
+                    f"holds unpicklable handle(s) {', '.join(attrs)} with "
+                    "no __getstate__/__reduce__",
+                    hint=(
+                        "define __getstate__ dropping the handles and "
+                        "__setstate__ rebuilding them (see "
+                        "ForemanSource/NetClient), or waive with a reason "
+                        "if the class is host-local by design"
+                    ),
+                )
+            )
+        return iter(findings)

@@ -1,0 +1,170 @@
+"""RPL002 — shm lifecycle: every segment flows through the leak registry.
+
+Attachers never unlink (bpo-38119 — a child's resource tracker tearing a
+table down under the remaining workers), so the only unlinker is the
+creator, and a SIGKILLed creator (exactly what chaos crash faults inject)
+leaks its ``/dev/shm`` segments forever *unless* every creation goes
+through ``repro.dist.shm.create_block`` — which records the segment in the
+pid-guarded registry the atexit hook sweeps.  Three statically checkable
+commitments:
+
+* **No raw ``SharedMemory`` construction** outside ``dist/shm.py``'s own
+  ``create_block``/``attach_block``: a raw ``SharedMemory(create=True)``
+  bypasses the registry (leak on crash), a raw ``SharedMemory(name=...)``
+  attach bypasses the tracker suppression (bpo-38119 teardown race).
+* **No raw ``.unlink()``** outside ``dist/shm.py``: orderly release is
+  ``unlink_block`` (close + unlink + deregister); a bare unlink leaves a
+  dangling registry entry for the atexit sweep to trip over.
+* **Creators have a release path.**  A module that calls ``create_block``
+  must also reference ``unlink_block`` or call ``.close()`` somewhere — a
+  creator with no release path leaks on every run that outlives its atexit
+  scope (long-lived servers, notebook sessions).  Module scope, not class
+  scope: fixture-style helper classes legitimately release in the
+  enclosing function.  This is the CFG-lite approximation of "reaches
+  close/unlink on all paths"; the dynamic half lives in
+  tests/test_shm_leaks.py.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from ..core import (
+    Checker,
+    Finding,
+    ModuleContext,
+    call_name,
+    last_segment,
+    register,
+)
+
+__all__ = ["ShmLifecycleChecker"]
+
+_SHM_OWNER_MODULE = "repro/dist/shm.py"
+
+
+def _enclosing_funcname(stack: List[ast.AST]) -> Optional[str]:
+    for node in reversed(stack):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return node.name
+    return None
+
+
+def _walk_with_stack(tree: ast.AST):
+    """Yield (node, ancestor_stack) pairs, depth-first."""
+    stack: List[ast.AST] = []
+
+    def rec(node: ast.AST):
+        yield node, list(stack)
+        stack.append(node)
+        for child in ast.iter_child_nodes(node):
+            yield from rec(child)
+        stack.pop()
+
+    yield from rec(tree)
+
+
+def _has_release_path(scope: ast.AST) -> bool:
+    """Does this scope (class or module) reference a segment release?"""
+    for node in ast.walk(scope):
+        if isinstance(node, ast.Call):
+            seg = last_segment(call_name(node))
+            if seg in ("unlink_block", "cleanup_registry"):
+                return True
+            if seg == "close":
+                return True
+        elif isinstance(node, ast.Name) and node.id == "unlink_block":
+            return True
+        elif isinstance(node, ast.Attribute) and node.attr == "unlink_block":
+            return True
+    return False
+
+
+@register
+class ShmLifecycleChecker(Checker):
+    rule = "RPL002"
+    name = "shm-lifecycle"
+    description = (
+        "SharedMemory segments must flow through the dist/shm leak registry "
+        "and have a release path"
+    )
+
+    def check(self, ctx: ModuleContext) -> Iterator[Finding]:
+        in_owner_module = ctx.path_matches([_SHM_OWNER_MODULE])
+        findings: List[Finding] = []
+        for node, stack in _walk_with_stack(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            seg = last_segment(call_name(node))
+            if seg == "SharedMemory":
+                fn = _enclosing_funcname(stack)
+                creates = any(
+                    kw.arg == "create"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    for kw in node.keywords
+                )
+                if in_owner_module and fn in ("create_block", "attach_block"):
+                    continue  # the registry's own implementation
+                if creates:
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            "raw SharedMemory(create=True) bypasses the shm "
+                            "leak registry (segment leaks if this process is "
+                            "SIGKILLed)",
+                            hint="use repro.dist.shm.create_block(n_bytes)",
+                        )
+                    )
+                else:
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            "raw SharedMemory attach lets the resource "
+                            "tracker adopt the segment (bpo-38119: a child "
+                            "exit unlinks it under everyone else)",
+                            hint="use repro.dist.shm.attach_block(name)",
+                        )
+                    )
+            elif seg == "unlink" and isinstance(node.func, ast.Attribute):
+                if in_owner_module:
+                    continue  # unlink_block / cleanup_registry internals
+                base = call_name(node)
+                # `os.unlink(path)` is filesystem, not shm — only flag
+                # attribute unlinks with no args (the SharedMemory API)
+                if base and base.startswith("os."):
+                    continue
+                if node.args or node.keywords:
+                    continue
+                findings.append(
+                    self.finding(
+                        ctx,
+                        node,
+                        "raw segment .unlink() skips registry deregistration "
+                        "(the atexit sweep later races a dangling entry)",
+                        hint="use repro.dist.shm.unlink_block(shm)",
+                    )
+                )
+            elif seg == "create_block" and not in_owner_module:
+                # creators must have a release path in reach somewhere in
+                # the module (class-scope would misfire on helpers whose
+                # release lives in the enclosing fixture/function)
+                if not _has_release_path(ctx.tree):
+                    findings.append(
+                        self.finding(
+                            ctx,
+                            node,
+                            "create_block with no release path in its "
+                            "module (no unlink_block/.close() reference)",
+                            hint=(
+                                "give the creator an orderly release "
+                                "(unlink_block in a close()/finally path); "
+                                "the atexit sweep is a crash backstop, not "
+                                "the lifecycle"
+                            ),
+                        )
+                    )
+        return iter(findings)

@@ -312,7 +312,7 @@ def simulate_fast(
     to the event engine (their chunks depend on live timings — the same
     reason AF keeps the event engine).
     """
-    cfg = _apply_scenario(cfg, scenario=scenario, network=network)
+    cfg = _apply_scenario(cfg, scenario=scenario, network=network, stacklevel=3)
     p = cfg.params
     if source is not None:
         mat = getattr(source, "materialize", None)

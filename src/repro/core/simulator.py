@@ -215,6 +215,7 @@ def normalize_scenario(
     network=None,
     warn: bool = True,
     on_delay_conflict: str = "supersede",
+    stacklevel: int = 2,
 ):
     """THE normalization point for the (scenario | legacy scalars) split.
 
@@ -236,6 +237,11 @@ def normalize_scenario(
 
     ``network`` (a ``NetworkModel``) is attached to whatever scenario comes
     out; an explicit ``network=`` wins over one the scenario already carries.
+
+    ``stacklevel`` has ``warnings.warn`` semantics as if the warning were
+    issued here (2 = this function's caller); wrappers add 1 per frame they
+    interpose so the DeprecationWarning lands on the *external* call site,
+    not inside our own stack.
     """
     if scenario is not None:
         if pe_speeds is not None:
@@ -256,7 +262,7 @@ def normalize_scenario(
     if P is None:
         raise ValueError("P is required to wrap legacy scalars into a scenario")
     if warn and (pe_speeds is not None or delay_calc_s):
-        warnings.warn(_LEGACY_SIMCONFIG_MSG, DeprecationWarning, stacklevel=3)
+        warnings.warn(_LEGACY_SIMCONFIG_MSG, DeprecationWarning, stacklevel=stacklevel)
     # deferred: core stays importable without select (the scenario object is
     # duck-typed everywhere else in this module)
     from ..select.scenarios import PerturbationScenario
@@ -273,7 +279,12 @@ def normalize_scenario(
 
 
 def _apply_scenario(
-    cfg: SimConfig, *, scenario=None, network=None, warn: bool = True
+    cfg: SimConfig,
+    *,
+    scenario=None,
+    network=None,
+    warn: bool = True,
+    stacklevel: int = 2,
 ) -> SimConfig:
     """Fold the scenario/network kwargs and any legacy scalars into one
     normalized config: ``cfg.scenario`` ends up authoritative (its delay
@@ -291,6 +302,7 @@ def _apply_scenario(
         pe_speeds=cfg.pe_speeds,
         network=network,
         warn=warn,
+        stacklevel=stacklevel + 1,
     )
     if scen is None:
         return cfg
@@ -343,7 +355,7 @@ def simulate(
     ``h_assign``; sources flagged ``amortizes_network`` (the node-master
     tree) pay ``tree_claim_s`` — one batch refill spread over its chunks.
     """
-    cfg = _apply_scenario(cfg, scenario=scenario, network=network)
+    cfg = _apply_scenario(cfg, scenario=scenario, network=network, stacklevel=3)
     p = cfg.params
     assert len(costs) >= p.N, f"need >= {p.N} iteration costs, got {len(costs)}"
     if source is None and cfg.approach == "adaptive":

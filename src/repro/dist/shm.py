@@ -118,10 +118,22 @@ def create_block(n_bytes: int) -> shared_memory.SharedMemory:
 
     The segment is recorded in this process's leak registry; release it
     with ``unlink_block`` (or close()+unlink() — the atexit sweep tolerates
-    an already-unlinked entry).
+    an already-unlinked entry).  Create-then-register is the one window
+    where a segment exists that no registry knows about, so anything raised
+    in it (KeyboardInterrupt landing between the two lines, an
+    instrumented registry) unwinds by unlinking the fresh segment — a
+    failed ``create_block`` never leaks.
     """
     shm = shared_memory.SharedMemory(create=True, size=n_bytes)
-    _REGISTRY[shm.name] = os.getpid()
+    try:
+        _REGISTRY[shm.name] = os.getpid()
+    except BaseException:
+        shm.close()
+        try:
+            shm.unlink()
+        except FileNotFoundError:  # pragma: no cover - unlink raced
+            pass
+        raise
     return shm
 
 

@@ -459,7 +459,9 @@ class ForemanSource(ChunkSource):
             try:
                 with self._lock:
                     conn = self._connection()
+                    # reprolint: waive[RPL001] duplex pipe: lock pairs this request with its reply
                     conn.send(msg)
+                    # reprolint: waive[RPL001] reply must be read under the same pairing lock
                     return conn.recv() if reply else None
             except (EOFError, OSError) as e:
                 with self._lock:

@@ -223,6 +223,7 @@ def _chunk_server_main(port_conn, host, port, inner_factory, calc_delay_s,
     os._exit(0)
 
 
+# reprolint: waive[RPL005] abstract owner half: both concrete subclasses define __getstate__ (client-handle pickling)
 class _NetSourceBase(ChunkSource):
     """Owner-side coordinator lifecycle shared by both networked sources:
     spawn (ephemeral port, reported over a pipe), optional supervised

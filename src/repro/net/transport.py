@@ -235,11 +235,14 @@ class NetClient:
                     if self._sock is None:
                         self._sock = self._connect(deadline - time.monotonic())
                     if latency:
+                        # reprolint: waive[RPL001] modeled link latency: the claim-message cost under test
                         time.sleep(latency)  # one-way propagation to the server
                     self._sock.settimeout(max(deadline - time.monotonic(), 0.01))
+                    # reprolint: waive[RPL001] framed RPC: lock pairs the request frame with its reply
                     send_frame(self._sock, tag, body)
                     if not reply:
                         return None
+                    # reprolint: waive[RPL001] the reply frame must be read under the same pairing lock
                     rtag, rbody = recv_frame(self._sock)
                 if latency:
                     time.sleep(latency)  # propagation of the reply
@@ -299,6 +302,7 @@ class NetClient:
 # ---------------------------------------------------------------------------
 
 
+# reprolint: waive[RPL005] host-local by design: servers never cross pickle, clients carry (host, port)
 class NetServer:
     """Thread-per-connection framed-TCP server around a handler function.
 

@@ -37,7 +37,7 @@ import pytest
 from repro.core.executor import SelfSchedulingExecutor
 from repro.core.techniques import DLSParams
 from repro.dist import DistributedExecutor, ForemanSource
-from repro.dist.shm import attach_block, create_block, int64_field
+from repro.dist.shm import attach_block, create_block, int64_field, unlink_block
 from repro.select import FaultEvent, PerturbationScenario, fault_suite
 
 pytestmark = pytest.mark.dist  # SIGALRM hard deadline via tests/conftest.py
@@ -81,8 +81,7 @@ def hits_block():
     b = _Block()
     yield b
     if b.shm is not None:
-        b.shm.close()
-        b.shm.unlink()
+        unlink_block(b.shm)
 
 
 def _scenarios():
@@ -207,8 +206,7 @@ def test_dca_beats_cca_by_more_under_coordinator_faults(hits_block):
             ex, t = _run_cell(scen if scenario == "faulted" else base, mode,
                               hits_block)
             times.append(t)
-            hits_block.shm.close()
-            hits_block.shm.unlink()
+            unlink_block(hits_block.shm)
             hits_block.shm = None
             if scenario == "faulted" and mode == "cca":
                 assert ex.source.restarts >= 3, "most kills must have landed"

@@ -32,7 +32,7 @@ import pytest
 
 from repro.core.techniques import DLSParams
 from repro.dist import DistributedExecutor
-from repro.dist.shm import attach_block, create_block, int64_field
+from repro.dist.shm import attach_block, create_block, int64_field, unlink_block
 
 pytestmark = [pytest.mark.dist, pytest.mark.chaos]
 
@@ -175,8 +175,7 @@ def test_random_fault_schedule_survives(seed, mode, tmp_path):
         finally:
             ex.close()
     finally:
-        shm.close()
-        shm.unlink()
+        unlink_block(shm)
 
 
 @pytest.mark.parametrize("mode", ["dca", "cca"])
@@ -200,5 +199,4 @@ def test_repeated_claim_kills_never_double_record(mode, tmp_path):
             finally:
                 ex.close()
         finally:
-            shm.close()
-            shm.unlink()
+            unlink_block(shm)

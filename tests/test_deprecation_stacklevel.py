@@ -1,0 +1,114 @@
+"""Deprecation warnings must blame the *caller's* file, not our own stack.
+
+A DeprecationWarning whose filename points inside ``src/repro`` is noise
+users learn to ignore (and ``-W error::DeprecationWarning`` CI cannot
+attribute); one pointing at the external call site is actionable.  Every
+PR 8 shim — the three placement factories and the legacy SimConfig
+scalars — must land its warning on THIS file when called from here.
+
+The legacy-scalar path is the interesting one: the warn site sits two
+frames deep (``simulate`` -> ``_apply_scenario`` -> ``normalize_scenario``),
+so it only attributes correctly because each wrapper adds 1 to the
+``stacklevel`` it forwards.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import SimConfig, normalize_scenario, simulate
+from repro.core.techniques import DLSParams
+
+
+def _params(**kw):
+    return DLSParams(N=256, P=4, **kw)
+
+
+def _costs():
+    return np.full(256, 1e-6)
+
+
+def _sole_deprecation(record):
+    deps = [w for w in record if issubclass(w.category, DeprecationWarning)]
+    assert len(deps) == 1, f"expected exactly one DeprecationWarning, got {deps}"
+    return deps[0]
+
+
+def _assert_blames_this_file(record):
+    w = _sole_deprecation(record)
+    assert w.filename == __file__, (
+        f"warning attributed to {w.filename}:{w.lineno}, expected {__file__} "
+        "(stacklevel points inside the library instead of at the caller)"
+    )
+
+
+class TestFactoryAliasAttribution:
+    def test_source_for_blames_caller(self):
+        from repro.core.source import source_for
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            source_for("gss", _params(), "dca")
+        _assert_blames_this_file(rec)
+
+    @pytest.mark.dist
+    def test_process_source_for_blames_caller(self):
+        from repro.dist.sources import process_source_for
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            src = process_source_for("ss", _params(min_chunk=8), "dca")
+        try:
+            _assert_blames_this_file(rec)
+        finally:
+            src.close()
+
+    @pytest.mark.net
+    @pytest.mark.dist
+    def test_net_source_for_blames_caller(self):
+        from repro.net.sources import net_source_for
+
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            src = net_source_for("ss", _params(min_chunk=8), "dca")
+        try:
+            _assert_blames_this_file(rec)
+        finally:
+            src.close()
+
+
+class TestLegacyScalarAttribution:
+    def test_simulate_legacy_scalars_blame_caller(self):
+        cfg = SimConfig("fac", _params(), approach="dca", delay_calc_s=1e-5)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            simulate(cfg, _costs())
+        _assert_blames_this_file(rec)
+
+    def test_simulate_fast_legacy_scalars_blame_caller(self):
+        from repro.core.fastsim import simulate_fast
+
+        cfg = SimConfig("fac", _params(), approach="dca", delay_calc_s=1e-5)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            simulate_fast(cfg, _costs())
+        _assert_blames_this_file(rec)
+
+    def test_normalize_scenario_direct_call_blames_caller(self):
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            normalize_scenario(None, 4, delay_calc_s=1e-5)
+        _assert_blames_this_file(rec)
+
+    def test_scenario_path_stays_silent(self):
+        from repro.select.scenarios import PerturbationScenario
+
+        scen = PerturbationScenario.constant(4, delay_calc_s=1e-5)
+        cfg = SimConfig("fac", _params(), approach="dca", scenario=scen)
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            simulate(cfg, _costs())
+        assert not [
+            w for w in rec if issubclass(w.category, DeprecationWarning)
+        ], "modern scenario= path must not warn"

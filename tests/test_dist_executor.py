@@ -17,7 +17,7 @@ import pytest
 
 from repro.core.techniques import DLSParams
 from repro.dist import DistributedExecutor, ForemanSource, SharedStaticSource
-from repro.dist.shm import attach_block, create_block, int64_field
+from repro.dist.shm import attach_block, create_block, int64_field, unlink_block
 
 pytestmark = pytest.mark.dist  # SIGALRM hard deadline via tests/conftest.py
 
@@ -47,8 +47,7 @@ def hits_block():
     b = _Block()
     yield b
     if b.shm is not None:
-        b.shm.close()
-        b.shm.unlink()
+        unlink_block(b.shm)
 
 
 # -- module-level work functions (picklable under spawn too) -----------------

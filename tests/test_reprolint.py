@@ -1,0 +1,511 @@
+"""reprolint conformance: every rule flags its seeded violation at the
+right line, clean code passes, waivers round-trip, and — the meta-test —
+the shipped tree itself carries zero unwaived findings (the CI gate).
+
+Fixtures are analyzed under *virtual* paths (``src/repro/dist/...``) so the
+path-scoped rules (RPL003 engine modules, RPL005 pickle boundaries) see the
+snippets as in-tree files without touching disk.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ALL_RULES, analyze_paths, analyze_source
+
+REPO = Path(__file__).resolve().parent.parent
+SRC_TREE = REPO / "src" / "repro"
+
+
+def _findings(source, path, rule=None, waived=False):
+    out = [
+        f
+        for f in analyze_source(textwrap.dedent(source), path=path)
+        if f.waived == waived
+    ]
+    if rule is not None:
+        out = [f for f in out if f.rule == rule]
+    return out
+
+
+def _lines(findings):
+    return [f.line for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# RPL001 lock discipline
+# ---------------------------------------------------------------------------
+
+
+class TestLockDiscipline:
+    def test_blocking_call_under_lock_flagged_at_line(self):
+        bad = """\
+            import time
+
+            def claim(self):
+                with self._lock:
+                    time.sleep(0.1)
+            """
+        found = _findings(bad, "src/repro/dist/x.py", rule="RPL001")
+        assert _lines(found) == [5]
+        assert "time.sleep" in found[0].message
+
+    def test_rpc_and_shm_calls_under_lock_flagged(self):
+        bad = """\
+            def claim(self):
+                with self.prog_lock:
+                    self.client.request(b"x")
+                with self._lock:
+                    shm = SharedMemory(create=True, size=8)
+            """
+        found = _findings(bad, "src/repro/net/x.py", rule="RPL001")
+        assert _lines(found) == [3, 5]
+
+    def test_lock_order_inversion_flagged(self):
+        bad = """\
+            def a(self):
+                with self._lock:
+                    with self._stats_lock:
+                        pass
+
+            def b(self):
+                with self._stats_lock:
+                    with self._lock:
+                        pass
+            """
+        found = _findings(bad, "src/repro/core/x.py", rule="RPL001")
+        assert _lines(found) == [8]
+        assert "deadlock" in found[0].message
+
+    def test_clean_critical_section_passes(self):
+        good = """\
+            import time
+
+            def claim(self):
+                with self._lock:
+                    step = self._step
+                    self._step = step + 1
+                time.sleep(0.1)  # outside the lock window
+
+            def consistent_order(self):
+                with self._lock:
+                    with self._stats_lock:
+                        pass
+            """
+        assert _findings(good, "src/repro/core/x.py", rule="RPL001") == []
+
+    def test_closure_under_lock_not_charged_to_lock(self):
+        good = """\
+            import time
+
+            def spawn(self):
+                with self._lock:
+                    def later():
+                        time.sleep(1.0)  # runs after the lock is gone
+                    self._cb = later
+            """
+        assert _findings(good, "src/repro/core/x.py", rule="RPL001") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL002 shm lifecycle
+# ---------------------------------------------------------------------------
+
+
+class TestShmLifecycle:
+    def test_raw_create_flagged(self):
+        bad = """\
+            from multiprocessing import shared_memory
+
+            def make(self):
+                return shared_memory.SharedMemory(create=True, size=64)
+            """
+        found = _findings(bad, "src/repro/dist/x.py", rule="RPL002")
+        assert _lines(found) == [4]
+        assert "leak registry" in found[0].message
+
+    def test_raw_attach_and_unlink_flagged(self):
+        bad = """\
+            from multiprocessing import shared_memory
+
+            def attach(self, name):
+                seg = shared_memory.SharedMemory(name=name)
+                seg.unlink()
+            """
+        found = _findings(bad, "src/repro/dist/x.py", rule="RPL002")
+        assert _lines(found) == [4, 5]
+
+    def test_creator_without_release_path_flagged(self):
+        bad = """\
+            from repro.dist.shm import create_block
+
+            class Leaky:
+                def __init__(self):
+                    self._shm = create_block(64)
+            """
+        found = _findings(bad, "src/repro/dist/x.py", rule="RPL002")
+        assert _lines(found) == [5]
+
+    def test_registry_flow_passes(self):
+        good = """\
+            from repro.dist.shm import create_block, unlink_block
+            import os
+
+            class Owner:
+                def __init__(self):
+                    self._shm = create_block(64)
+
+                def close(self):
+                    unlink_block(self._shm)
+                    os.unlink("/tmp/scratch")  # filesystem, not shm
+            """
+        assert _findings(good, "src/repro/dist/x.py", rule="RPL002") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL003 sim determinism
+# ---------------------------------------------------------------------------
+
+
+class TestSimDeterminism:
+    def test_wall_clock_in_engine_flagged(self):
+        bad = """\
+            import time
+
+            def step(state):
+                return time.perf_counter()
+            """
+        found = _findings(bad, "src/repro/core/fastsim.py", rule="RPL003")
+        assert _lines(found) == [4]
+
+    def test_unseeded_rng_flagged(self):
+        bad = """\
+            import random
+            import numpy as np
+
+            def draw():
+                a = random.random()
+                rng = np.random.default_rng()
+                return a, rng
+            """
+        found = _findings(bad, "src/repro/select/x.py", rule="RPL003")
+        assert _lines(found) == [5, 6]
+
+    def test_float_reduction_over_set_flagged(self):
+        bad = """\
+            def total(costs):
+                acc = 0.0
+                for c in set(costs):
+                    acc += c
+                return acc + sum({1.0, 2.0})
+            """
+        found = _findings(bad, "src/repro/core/simulator.py", rule="RPL003")
+        assert _lines(found) == [4, 5]
+
+    def test_non_engine_module_not_in_scope(self):
+        src = "import time\nt = time.time()\n"
+        assert _findings(src, "src/repro/dist/x.py", rule="RPL003") == []
+
+    def test_pragma_opts_module_in(self):
+        src = "# reprolint: engine-module\nimport time\nt = time.time()\n"
+        found = _findings(src, "src/repro/dist/x.py", rule="RPL003")
+        assert _lines(found) == [3]
+
+    def test_seeded_rng_and_bench_shim_pass(self):
+        good = """\
+            import time
+            import numpy as np
+
+            def step(seed):
+                return np.random.default_rng(seed).random()
+
+            def bench_wall(fn):
+                t0 = time.perf_counter()
+                fn()
+                return time.perf_counter() - t0
+            """
+        assert _findings(good, "src/repro/core/fastsim.py", rule="RPL003") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL004 deprecated boundary
+# ---------------------------------------------------------------------------
+
+
+class TestDeprecatedBoundary:
+    def test_alias_call_and_import_flagged(self):
+        bad = """\
+            from repro.core.source import source_for
+
+            def build(params):
+                return source_for("gss", params)
+            """
+        found = _findings(bad, "src/repro/runtime/x.py", rule="RPL004")
+        assert _lines(found) == [1, 4]
+
+    def test_legacy_simconfig_scalars_flagged(self):
+        bad = """\
+            def cfg(params, speeds):
+                return SimConfig("fac", params, pe_speeds=speeds)
+            """
+        found = _findings(bad, "src/repro/runtime/x.py", rule="RPL004")
+        assert _lines(found) == [2]
+        assert "pe_speeds" in found[0].message
+
+    def test_owner_module_and_init_reexport_pass(self):
+        owner = """\
+            def source_for(technique, params):
+                return _source_for(technique, params)
+            """
+        assert _findings(owner, "src/repro/core/source.py", rule="RPL004") == []
+        reexport = "from .source import source_for\n"
+        assert (
+            _findings(reexport, "src/repro/core/__init__.py", rule="RPL004")
+            == []
+        )
+
+    def test_modern_api_passes(self):
+        good = """\
+            def cfg(params, scen):
+                src = make_source(spec)
+                return SimConfig("fac", params, scenario=scen)
+            """
+        assert _findings(good, "src/repro/runtime/x.py", rule="RPL004") == []
+
+
+# ---------------------------------------------------------------------------
+# RPL005 pickle safety
+# ---------------------------------------------------------------------------
+
+
+class TestPickleSafety:
+    BAD = """\
+        import threading
+
+        class Crosser:
+            def __init__(self):
+                self._lock = threading.Lock()
+        """
+
+    def test_lock_holder_without_getstate_flagged(self):
+        found = _findings(self.BAD, "src/repro/dist/sources.py", rule="RPL005")
+        assert _lines(found) == [3]
+        assert "Crosser" in found[0].message
+
+    def test_out_of_scope_module_passes(self):
+        assert _findings(self.BAD, "src/repro/core/x.py", rule="RPL005") == []
+
+    def test_pragma_opts_module_in(self):
+        src = "# reprolint: pickle-boundary\n" + textwrap.dedent(self.BAD)
+        found = [
+            f
+            for f in analyze_source(src, path="src/repro/core/x.py")
+            if f.rule == "RPL005" and not f.waived
+        ]
+        assert _lines(found) == [4]
+
+    def test_getstate_makes_it_pass(self):
+        good = """\
+            import threading
+
+            class Crosser:
+                def __init__(self):
+                    self._lock = threading.Lock()
+
+                def __getstate__(self):
+                    return {}
+            """
+        assert _findings(good, "src/repro/net/tree.py", rule="RPL005") == []
+
+
+# ---------------------------------------------------------------------------
+# Waivers (RPL000 hygiene included)
+# ---------------------------------------------------------------------------
+
+
+class TestWaivers:
+    BAD_LINE = "    time.sleep(0.1)"
+
+    def _module(self, waiver_line=None, above=False):
+        lines = ["import time", "", "def f(self):", "    with self._lock:"]
+        if waiver_line and above:
+            lines.append("        " + waiver_line)
+        body = "        time.sleep(0.1)"
+        if waiver_line and not above:
+            body += "  " + waiver_line
+        lines.append(body)
+        return "\n".join(lines) + "\n"
+
+    def test_trailing_waiver_suppresses_and_is_recorded(self):
+        src = self._module("# reprolint: waive[RPL001] modeled CCA delay")
+        all_f = analyze_source(src, path="src/repro/dist/x.py")
+        assert [f.rule for f in all_f] == ["RPL001"]
+        assert all_f[0].waived and all_f[0].waiver_reason == "modeled CCA delay"
+
+    def test_standalone_waiver_covers_next_line(self):
+        src = self._module(
+            "# reprolint: waive[RPL001] modeled CCA delay", above=True
+        )
+        all_f = analyze_source(src, path="src/repro/dist/x.py")
+        assert [(f.rule, f.waived) for f in all_f] == [("RPL001", True)]
+
+    def test_unwaived_rule_stays_fatal(self):
+        src = self._module("# reprolint: waive[RPL002] wrong rule id")
+        rules = {
+            f.rule for f in analyze_source(src, path="src/repro/dist/x.py")
+            if not f.waived
+        }
+        # the RPL001 finding survives, and the RPL002 waiver is now unused
+        assert rules == {"RPL000", "RPL001"}
+
+    def test_reasonless_waiver_is_a_finding(self):
+        src = self._module("# reprolint: waive[RPL001]")
+        unwaived = [
+            f for f in analyze_source(src, path="src/repro/dist/x.py")
+            if not f.waived
+        ]
+        assert any(
+            f.rule == "RPL000" and "reason" in f.message for f in unwaived
+        )
+
+    def test_malformed_directive_is_a_finding(self):
+        src = "# reprolint waive[RPL001] missing colon\nx = 1\n"
+        found = analyze_source(src, path="src/repro/dist/x.py")
+        assert [f.rule for f in found] == ["RPL000"]
+
+    def test_unused_waiver_flagged_on_full_runs_only(self):
+        src = "x = 1  # reprolint: waive[RPL001] nothing here to waive\n"
+        full = analyze_source(src, path="src/repro/dist/x.py")
+        assert [f.rule for f in full] == ["RPL000"]
+        assert "unused" in full[0].message
+        subset = analyze_source(
+            src, path="src/repro/dist/x.py", select=["RPL002"]
+        )
+        assert subset == []
+
+    def test_waiver_syntax_quoted_in_strings_is_inert(self):
+        src = 'DOC = "# reprolint: waive[RPL001] just prose"\n'
+        assert analyze_source(src, path="src/repro/dist/x.py") == []
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*argv, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True,
+        text=True,
+        cwd=cwd or REPO,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+    )
+
+
+class TestCli:
+    def test_violation_exits_nonzero(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "import time\n\ndef f(self):\n    with self._lock:\n"
+            "        time.sleep(1)\n"
+        )
+        proc = _run_cli(str(bad))
+        assert proc.returncode == 1
+        assert "RPL001" in proc.stdout
+
+    def test_waived_tree_exits_zero_and_json_reports(self, tmp_path):
+        ok = tmp_path / "ok.py"
+        ok.write_text(
+            "import time\n\ndef f(self):\n    with self._lock:\n"
+            "        # reprolint: waive[RPL001] test fixture\n"
+            "        time.sleep(1)\n"
+        )
+        report = tmp_path / "report.json"
+        proc = _run_cli(str(ok), "--json-out", str(report))
+        assert proc.returncode == 0
+        data = json.loads(report.read_text())
+        assert data["summary"] == {
+            "total": 1,
+            "waived": 1,
+            "unwaived": 0,
+            "files": 1,
+            "per_rule": {},
+        }
+        assert data["findings"][0]["waiver_reason"] == "test fixture"
+
+    def test_select_limits_rules(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "import time\n\ndef f(self):\n    with self._lock:\n"
+            "        time.sleep(1)\n"
+        )
+        proc = _run_cli("--select", "RPL002", str(bad))
+        assert proc.returncode == 0
+
+    def test_gh_format_emits_annotations(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "import time\n\ndef f(self):\n    with self._lock:\n"
+            "        time.sleep(1)\n"
+        )
+        proc = _run_cli("--format", "gh", str(bad))
+        assert proc.returncode == 1
+        assert "::error file=" in proc.stdout and "line=5" in proc.stdout
+
+    def test_list_rules_names_all_five(self):
+        proc = _run_cli("--list-rules")
+        assert proc.returncode == 0
+        for rule in ("RPL001", "RPL002", "RPL003", "RPL004", "RPL005"):
+            assert rule in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# Meta: the shipped tree is the first conformance fixture
+# ---------------------------------------------------------------------------
+
+
+class TestShippedTree:
+    def test_src_repro_has_zero_unwaived_findings(self):
+        findings = analyze_paths([SRC_TREE])
+        unwaived = [f for f in findings if not f.waived]
+        assert unwaived == [], "\n".join(
+            f"{f.location()}: {f.rule} {f.message}" for f in unwaived
+        )
+
+    def test_every_waiver_in_tree_carries_a_reason(self):
+        findings = analyze_paths([SRC_TREE])
+        waived = [f for f in findings if f.waived]
+        assert waived, "the tree is expected to carry intentional waivers"
+        assert all(f.waiver_reason for f in waived)
+
+    def test_all_five_rules_registered(self):
+        assert ALL_RULES() == [
+            "RPL001",
+            "RPL002",
+            "RPL003",
+            "RPL004",
+            "RPL005",
+        ]
+
+    def test_analysis_package_is_stdlib_only(self):
+        """The analyzer must import (and run) without jax/numpy — CI lint
+        cells and pre-commit hooks don't install the scheduling stack."""
+        probe = (
+            "import sys;"
+            "sys.modules['numpy'] = None; sys.modules['jax'] = None;"
+            "import repro.analysis;"
+            "print(len(repro.analysis.ALL_RULES()))"
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", probe],
+            capture_output=True,
+            text=True,
+            env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"},
+        )
+        assert proc.returncode == 0, proc.stderr
+        assert proc.stdout.strip() == "5"

@@ -81,6 +81,23 @@ _CHILD = textwrap.dedent("""
     print(shm.name, flush=True)
     if "--linger" in sys.argv:
         time.sleep(60)   # parent SIGKILLs us here: atexit never runs
+    if "--raise" in sys.argv:
+        # uncaught exception: the interpreter still runs atexit on the way
+        # down, so the sweep must reclaim the orphaned segment
+        raise RuntimeError("creator died before its orderly release")
+    if "--raise-before-registry" in sys.argv:
+        # die inside create_block's create-then-register window: the
+        # defensive unwind must unlink the fresh segment before the
+        # exception escapes (there is nothing for the sweep to find)
+        from repro.dist import shm as shm_mod
+
+        class Boom(dict):
+            def __setitem__(self, k, v):
+                raise RuntimeError("registry wedged")
+
+        # keep prior registrations so the atexit sweep still covers them
+        shm_mod._REGISTRY = Boom(shm_mod._REGISTRY)
+        create_block(128)
     # normal exit: the atexit sweep reclaims the segment
 """)
 
@@ -104,6 +121,51 @@ def test_orderly_creator_exit_leaks_nothing():
     proc.wait(timeout=30)
     assert proc.returncode == 0
     assert not _leaked(name), "atexit sweep must unlink on normal exit"
+
+
+def test_creator_dying_on_exception_leaks_nothing():
+    """Uncaught exception after create_block: atexit still runs on the way
+    down, so the sweep — not the (never-reached) orderly path — unlinks."""
+    proc = _spawn_creator("--raise")
+    name = proc.stdout.readline().strip()
+    proc.wait(timeout=30)
+    assert proc.returncode != 0, "child must die on the exception"
+    assert not _leaked(name), "atexit sweep must unlink on exception exit"
+
+
+def test_creator_dying_before_registration_leaks_nothing():
+    """Exception inside create_block's create-then-register window: the
+    defensive unwind unlinks the fresh segment before the exception
+    escapes, so even this pre-registry death leaves /dev/shm clean."""
+    proc = _spawn_creator("--raise-before-registry")
+    first = proc.stdout.readline().strip()  # the first (registered) segment
+    proc.wait(timeout=30)
+    assert proc.returncode != 0, "child must die on the wedged registry"
+    assert not _leaked(first)
+
+
+def test_create_block_unwinds_when_registration_fails():
+    """In-process half of the pre-registry story: a raising registry must
+    not leave an unregistered segment behind, and the error propagates."""
+    from repro.dist import shm as shm_mod
+
+    class Boom(dict):
+        def __setitem__(self, key, value):
+            self.attempted = key
+            raise RuntimeError("registry wedged")
+
+    real = shm_mod._REGISTRY
+    shm_mod._REGISTRY = boom = Boom()
+    try:
+        try:
+            create_block(64)
+        except RuntimeError:
+            pass
+        else:  # pragma: no cover - the instrumented registry must raise
+            raise AssertionError("create_block swallowed the registry error")
+    finally:
+        shm_mod._REGISTRY = real
+    assert not _leaked(boom.attempted), "failed create_block must unlink"
 
 
 def test_sigkilled_creator_leak_is_reclaimed_by_adopter():
