@@ -109,3 +109,28 @@ def bench_engine_speedup(emit, full: bool = False):
         emit(f"engine/{app}/analytic", t_new * 1e6,
              f"rows={len(rows)};N={n};P={p}")
         emit(f"engine/{app}/speedup", 0.0, f"x={t_old / t_new:.2f}")
+
+    # the adaptive family: AWF-B/C/D/E under the epoch source, event engine
+    # vs the epoch-segmented vectorized engine (core/adaptsim) — bit-identical
+    # outputs (tests/test_fastsim_equivalence.py), so this measures pure
+    # engine cost.  AF stays event-driven in both columns and is excluded.
+    from repro.core.adaptsim import simulate_adaptive
+
+    awf = ["awf_b", "awf_c", "awf_d", "awf_e"]
+    costs, n, p = _workload("fig5_mandelbrot", full)
+    params = DLSParams(N=n, P=p)
+    cfgs = [SimConfig(technique=t, params=params, approach="adaptive",
+                      delay_calc_s=d) for t in awf for d in DELAYS]
+    t0 = time.perf_counter()
+    for cfg in cfgs:
+        simulate(cfg, costs)
+    t_old = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for cfg in cfgs:
+        simulate_adaptive(cfg, costs)
+    t_new = time.perf_counter() - t0
+    emit("engine/adaptive_awf/event", t_old * 1e6,
+         f"rows={len(cfgs)};N={n};P={p}")
+    emit("engine/adaptive_awf/analytic", t_new * 1e6,
+         f"rows={len(cfgs)};N={n};P={p}")
+    emit("engine/adaptive_awf/speedup", 0.0, f"x={t_old / t_new:.2f}")

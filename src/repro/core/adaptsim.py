@@ -1,0 +1,188 @@
+# reprolint: engine-module
+"""Vectorized epoch-segmented engine for the AWF family (DESIGN.md Sec. 16).
+
+``fastsim`` precomputes chunk tables, which feedback techniques by definition
+do not have.  But AWF-B/C/D/E only *consume* feedback at epoch boundaries:
+``AdaptiveSource`` publishes one immutable weight snapshot per epoch and every
+claim in the epoch sizes its chunk from that snapshot alone.  Chunk identity
+is therefore timing-independent *within* an epoch — which is exactly the
+property the round-based engine needs.  This module runs ``fastsim``'s
+round loop in epoch-bounded segments:
+
+* per round, tentatively size up to ``P - epoch_claims`` chunks from the
+  current snapshot (a scalar loop over at most P candidates — the sizes feed
+  the round's vector math, so this is the one irreducibly sequential step);
+* commit the usual heap-order prefix with the same vector timing ops as
+  ``fastsim._run_config`` (shared ``_coord_recurrence``, same IEEE op order);
+* replay the committed chunks through a *real* ``AWFFeedback`` in claim
+  order, publishing (``end_batch`` + ``snapshot_weights``) at exactly the
+  boundaries ``AdaptiveSource.claim`` would — the P-th claim of an epoch
+  publishes *before* its own ``record``, so snapshot e+1 is a function of
+  records 0..eP+P-2, bit-identical to the event engine's alternating
+  claim/report order (``refresh_weights`` is a pure function of accumulated
+  state, so intra-epoch refreshes by the C/E variants cannot perturb the
+  boundary weights).
+
+AF stays on the event engine: its chunk size consumes live (μ, σ) *per
+claim* — there is no epoch within which its chunks are timing-independent
+(the paper's own Sec. 4 caveat), so there is nothing to batch.
+``fastsim.simulate_fast`` routes AF explicitly (not via fallback) to
+``simulator.simulate``.
+
+Results are bit-identical to ``simulate(cfg, costs)`` with
+``approach="adaptive"`` — pinned, per technique and scenario, by
+tests/test_fastsim_equivalence.py.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from .simulator import SimConfig, SimResult, _apply_scenario
+from .source import FeedbackScheduleError
+from .techniques import AWFFeedback, awf_variant, get_technique
+
+__all__ = ["simulate_adaptive"]
+
+
+def simulate_adaptive(cfg: SimConfig, costs: np.ndarray) -> SimResult:
+    """Epoch-segmented vectorized run of an AWF technique under adaptive
+    (epoch-snapshot DCA) semantics — the fast twin of ``simulate`` with an
+    internally built ``AdaptiveSource``.
+
+    Raises ``FeedbackScheduleError`` for AF (no epoch-stable chunk rule —
+    use the event engine) and plain ``ValueError`` for non-feedback
+    techniques (use ``simulate_fast``; their tables precompute whole)."""
+    tech = get_technique(cfg.technique)
+    if not tech.requires_feedback:
+        raise ValueError(
+            f"{cfg.technique} is closed-form; use simulate_fast (its chunk "
+            "table precomputes whole — no epochs needed)"
+        )
+    if not cfg.technique.startswith("awf_"):
+        raise FeedbackScheduleError(
+            f"{cfg.technique} consumes live feedback at every claim; no "
+            "epoch-stable chunk rule exists — use the event engine "
+            "(simulator.simulate)"
+        )
+    # normalized already when routed from simulate_fast; idempotent otherwise
+    cfg = _apply_scenario(cfg, warn=False)
+    from .fastsim import _cfg_engine_args, _coord_recurrence
+
+    args = _cfg_engine_args(cfg)
+    delay, calc, h = args["delay"], args["calc"], args["h"]
+    service = args["service"]  # the scalar overhead AWF-D/E consume (no net)
+    speeds, scenario, network = args["speeds"], args["scenario"], args["network"]
+    p = cfg.params
+    n, P = p.N, p.P
+    assert len(costs) >= n, f"need >= {n} iteration costs, got {len(costs)}"
+    unit_speed = scenario is None and bool(np.all(speeds == 1.0))
+    mce = max(p.min_chunk, 1)
+    two_p = 2.0 * P
+
+    fb = AWFFeedback(P, awf_variant(cfg.technique))
+    weights = fb.snapshot_weights()  # epoch-0 snapshot: all ones
+    csum = np.concatenate([[0.0], np.cumsum(costs[:n])])
+
+    t_free = np.zeros(P)
+    pe_busy = np.zeros(P)
+    coord = 0.0
+    lp = 0
+    epoch_claims = 0
+    sizes_out, pes_out = [], []
+
+    # Tentative batch cap, adapted to the observed commit size: any prefix
+    # cap preserves exactness (the commit check orders candidates *within*
+    # the prefix; the next round re-derives the queue from updated t_free,
+    # exactly like _run_config's k = min(p, remaining)), so shrinking it
+    # only trades round count against wasted tentative sizing — commits
+    # run well under P when chunk sizes spread across an epoch.
+    cap = P
+    while lp < n:
+        cand = np.argsort(t_free, kind="stable")  # the heap's (t, pe) order
+        # Segment boundary: an epoch admits P claims against one snapshot,
+        # so a round never tentatively sizes past the epoch's remainder —
+        # every size below is a pure function of the *current* snapshot.
+        kmax = min(P - epoch_claims, cap)
+        szs = []
+        lp_t = lp
+        for j in range(kmax):
+            if lp_t >= n:
+                break
+            # AdaptiveSource._size_for + the claim clamp, op for op:
+            # R is the exact queue head (sequential simulation), the ceil
+            # consumes w * R / (2P) in the same IEEE order.
+            w = float(weights[int(cand[j])])
+            k = math.ceil(w * (n - lp_t) / two_p)
+            k = max(int(k), mce)
+            szs.append(min(k, n - lp_t))
+            lp_t += szs[-1]
+        k = len(szs)
+        idx_t = cand[:k]
+        sz = np.array(szs, np.int64)
+        lo = lp + np.concatenate([np.zeros(1, np.int64), np.cumsum(sz[:-1])])
+        exec_base = csum[lo + sz] - csum[lo]
+        t_req = t_free[idx_t]
+        # DCA timing, identical to fastsim._run_config's non-CCA branch:
+        # the calculation runs on the requesting PE, only h_assign serializes
+        ready = (t_req + delay) + calc
+        if network is not None:
+            ready = ready + network.rma_oneway_s * scenario.links_at(idx_t, ready)
+        done = _coord_recurrence(ready, h, coord)
+        done_coord = done
+        if network is not None:
+            done = done + network.rma_oneway_s * scenario.links_at(idx_t, done)
+        if scenario is not None:
+            exec_t = exec_base / scenario.speeds_at(idx_t, done)
+        elif not unit_speed:
+            exec_t = exec_base / speeds[idx_t]
+        else:
+            exec_t = exec_base
+        fin = done + exec_t
+        commit = k
+        if k > 1:
+            reenter = np.minimum.accumulate(fin[:-1]) <= t_req[1:]
+            first = int(reenter.argmax())
+            if reenter[first]:
+                commit = first + 1
+        idx = idx_t[:commit]
+        t_free[idx] = fin[:commit]
+        coord = float(done_coord[commit - 1])
+        np.add.at(pe_busy, idx, exec_t[:commit])
+        pes_out.append(idx)
+        sizes_out.append(sz[:commit])
+        cap = min(P, max(8, 2 * commit))
+        ov = (done[:commit] - t_req[:commit]) if network is not None else service
+        # Feedback replay — the event loop's strict claim(publish-inside) ->
+        # report alternation.  A round never crosses an epoch (kmax caps at
+        # the epoch remainder) so at most one boundary occurs, always at the
+        # round's END: the epoch-filling (or N-draining) claim publishes
+        # BEFORE its own report, so its record lands after end_batch and
+        # everything earlier lands before — one vectorized batch + at most
+        # one scalar record reproduce the chunk-by-chunk order exactly.
+        lp += int(sz[:commit].sum())
+        if epoch_claims + commit >= P or lp >= n:
+            if commit > 1:
+                fb.record_batch(idx[:-1], sz[:commit - 1], exec_t[:commit - 1],
+                                ov if network is None else ov[:-1])
+            fb.end_batch()
+            weights = fb.snapshot_weights()
+            epoch_claims = 0
+            j = commit - 1
+            fb.record_deferred(int(idx[j]), int(sz[j]), float(exec_t[j]),
+                               float(ov[j]) if network is not None else service)
+        else:
+            fb.record_batch(idx, sz[:commit], exec_t[:commit], ov)
+            epoch_claims += commit
+
+    chunk_sizes = np.concatenate(sizes_out)
+    return SimResult(
+        t_parallel=float(t_free.max()),
+        num_chunks=len(chunk_sizes),
+        pe_finish=t_free,
+        pe_busy=pe_busy,
+        chunk_sizes=chunk_sizes,
+        chunk_pes=np.concatenate(pes_out),
+    )

@@ -27,9 +27,14 @@ This module exploits the analytic schedule engine (DESIGN.md Sec. 7):
   (tests/test_fastsim_equivalence.py asserts exact equality of chunk
   sequences, placements, and T_loop^par).
 
-AF (adaptive factoring) keeps the event engine: its chunk sizes depend on
-live per-PE timing feedback, so the table cannot be precomputed — the paper's
-own caveat in Sec. 4.  ``simulate_sweep`` falls back automatically.
+The adaptive family is vectorized too (DESIGN.md Sec. 16): AWF-B/C/D/E only
+consume feedback at epoch boundaries, so ``core/adaptsim.py`` runs this
+round loop in epoch-bounded segments, re-snapshotting the weights between
+segments — bit-identical to the event engine's ``AdaptiveSource`` run.  AF
+alone keeps the event engine: its chunk sizes depend on live per-PE timing
+feedback at *every* claim, so no segment is timing-independent — the paper's
+own caveat in Sec. 4.  ``simulate_fast``/``simulate_sweep`` route it
+explicitly (a typed decision, not a swallowed-exception fallback).
 """
 
 from __future__ import annotations
@@ -41,6 +46,7 @@ import numpy as np
 
 from .schedule import build_schedule_cca, build_schedule_dca
 from .simulator import SimConfig, SimResult, _apply_scenario, normalize_scenario, simulate
+from .source import FeedbackScheduleError
 from .techniques import DLSParams, get_technique
 
 __all__ = ["simulate_fast", "simulate_sweep", "sweep_configs"]
@@ -241,9 +247,10 @@ def _chunk_table(technique: str, params: DLSParams, approach: str):
     """
     tech = get_technique(technique)
     if tech.requires_feedback:
-        raise ValueError(
+        raise FeedbackScheduleError(
             f"{technique} needs execution feedback; its chunk table cannot be "
-            "precomputed — use the event engine (simulator.simulate)"
+            "precomputed — use simulate_adaptive (AWF) or the event engine "
+            "(simulator.simulate)"
         )
     if approach == "dca" or tech.pattern == "fixed":
         # fixed-size techniques (static/ss/fsc) have R-independent recursions:
@@ -308,9 +315,10 @@ def simulate_fast(
     ``source``: a ChunkSource whose chunk table is execution-independent
     (``materialize()``-capable, e.g. StaticSource / non-feedback
     CriticalSectionSource) runs through the vectorized engine with the
-    timing model chosen by ``source.serialized``; adaptive sources fall back
-    to the event engine (their chunks depend on live timings — the same
-    reason AF keeps the event engine).
+    timing model chosen by ``source.serialized``; feedback-driven sources
+    (which raise the typed ``FeedbackScheduleError`` from ``materialize()``)
+    fall back to the event engine — any *other* ``ValueError`` from
+    ``materialize()`` is a real table-construction bug and propagates.
     """
     cfg = _apply_scenario(cfg, scenario=scenario, network=network, stacklevel=3)
     p = cfg.params
@@ -327,7 +335,7 @@ def simulate_fast(
             return simulate(cfg, costs, source=source)
         try:
             sched = mat()
-        except ValueError:
+        except FeedbackScheduleError:
             # materialize exists but the source is feedback-driven (e.g. a
             # CriticalSectionSource over AF/AWF): event engine, as promised
             return simulate(cfg, costs, source=source)
@@ -344,11 +352,21 @@ def simulate_fast(
             chunk_sizes=sched.sizes.astype(np.int64),
             chunk_pes=pes,
         )
+    tech = get_technique(cfg.technique)
     if cfg.approach == "adaptive":
-        if get_technique(cfg.technique).requires_feedback:
-            return simulate(cfg, costs)  # event engine + AdaptiveSource
+        if tech.requires_feedback:
+            if cfg.technique.startswith("awf_"):
+                # epoch-segmented vectorized engine (core/adaptsim.py)
+                from .adaptsim import simulate_adaptive
+
+                return simulate_adaptive(cfg, costs)
+            return simulate(cfg, costs)  # AF: event engine + AdaptiveSource
         # no feedback to adapt to: plain dca through the vectorized engine
         cfg = dataclasses.replace(cfg, approach="dca")
+    elif tech.requires_feedback:
+        # cca/dca: the paper's synchronized event paths — an explicitly
+        # routed decision (Sec. 4), not a swallowed-exception fallback
+        return simulate(cfg, costs)
     sizes, offsets = _chunk_table(cfg.technique, p, cfg.approach)
     exec_base = _exec_base(sizes, offsets, costs, p.N)
     t_free, busy, pes = _run_config(exec_base, **_cfg_engine_args(cfg))
@@ -438,9 +456,13 @@ def simulate_sweep(
 
     Per technique, every scenario shares the chunk tables (built once with
     the vectorized analytic builders); each scenario then replays through the
-    round-based engine.  Feedback techniques (AF) transparently fall back to
-    the event engine.  Returns a structured row list; each row carries the
-    engine that produced it.
+    round-based engine.  Feedback techniques sweep too — all seventeen rank:
+    under ``"cca"`` they run the paper's synchronized event path; under
+    ``"dca"``/``"adaptive"`` they promote to the adaptive epoch source
+    (mirroring ``resolve_mode``), AWF through the epoch-segmented vectorized
+    engine (core/adaptsim.py), AF through the event engine.  Returns a
+    structured row list; each row carries the engine that produced it and
+    the ``effective_approach`` actually simulated.
 
     ``perturbations``: a sequence of ``PerturbationScenario`` objects
     (select/scenarios.py) replaces the (delays_s x speed_scenarios) cross
@@ -482,10 +504,15 @@ def simulate_sweep(
         ]
     rows: List[dict] = []
 
-    def _row(technique, approach, delay, sname, engine, res):
+    def _row(technique, approach, delay, sname, engine, res, effective=None):
         return dict(
             technique=technique,
             approach=approach,
+            # what was actually simulated: non-feedback "adaptive" degenerates
+            # to dca; feedback "dca" promotes to the adaptive epoch source
+            # (mirroring resolve_mode) — rank_techniques consumers read this,
+            # never the requested label
+            effective_approach=effective if effective is not None else approach,
             delay_s=delay,
             delay_us=delay * 1e6,
             scenario=sname,
@@ -495,6 +522,22 @@ def simulate_sweep(
             cov_finish=float(res.cov_finish),
             load_imbalance=float(res.load_imbalance),
         )
+
+    def _feedback_cell(technique, a, cfg, costs):
+        """(engine, effective_approach, result) for a feedback-technique cell.
+
+        cca keeps the paper's synchronized event path; dca/adaptive promote
+        to the adaptive epoch source (DCA semantics via epoch snapshots),
+        exactly as ``resolve_mode`` does for a live executor — AWF runs the
+        epoch-segmented vectorized engine, AF the event engine."""
+        if a == "cca":
+            return "event", "cca", simulate(cfg, costs)
+        acfg = dataclasses.replace(cfg, approach="adaptive")
+        if technique.startswith("awf_"):
+            from .adaptsim import simulate_adaptive
+
+            return "analytic", "adaptive", simulate_adaptive(acfg, costs)
+        return "event", "adaptive", simulate(acfg, costs)
 
     if perturbations is not None:
         grid = [(a, scen) for a in approaches for scen in perturbations]
@@ -510,13 +553,15 @@ def simulate_sweep(
                 )
                 delay = float(scen.delay_calc_s)
                 if tech.requires_feedback:
-                    rows.append(_row(technique, a, delay, scen.name, "event",
-                                     simulate(cfg, costs)))
+                    engine, eff, res = _feedback_cell(technique, a, cfg, costs)
+                    rows.append(_row(technique, a, delay, scen.name, engine,
+                                     res, effective=eff))
                     continue
                 sizes = tables[a][0]
                 t_free, busy, pes = _run_config(execs[a], **_cfg_engine_args(cfg))
                 res = _analytic_result(sizes, t_free, busy, pes)
-                rows.append(_row(technique, a, delay, scen.name, "analytic", res))
+                rows.append(_row(technique, a, delay, scen.name, "analytic", res,
+                                 effective="dca" if a == "adaptive" else a))
         return rows
 
     speed_scenarios = speed_scenarios or {"homog": None}
@@ -542,15 +587,14 @@ def simulate_sweep(
                 dedicated_master=dedicated_master, scenario=scen,
             )
             if tech.requires_feedback:
-                # cca/dca keep the paper's synchronized event paths;
-                # "adaptive" drives the technique through AdaptiveSource
-                # (DCA semantics via epoch snapshots) — a fresh source per
-                # config, since sources are stateful.
-                rows.append(_row(technique, a, d, sname, "event",
-                                 simulate(cfg, costs)))
+                # a fresh adaptive run per config, since feedback is stateful
+                engine, eff, res = _feedback_cell(technique, a, cfg, costs)
+                rows.append(_row(technique, a, d, sname, engine, res,
+                                 effective=eff))
                 continue
             sizes = tables[a][0]
             t_free, busy, pes = _run_config(execs[a], **_cfg_engine_args(cfg))
             res = _analytic_result(sizes, t_free, busy, pes)
-            rows.append(_row(technique, a, d, sname, "analytic", res))
+            rows.append(_row(technique, a, d, sname, "analytic", res,
+                             effective="dca" if a == "adaptive" else a))
     return rows

@@ -80,6 +80,7 @@ __all__ = [
     "resolve_mode",
     "materialize",
     "validate_placement",
+    "FeedbackScheduleError",
     "ModeDowngradeWarning",
     "PlacementError",
     "PLACEMENTS",
@@ -123,6 +124,16 @@ def validate_placement(placement: str, allowed: Tuple[str, ...] = PLACEMENTS) ->
 class ModeDowngradeWarning(UserWarning):
     """Emitted when a requested calculation mode cannot run as asked and the
     effective mode differs (e.g. ``dca`` for a feedback technique)."""
+
+
+class FeedbackScheduleError(ValueError):
+    """A feedback-driven schedule was asked to do something only closed-form
+    schedules can (``materialize()``, chunk-table precomputation).
+
+    Typed so engine fallbacks can catch *exactly* this condition: the fast
+    engine reroutes a feedback source to the event engine on this error and
+    nothing else — a genuine table-construction bug (any other ValueError)
+    propagates instead of disappearing into a slow-but-plausible run."""
 
 
 class Chunk:
@@ -494,7 +505,7 @@ class CriticalSectionSource(ChunkSource):
         meaningful without feedback, where the sequence is claim-order
         independent — equals ``build_schedule_cca``)."""
         if self.tech.requires_feedback:
-            raise ValueError(
+            raise FeedbackScheduleError(
                 f"{self.technique} chunks depend on execution feedback; "
                 "its schedule cannot be materialized ahead of time"
             )
@@ -571,7 +582,9 @@ class AdaptiveSource(ChunkSource):
     def _build_snapshot(self, epoch: int) -> _EpochSnapshot:
         fb = self.feedback
         if self.is_awf:
-            return _EpochSnapshot(epoch=epoch, weights=fb.weights.copy())
+            snap = getattr(fb, "snapshot_weights", None)
+            weights = snap() if snap is not None else fb.weights.copy()
+            return _EpochSnapshot(epoch=epoch, weights=weights)
         return _EpochSnapshot(
             epoch=epoch,
             mu=np.array(fb.mu_per_pe, dtype=np.float64),

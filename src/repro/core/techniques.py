@@ -492,6 +492,41 @@ class AWFFeedback:
             self._push(pe, size, t)
             self.refresh_weights()
 
+    def record_deferred(self, pe: int, size: int, t_compute: float,
+                        t_overhead: float = 0.0):
+        """``record`` minus the C/E per-record ``refresh_weights``.
+
+        For consumers that read weights only through epoch-boundary
+        snapshots (``AdaptiveSource``, the vectorized engine in
+        core/adaptsim.py): ``refresh_weights`` is a pure function of the
+        accumulated (Σm, Σm·t/c) sums, so deferring it to the next
+        ``end_batch`` leaves every boundary weight bit-identical while
+        cutting the C/E record cost from O(P) to O(1)."""
+        t = t_compute + (t_overhead if self.include_overhead else 0.0)
+        if self.per_batch:
+            self._bat_iters[pe] += size
+            self._bat_time[pe] += t
+        else:
+            self._push(pe, size, t)
+
+    def record_batch(self, pes, sizes, t_compute, t_overhead=0.0):
+        """Vectorized ``record_deferred`` over one round of measurements.
+
+        ``pes`` must be distinct (a scheduling round assigns each PE at most
+        one chunk), which makes the fancy-indexed accumulations bit-identical
+        to per-record calls in any order: the m-weights are exact small
+        integers and each per-PE sum receives exactly one addend.
+        ``t_overhead`` may be a scalar or a per-record vector."""
+        t = t_compute + (t_overhead if self.include_overhead else 0.0)
+        if self.per_batch:
+            self._bat_iters[pes] += sizes
+            self._bat_time[pes] += t
+        else:
+            self._count[pes] += 1
+            m = self._count[pes].astype(np.float64)
+            self._sum_w[pes] += m
+            self._sum_wr[pes] += m * (t / np.maximum(sizes, 1.0))
+
     def _push(self, pe: int, size: float, t: float):
         self._count[pe] += 1
         m = float(self._count[pe])
@@ -517,6 +552,15 @@ class AWFFeedback:
         wap = np.where(measured, wap, np.nanmean(wap))
         inv = 1.0 / np.maximum(wap, 1e-30)
         self.weights = self.P * inv / inv.sum()
+
+    def snapshot_weights(self) -> np.ndarray:
+        """The epoch-publish contract (DESIGN.md Sec. 16): an immutable copy
+        of the current weights, the only view of feedback state that chunk
+        sizing may consume between epoch boundaries.  Both the live
+        ``AdaptiveSource`` and the vectorized engine (core/adaptsim.py) read
+        weights exclusively through this — C/E variants refresh ``weights``
+        on every record, so a raw reference would leak intra-epoch updates."""
+        return self.weights.copy()
 
 
 def _awf_rec(i, R, prev, p: DLSParams, fb=None):

@@ -10,9 +10,10 @@ the perturbation evolves.
 Three layers:
 
 * ``rank_techniques`` / ``select_technique`` — the offline selector: sweep
-  a candidate pool (default: all twelve DCA-capable techniques) x
-  {cca, dca} under one ``PerturbationScenario`` through the analytic engine
-  and rank by T_loop^par.
+  a candidate pool (default: all seventeen registered techniques) x
+  {cca, dca} under one ``PerturbationScenario`` and rank by T_loop^par —
+  closed forms through the analytic engine, AWF through the epoch-segmented
+  vectorized engine, AF through the event engine.
 * ``SelectingSource`` — a ``ChunkSource`` backend wiring the selector into
   a live loop: chunks start under a fine-grained warm-up technique while a
   ``ScenarioEstimator`` learns per-PE speeds and the calculation delay from
@@ -37,13 +38,14 @@ import numpy as np
 
 from repro.core.fastsim import simulate_sweep
 from repro.core.simulator import SimConfig, constant_costs, simulate
-from repro.core.source import Chunk, ChunkSource, StaticSource
+from repro.core.source import AdaptiveSource, Chunk, ChunkSource, StaticSource
 from repro.core.techniques import DLSParams, get_technique, technique_names
 
 from .scenarios import PerturbationScenario, ScenarioEstimator
 
 __all__ = [
     "SELECTABLE",
+    "UnrankableTechniqueError",
     "rank_techniques",
     "select_technique",
     "SelectingSource",
@@ -51,11 +53,32 @@ __all__ = [
 ]
 
 
-# The paper's twelve: every technique with a closed (DCA) form.  Feedback
-# techniques are excluded from the pool — their simulation needs the event
-# engine (too slow to re-run online) and their adaptation overlaps with the
-# selector's own.
-SELECTABLE = tuple(technique_names(dca_only=True))
+# All seventeen: the twelve closed (DCA) forms sweep through the analytic
+# engine, the AWF family through the epoch-segmented vectorized engine
+# (core/adaptsim.py), and AF through the event engine — every registered
+# technique is rankable, so the selector pool is the full registry.
+SELECTABLE = tuple(technique_names())
+
+
+class UnrankableTechniqueError(ValueError):
+    """A selector-pool entry that no sweep engine can simulate.
+
+    Rankability is a capability, not a name list: a technique ranks if it
+    has a closed (DCA) form — analytic engine — or consumes execution
+    feedback — adaptive epoch semantics (vectorized for AWF, event engine
+    for AF).  Only a custom registration with *neither* capability lands
+    here (no chunk rule a simulator could drive)."""
+
+
+def _check_rankable(techniques: Sequence[str]) -> None:
+    for t in techniques:
+        tech = get_technique(t)
+        if not (tech.dca_supported or tech.requires_feedback):
+            raise UnrankableTechniqueError(
+                f"{t} has neither a closed (DCA) form nor execution feedback; "
+                "no sweep engine can simulate it — give it a dca closed form "
+                "or mark it requires_feedback"
+            )
 
 
 def rank_techniques(
@@ -69,6 +92,7 @@ def rank_techniques(
 ) -> List[Dict]:
     """The ranked portfolio: simulate_sweep rows sorted by T_loop^par
     (ties broken by name so the ranking is deterministic)."""
+    _check_rankable(techniques)
     rows = simulate_sweep(
         params,
         costs,
@@ -79,6 +103,15 @@ def rank_techniques(
         calc_cost_s=calc_cost_s,
     )
     return sorted(rows, key=lambda r: (r["t_parallel"], r["technique"], r["approach"]))
+
+
+def _build_inner(technique: str, params: DLSParams) -> ChunkSource:
+    """Inner source for the current winner: feedback techniques run the
+    adaptive epoch source (the same DCA claim semantics the sweep that
+    ranked them simulated); closed forms use the precomputed static table."""
+    if get_technique(technique).requires_feedback:
+        return AdaptiveSource(technique, params)
+    return StaticSource.build(technique, params)
 
 
 def select_technique(
@@ -102,8 +135,10 @@ class SelectingSource(ChunkSource):
     ``ScenarioEstimator``; once every PE has reported and a re-selection
     boundary passes, the selector sweeps the pool over the *remaining*
     iterations under the estimated scenario and, if the winner differs from
-    the current technique, rebuilds the inner ``StaticSource`` over exactly
-    the un-assigned remainder — chunks keep tiling [0, N) structurally.
+    the current technique, rebuilds the inner source over exactly the
+    un-assigned remainder (a ``StaticSource`` table for closed forms, an
+    ``AdaptiveSource`` for feedback winners) — chunks keep tiling [0, N)
+    structurally.
 
     Re-selection boundaries are geometrically spaced (``reselect_every``
     claims, interval x ``backoff`` each time): the scenario estimate is
@@ -139,12 +174,7 @@ class SelectingSource(ChunkSource):
         calc_cost_s: float = 2e-7,
         window: int = 16,
     ):
-        for t in techniques:
-            if not get_technique(t).dca_supported:
-                raise ValueError(
-                    f"{t} needs execution feedback; the selector pool must be "
-                    "closed-form techniques (its sweep uses the analytic engine)"
-                )
+        _check_rankable(techniques)
         self.params = params
         self.costs = None if costs is None else np.asarray(costs, dtype=np.float64)
         if self.costs is not None and len(self.costs) < params.N:
@@ -174,7 +204,7 @@ class SelectingSource(ChunkSource):
         self._step = 0
         self._consumed = 0
         self._base = 0
-        self._inner = StaticSource.build(self.technique, params)
+        self._inner = _build_inner(self.technique, params)
 
     # -- selection ----------------------------------------------------------
 
@@ -217,7 +247,7 @@ class SelectingSource(ChunkSource):
                 return
             self.technique = best["technique"]
             self._base = self._consumed
-            self._inner = StaticSource.build(
+            self._inner = _build_inner(
                 self.technique, dataclasses.replace(self.params, N=remaining)
             )
 
@@ -233,7 +263,7 @@ class SelectingSource(ChunkSource):
             step = self._step
             self._step += 1
             lo, hi = self._base + c.lo, self._base + c.hi
-            self._consumed = hi  # StaticSource hands chunks in step order
+            self._consumed = hi  # both inner kinds hand chunks in lo order
             if self._step >= self._next_reselect and hi < self.params.N:
                 self._next_reselect = self._step + self._interval
                 self._interval = max(int(self._interval * self.backoff), 1)
@@ -242,6 +272,13 @@ class SelectingSource(ChunkSource):
 
     def report(self, chunk: Chunk, elapsed: float, overhead: float = 0.0) -> None:
         self.estimator.observe(chunk.worker, chunk.size, elapsed, overhead)
+        inner = self._inner
+        if getattr(inner, "feedback", None) is not None:
+            # an adaptive winner consumes execution feedback itself; its
+            # record reads only (worker, size), so the outer-coordinate
+            # chunk forwards as-is.  A report that lands after a swap feeds
+            # the fresh inner's estimator — harmless, like any late report.
+            inner.report(chunk, elapsed, overhead)
         if self._reselect_pending:
             with self._select_lock:  # one sweep per boundary
                 if not self._reselect_pending:
@@ -254,7 +291,7 @@ class SelectingSource(ChunkSource):
 
     def fast_forward(self, step: int, lp: int, prev_raw: float = 0.0) -> None:
         """Resume-after-restart re-seed (see ``CriticalSectionSource``): the
-        inner StaticSource is rebuilt over exactly the un-served remainder —
+        inner source is rebuilt over exactly the un-served remainder —
         the same structural move ``_reselect`` makes, so coverage stays
         tiling-exact.  Estimator state restarts cold and re-learns from
         subsequent reports (``prev_raw`` is ignored: the remainder rebuild
@@ -265,7 +302,7 @@ class SelectingSource(ChunkSource):
             self._base = int(lp)
             remaining = self.params.N - int(lp)
             if remaining > 0:
-                self._inner = StaticSource.build(
+                self._inner = _build_inner(
                     self.technique, dataclasses.replace(self.params, N=remaining)
                 )
             self._next_reselect = self._step + self._interval

@@ -383,7 +383,7 @@ def test_fastsim_accepts_sources():
     np.testing.assert_array_equal(ref.chunk_sizes, got.chunk_sizes)
     np.testing.assert_array_equal(ref.chunk_pes, got.chunk_pes)
     assert ref.t_parallel == got.t_parallel
-    # adaptive sources fall back to the event engine and still cover N
+    # AWF routes through the epoch-segmented vectorized engine and covers N
     cfg_ad = SimConfig(technique="awf_b", params=params, approach="adaptive")
     res = simulate_fast(cfg_ad, costs)
     assert int(res.chunk_sizes.sum()) == N
@@ -400,8 +400,11 @@ def test_sweep_adaptive_approach():
     )
     assert len(rows) == 2 * 2 * 2
     by = {(r["technique"], r["approach"], r["delay_s"]): r for r in rows}
-    assert by[("awf_b", "adaptive", 1e-4)]["engine"] == "event"
+    # AWF under "adaptive" runs the epoch-segmented vectorized engine
+    assert by[("awf_b", "adaptive", 1e-4)]["engine"] == "analytic"
+    assert by[("awf_b", "adaptive", 1e-4)]["effective_approach"] == "adaptive"
     assert by[("gss", "adaptive", 1e-4)]["engine"] == "analytic"
+    assert by[("gss", "adaptive", 1e-4)]["effective_approach"] == "dca"
 
 
 def test_adaptive_source_worker_ids_beyond_p():

@@ -359,6 +359,40 @@ def test_smoke_dca_beats_cca_under_calc_delay():
     assert t_dca < t_cca, f"dca {t_dca:.3f}s must beat cca {t_cca:.3f}s"
 
 
+def test_smoke_adaptive_awf_thread_matches_vectorized_engine():
+    """The thread executor's AWF chunk-size sequence against the
+    epoch-segmented vectorized engine (core/adaptsim, via simulate_fast's
+    adaptive routing) under a constant scenario.  Real threads measure real
+    wall-clock, so post-warm-up weights are not reproducible — two cells
+    isolate what *is* execution-independent:
+
+    * P=1 — one inverted rate normalized against itself is identically 1.0
+      whatever was measured, so the full chunk-size sequence must match the
+      vectorized engine's exactly;
+    * P=4 — weights stay 1.0 until the first epoch publish carries
+      measurements, pinning the first-epoch (P-chunk) prefix, plus exact
+      coverage and exactly-once over the whole run.
+    """
+    # full-sequence cell: P=1
+    scen1 = PerturbationScenario.constant(1)
+    ref1 = _sim(simulate_fast, "awf_b", "adaptive", scen1, n=600, p=1)
+    ex1, _ = _run_thread("awf_b", "adaptive", scen1, n=600, p=1)
+    _assert_exact_coverage(ex1, 600)
+    _assert_exactly_once(ex1)
+    assert np.array_equal(ex1.chunk_size_sequence(), ref1.chunk_sizes)
+
+    # warm-up-prefix cell: P=4
+    scen4 = PerturbationScenario.constant(P)
+    ref4 = _sim(simulate_fast, "awf_b", "adaptive", scen4)
+    ex4, _ = _run_thread("awf_b", "adaptive", scen4)
+    _assert_exact_coverage(ex4, N)
+    _assert_exactly_once(ex4)
+    seq = ex4.chunk_size_sequence()
+    assert np.array_equal(seq[:P], ref4.chunk_sizes[:P]), (
+        "warm-up epoch (weights still 1.0) must be execution-independent"
+    )
+
+
 def test_smoke_injected_slow_pe_claims_less():
     """A statically slowed PE must end up with fewer iterations under a
     self-scheduling technique — the injector visibly drives real claims."""

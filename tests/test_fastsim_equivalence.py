@@ -2,7 +2,9 @@
 reproduce the per-chunk heapq event engine (core/simulator) **bit-identically**
 — same chunk sizes, same PE placement, same per-PE finish/busy times, same
 T_loop^par — for every non-feedback technique, both CCA and DCA, homogeneous
-and slowed-down PE speeds, across the paper's delay scenarios."""
+and slowed-down PE speeds, across the paper's delay scenarios; and for the
+adaptive (feedback) family via the epoch-segmented engine (core/adaptsim),
+across the mixed-suite perturbation scenarios."""
 
 import numpy as np
 import pytest
@@ -10,7 +12,7 @@ import pytest
 from repro.core.fastsim import simulate_fast, simulate_sweep, sweep_configs
 from repro.core.schedule import build_schedule_cca, build_schedule_dca
 from repro.core.simulator import SimConfig, mandelbrot_costs, simulate
-from repro.core.techniques import DLSParams, TECHNIQUES
+from repro.core.techniques import ADAPTIVE_TECHNIQUES, DLSParams, TECHNIQUES
 
 NONFEEDBACK = sorted(n for n, t in TECHNIQUES.items() if not t.requires_feedback)
 
@@ -69,10 +71,51 @@ def test_engines_identical_constant_costs(approach):
                           (tech, approach, "const"))
 
 
-def test_af_requires_event_engine(costs):
-    cfg = SimConfig(technique="af", params=DLSParams(N=N, P=P), approach="dca")
-    with pytest.raises(ValueError):
-        simulate_fast(cfg, costs)
+@pytest.mark.parametrize("tech", ADAPTIVE_TECHNIQUES)
+def test_adaptive_family_engines_identical(tech, costs):
+    """All five feedback techniques, every mixed-suite scenario, under the
+    adaptive epoch semantics: AWF exercises the epoch-segmented vectorized
+    engine (core/adaptsim), AF pins the tightened event routing — both must
+    be bit-identical to the event engine."""
+    from repro.select.scenarios import mixed_suite
+
+    params = DLSParams(N=N, P=P)
+    horizon = float(np.sum(costs[:N]) / P * 2.0)
+    for scen in mixed_suite(P, horizon):
+        cfg = SimConfig(technique=tech, params=params, approach="adaptive",
+                        scenario=scen)
+        _assert_identical(simulate(cfg, costs), simulate_fast(cfg, costs),
+                          (tech, "adaptive", scen.name))
+
+
+@pytest.mark.parametrize("approach", ["cca", "dca"])
+@pytest.mark.parametrize("tech", ADAPTIVE_TECHNIQUES)
+def test_feedback_cca_dca_route_to_event_engine(tech, approach, costs):
+    """cca/dca feedback configs are an explicitly routed event-engine
+    decision — simulate_fast is a drop-in for all seventeen techniques,
+    never an error."""
+    cfg = SimConfig(technique=tech, params=DLSParams(N=N, P=P),
+                    approach=approach)
+    _assert_identical(simulate(cfg, costs), simulate_fast(cfg, costs),
+                      (tech, approach))
+
+
+def test_broken_materialize_propagates(costs):
+    """A genuine table-construction bug must not vanish into the event-engine
+    fallback: only the typed FeedbackScheduleError reroutes (the bug this
+    suite regression-pins: `except ValueError` used to swallow everything)."""
+    from repro.core.source import FeedbackScheduleError, StaticSource
+
+    params = DLSParams(N=N, P=P)
+
+    class BrokenSource(StaticSource):
+        def materialize(self):
+            raise ValueError("corrupt chunk table: offsets overlap")
+
+    cfg = SimConfig(technique="gss", params=params, approach="dca")
+    with pytest.raises(ValueError, match="corrupt chunk table"):
+        simulate_fast(cfg, costs, source=BrokenSource.build("gss", params))
+    assert not issubclass(ValueError, FeedbackScheduleError)  # the narrowing
 
 
 def test_fixed_pattern_cca_equals_dca_schedule():
@@ -86,24 +129,65 @@ def test_fixed_pattern_cca_equals_dca_schedule():
         np.testing.assert_array_equal(cca.offsets, dca.offsets)
 
 
+def _expected_engine(row):
+    tech = row["technique"]
+    if not TECHNIQUES[tech].requires_feedback:
+        return "analytic"
+    if row["effective_approach"] == "cca":
+        return "event"
+    return "analytic" if tech.startswith("awf_") else "event"
+
+
 def test_sweep_matches_per_config_loop(costs, slow_speeds):
     scenarios = {"homog": None, "slowed": slow_speeds}
     params = DLSParams(N=N, P=P)
-    techs = ["gss", "ss", "af"]
+    techs = ["gss", "ss", "af", "awf_c"]
     rows = simulate_sweep(params, costs, techs, delays_s=(0.0, 1e-4),
                           speed_scenarios=scenarios)
     assert len(rows) == len(techs) * 2 * 2 * 2
     for row in rows:
+        # the row's effective_approach names what was actually simulated —
+        # feedback x dca promotes to the adaptive epoch source
         cfg = SimConfig(
             technique=row["technique"], params=params,
-            approach=row["approach"], delay_calc_s=row["delay_s"],
+            approach=row["effective_approach"], delay_calc_s=row["delay_s"],
             pe_speeds=scenarios[row["scenario"]],
         )
         ref = simulate(cfg, costs)
-        expected_engine = "event" if row["technique"] == "af" else "analytic"
-        assert row["engine"] == expected_engine
+        assert row["engine"] == _expected_engine(row)
         assert row["t_parallel"] == ref.t_parallel, row
         assert row["num_chunks"] == ref.num_chunks, row
+
+
+def test_effective_approach_reported_on_mixed_pool(costs):
+    """Satellite pin: rows carry the approach actually simulated, never the
+    aliased request label (a gss 'adaptive' row was really dca; an awf 'dca'
+    row is really the adaptive epoch source)."""
+    params = DLSParams(N=N, P=P)
+    rows = simulate_sweep(params, costs, ["gss", "awf_b", "af"],
+                          approaches=("cca", "dca", "adaptive"),
+                          delays_s=(1e-5,))
+    eff = {(r["technique"], r["approach"]): r["effective_approach"]
+           for r in rows}
+    engine = {(r["technique"], r["approach"]): r["engine"] for r in rows}
+    assert eff[("gss", "cca")] == "cca"
+    assert eff[("gss", "dca")] == "dca"
+    assert eff[("gss", "adaptive")] == "dca"
+    for t in ("awf_b", "af"):
+        assert eff[(t, "cca")] == "cca"
+        assert eff[(t, "dca")] == "adaptive"
+        assert eff[(t, "adaptive")] == "adaptive"
+    assert engine[("awf_b", "dca")] == "analytic"
+    assert engine[("af", "dca")] == "event"
+    # the promoted rows really were adaptively simulated
+    for t in ("awf_b", "af"):
+        ref = simulate(SimConfig(technique=t, params=params,
+                                 approach="adaptive", delay_calc_s=1e-5),
+                       costs)
+        row = next(r for r in rows
+                   if r["technique"] == t and r["approach"] == "dca")
+        assert row["t_parallel"] == ref.t_parallel
+        assert row["num_chunks"] == ref.num_chunks
 
 
 def test_sweep_configs_grid_shape():

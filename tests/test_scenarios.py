@@ -188,18 +188,27 @@ def test_sweep_perturbations_matches_per_config(costs, horizon):
     suite = mixed_suite(P, horizon)
     params = DLSParams(N=N, P=P)
     rows = simulate_sweep(
-        params, costs, ["gss", "ss", "af"], approaches=("cca", "dca"),
+        params, costs, ["gss", "ss", "af", "awf_b"], approaches=("cca", "dca"),
         perturbations=suite,
     )
-    assert len(rows) == 3 * 2 * len(suite)
+    assert len(rows) == 4 * 2 * len(suite)
     by_name = {s.name: s for s in suite}
     for row in rows:
+        # effective_approach is what was actually simulated (feedback x dca
+        # promotes to the adaptive epoch source, mirroring resolve_mode)
         cfg = SimConfig(
-            technique=row["technique"], params=params, approach=row["approach"],
+            technique=row["technique"], params=params,
+            approach=row["effective_approach"],
             scenario=by_name[row["scenario"]],
         )
         ref = simulate(cfg, costs)
-        assert row["engine"] == ("event" if row["technique"] == "af" else "analytic")
+        if row["technique"] == "af":
+            expected = "event"
+        elif row["technique"] == "awf_b":
+            expected = "event" if row["effective_approach"] == "cca" else "analytic"
+        else:
+            expected = "analytic"
+        assert row["engine"] == expected
         assert row["t_parallel"] == ref.t_parallel, row
         assert row["num_chunks"] == ref.num_chunks, row
         assert row["delay_s"] == by_name[row["scenario"]].delay_calc_s

@@ -9,6 +9,7 @@ scenario and beats the *worst* by >= 20% in at least one (it does, by far —
 the committed snapshot is BENCH_simas_selection.json).
 """
 
+import dataclasses
 import time
 
 import numpy as np
@@ -47,29 +48,83 @@ def suite(costs):
 # ---------------------------------------------------------------------------
 
 
-def test_selectable_is_the_papers_twelve():
-    assert len(SELECTABLE) == 12
-    assert "af" not in SELECTABLE and "awf_b" not in SELECTABLE
+def test_selectable_is_all_seventeen():
+    assert len(SELECTABLE) == 17
+    assert "af" in SELECTABLE and "awf_b" in SELECTABLE
 
 
 def test_rank_techniques_full_portfolio(costs):
     params = DLSParams(N=N, P=P)
     scen = PerturbationScenario.constant(P, delay_calc_s=1e-4)
     rows = rank_techniques(params, costs, scen)
-    assert len(rows) == 12 * 2
+    assert len(rows) == 17 * 2
     t = [r["t_parallel"] for r in rows]
     assert t == sorted(t)
-    # every row came from the analytic engine (the affordability claim)
-    assert {r["engine"] for r in rows} == {"analytic"}
+    # closed forms and AWF rank through vectorized engines (the
+    # affordability claim); only AF needs the event engine
+    engines = {r["technique"]: set() for r in rows}
+    for r in rows:
+        engines[r["technique"]].add(r["engine"])
+    for tech, eng in engines.items():
+        if tech == "af":
+            assert eng == {"event"}
+        elif tech.startswith("awf_"):
+            assert eng == {"event", "analytic"}  # cca event, dca analytic
+        else:
+            assert eng == {"analytic"}
     best = select_technique(params, costs, scen)
     assert best == rows[0]
-    # at 100us the serialized master collapses: best must be a dca row
-    assert best["approach"] == "dca"
+    # at 100us the serialized master collapses: best must be effectively
+    # concurrent (dca, or its adaptive epoch promotion)
+    assert best["effective_approach"] in ("dca", "adaptive")
 
 
-def test_selector_pool_rejects_feedback_techniques():
-    with pytest.raises(ValueError):
-        SelectingSource(DLSParams(N=256, P=4), techniques=("gss", "af"))
+def test_selector_pool_accepts_feedback_techniques():
+    """The pool guard is capability detection now: feedback techniques rank
+    through the adaptive sweep engines, so a mixed pool constructs fine."""
+    src = SelectingSource(DLSParams(N=256, P=4), techniques=("gss", "af", "awf_b"))
+    assert src.technique == "ss"  # warm-up unchanged
+
+
+def test_selector_pool_rejects_unrankable_custom_technique():
+    from repro.core.techniques import TECHNIQUES, Technique
+    from repro.select.simas import UnrankableTechniqueError
+
+    base = TECHNIQUES["gss"]
+    # no closed form (dca_supported False) and no feedback: nothing can rank it
+    crippled = dataclasses.replace(base, closed_form=None,
+                                   requires_feedback=False)
+    TECHNIQUES["_test_unrankable"] = crippled
+    try:
+        with pytest.raises(UnrankableTechniqueError):
+            SelectingSource(DLSParams(N=256, P=4),
+                            techniques=("gss", "_test_unrankable"))
+        with pytest.raises(UnrankableTechniqueError):
+            rank_techniques(
+                DLSParams(N=256, P=4), mandelbrot_costs(256),
+                PerturbationScenario.constant(4),
+                techniques=("_test_unrankable",),
+            )
+    finally:
+        del TECHNIQUES["_test_unrankable"]
+
+
+def test_auto_selects_adaptive_under_assignment_overhead(costs, suite):
+    """Acceptance pin: with the full seventeen-technique portfolio, the
+    selector actually *uses* the adaptive family — in the assignment-overhead
+    regime (h = 100us per chunk) the bursty perturbed scenario ranks AF's
+    measured-weight schedule ahead of every closed form.  Before the sweep
+    covered feedback techniques this cell silently fell back to a closed
+    form."""
+    from repro.core.techniques import ADAPTIVE_TECHNIQUES, get_technique
+
+    params = DLSParams(N=N, P=P)
+    bursty = next(s for s in suite if s.name == "bursty")
+    best = select_technique(params, costs, bursty, h_assign_s=1e-4)
+    assert get_technique(best["technique"]).requires_feedback
+    assert best["technique"] in ADAPTIVE_TECHNIQUES
+    assert best["effective_approach"] == "adaptive"
+    assert best["engine"] in ("event", "analytic")
 
 
 # ---------------------------------------------------------------------------
